@@ -1,0 +1,59 @@
+//! Scenario: a 90%-low-resource fleet (the paper's motivating setting).
+//!
+//! Compares three deployments on the same data and client population:
+//!   1. High-Res-Only — exclude the 90% (system-induced bias)
+//!   2. HeteroFL      — give the 90% half-width sub-networks
+//!   3. ZOWarmUp      — warm up on the 10%, then seed-based ZO for all
+//! and reports accuracy + per-client communication budgets.
+//!
+//!     cargo run --release --example lowres_fleet
+
+use zowarmup::config::Scale;
+use zowarmup::data::synthetic::SynthKind;
+use zowarmup::exp::common::{run_method, Method};
+use zowarmup::metrics::MdTable;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::Default;
+    let mut cfg = scale.fed();
+    cfg.hi_frac = 0.1; // 10/90: most of the fleet is low-resource
+    let data = scale.data();
+
+    println!(
+        "fleet: {} clients, {} high-resource / {} low-resource, Dirichlet α={}",
+        cfg.clients,
+        cfg.hi_count(),
+        cfg.clients - cfg.hi_count(),
+        data.alpha
+    );
+    println!("dataset: synth10, {} train / {} test\n", data.n_train, data.n_test);
+
+    let mut t = MdTable::new(&[
+        "Deployment",
+        "final acc %",
+        "up-link MB (total)",
+        "down-link MB (total)",
+    ]);
+    for (method, label) in [
+        (Method::HighResOnly, "exclude low-res (status quo)"),
+        (Method::HeteroFl, "HeteroFL sub-networks"),
+        (Method::ZoWarmup, "ZOWarmUp (this paper)"),
+    ] {
+        let t0 = std::time::Instant::now();
+        let log = run_method(method, SynthKind::Synth10, &data, &cfg)?;
+        let (up, down) = log.total_bytes();
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", log.final_accuracy() * 100.0),
+            format!("{:.2}", up as f64 / 1e6),
+            format!("{:.2}", down as f64 / 1e6),
+        ]);
+        eprintln!("[{label}] done in {:.1}s", t0.elapsed().as_secs_f64());
+    }
+    println!("{}", t.render());
+    println!(
+        "Expected: ZOWarmUp recovers the accuracy the status quo leaves on the\n\
+         table by tapping the 90% fleet — at negligible extra up-link cost."
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT pipeline: lower every model entry point to HLO *text* + manifest.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized HloModuleProto)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the HLO text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage:
+  cd python && python -m compile.aot --out ../artifacts [--models cnn10,lm]
+
+Python runs ONLY here (and in pytest); the Rust binary is self-contained
+once artifacts/ exists.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from . import model as model_registry
+from .models import common
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True so
+    multi-output entry points become a single tuple the Rust side unpacks)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def manifest_entry(v) -> dict:
+    params = []
+    offset = 0
+    for s in v.specs:
+        params.append(
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "offset": offset,
+                "size": s.size,
+                "fan_in": s.fan_in,
+                "kind": s.kind,
+                "fill": s.fill,
+            }
+        )
+        offset += s.size
+    shp = v.input_shapes()
+    return {
+        "dim": v.dim,
+        "batch": v.batch,
+        "kind": v.kind,
+        "classes": v.classes,
+        "input_shape": list(shp["x"].shape),
+        "mask_shape": list(shp["mask"].shape),
+        "act": model_registry.act_summary(v),
+        "params": params,
+        "artifacts": {},
+    }
+
+
+def build(out_dir: str, names=None, verbose: bool = True) -> dict:
+    reg = model_registry.registry()
+    names = names or sorted(reg)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "models": {}}
+    for name in names:
+        v = reg[name]
+        entry = manifest_entry(v)
+        for ep_name, (fn, args) in v.entry_points().items():
+            t0 = time.time()
+            text = lower_entry(fn, args)
+            fname = f"{name}_{ep_name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry["artifacts"][ep_name] = fname
+            if verbose:
+                print(
+                    f"  {fname:32s} {len(text)/1e6:6.2f} MB  "
+                    f"({time.time()-t0:5.1f}s, d={v.dim})"
+                )
+        manifest["models"][name] = entry
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {out_dir}/manifest.json ({len(names)} models)")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--models", default=None, help="comma-separated subset")
+    args = p.parse_args()
+    names = args.models.split(",") if args.models else None
+    build(args.out, names)
+
+
+if __name__ == "__main__":
+    main()

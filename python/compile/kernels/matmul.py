@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernel: tiled matmul + bias + activation.
+
+This is the dense-layer workhorse for every model in the repo (CNN head,
+ViT attention/MLP projections, LM projections). It is written for the TPU
+execution model — blocks sized for VMEM residency, MXU-friendly tile
+multiples, a 3-d grid with the contraction dimension innermost and an f32
+accumulator carried in the output block — and executed here with
+``interpret=True`` because the CPU PJRT plugin cannot run Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation).
+
+VMEM footprint per grid step (f32): ``bm*bk + bk*bn + bm*bn`` words; the
+default (64, 128, 64) tile is ~48 KiB — far below the ~16 MiB VMEM budget,
+leaving room to double-buffer the HBM→VMEM streams.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block shape: multiples of the 8x128 TPU vreg tile; bm=bn=64 keeps
+# the MXU (128x128 systolic array) half-fed per step, which is the sweet
+# spot for the small-model shapes in this repo (EXPERIMENTS.md §Perf L1).
+DEFAULT_BLOCK = (64, 128, 64)
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, act, nk):
+    """One (bm, bn) output tile; grid dim 2 walks the K blocks.
+
+    The f32 output block doubles as the accumulator: initialized at the
+    first K step, bias+activation folded in at the last.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-style: accumulate in f32 whatever the input dtype.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        out = o_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        o_ref[...] = ref.apply_act(out, act)
+
+
+def _pad_to(a, target, axis):
+    pad = target - a.shape[axis]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _ceil_to(n, b):
+    return -(-n // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block"))
+def matmul_bias_act(x, w, b, act: str = "none", block=None):
+    """``act(x @ w + b)`` via the tiled Pallas kernel.
+
+    Shapes need not be multiples of the block: inputs are zero-padded up to
+    the grid (exact for matmul; bias/activation applied after contraction)
+    and the result is sliced back.
+
+    Args:
+      x: [M, K] input (f32 or bf16).
+      w: [K, N] weights.
+      b: [N] bias.
+      act: "none" | "relu" | "gelu".
+      block: optional (bm, bk, bn) override.
+    Returns:
+      [M, N] in x.dtype.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm, bk, bn = block or DEFAULT_BLOCK
+    # Clamp blocks to the (8/128-aligned) problem size so tiny layers do
+    # not inflate to a full default tile.
+    bm = min(bm, _ceil_to(m, 8))
+    bk = min(bk, _ceil_to(k, 128))
+    bn = min(bn, _ceil_to(n, 128))
+
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad_to(_pad_to(x, mp, 0), kp, 1)
+    wp = _pad_to(_pad_to(w, kp, 0), np_, 1)
+    bp = _pad_to(b, np_, 0)
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, act=act, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls.
+    )(xp, wp, bp)
+    return out[:m, :n].astype(x.dtype)
+
+
+def vmem_bytes(block=None, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (for EXPERIMENTS.md §Perf)."""
+    bm, bk, bn = block or DEFAULT_BLOCK
+    # x tile + w tile + f32 accumulator/output tile (+bias row).
+    return dtype_bytes * (bm * bk + bk * bn) + 4 * (bm * bn + bn)
+
+
+def mxu_utilization(m: int, k: int, n: int, block=None) -> float:
+    """Fraction of MXU-issue slots doing useful work for an [m,k]x[k,n]
+    problem under the padded tiling — the TPU efficiency estimate recorded
+    in EXPERIMENTS.md §Perf (interpret-mode wallclock is NOT a TPU proxy).
+    """
+    bm, bk, bn = block or DEFAULT_BLOCK
+    bm = min(bm, _ceil_to(m, 8))
+    bk = min(bk, _ceil_to(k, 128))
+    bn = min(bn, _ceil_to(n, 128))
+    padded = _ceil_to(m, bm) * _ceil_to(k, bk) * _ceil_to(n, bn)
+    return (m * k * n) / padded

@@ -1,0 +1,87 @@
+"""Layer-1 Pallas kernel: fused Rademacher perturbation (the ZO hot spot).
+
+MeZO-style zeroth-order optimization never materializes the perturbation
+vector z: it is regenerated from a seed wherever needed. The compute shape
+is ``w' = w + c * sign(bits)`` over the full flat parameter vector — a
+purely memory-bound streaming op. On TPU the roofline is HBM bandwidth, so
+the kernel fuses the bit→sign map and the axpy into a single pass over
+``w`` (one read + one write of d words, plus one read of d bit-words),
+tiled through VMEM in 1-d blocks. Executed with ``interpret=True`` here
+(CPU PJRT cannot run Mosaic custom-calls).
+
+The random bits are produced by jax.random (threefry) *outside* the kernel
+— in the AOT graph they derive from the scalar round seed, so the artifact
+input is still just (params, seed, coeff), matching the paper's
+seed-only communication protocol.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 1-d block: one vreg-aligned stripe; 64k f32 = 256 KiB/stream in VMEM.
+DEFAULT_BLOCK = 65536
+
+
+def _kernel(w_ref, bits_ref, c_ref, o_ref):
+    sign = 1.0 - 2.0 * (bits_ref[...] & jnp.uint32(1)).astype(jnp.float32)
+    o_ref[...] = w_ref[...] + c_ref[0] * sign
+
+
+def _ceil_to(n, b):
+    return -(-n // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def rademacher_axpy(w, bits, coeff, block: int = DEFAULT_BLOCK):
+    """``w + coeff * rademacher(bits)`` elementwise over a flat vector.
+
+    Args:
+      w: [D] f32 parameters.
+      bits: [D] uint32 random bits (low bit consumed).
+      coeff: scalar f32, e.g. +ε·τ or −2·ε·τ for the two SPSA sides.
+      block: 1-d tile length.
+    Returns:
+      [D] f32 perturbed parameters.
+    """
+    (d,) = w.shape
+    assert bits.shape == (d,), f"bits shape {bits.shape} != ({d},)"
+    b = min(block, _ceil_to(d, 128))
+    dp = _ceil_to(d, b)
+    wp = jnp.pad(w, (0, dp - d))
+    bitsp = jnp.pad(bits, (0, dp - d))
+    c = jnp.reshape(jnp.asarray(coeff, jnp.float32), (1,))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(dp // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=True,
+    )(wp, bitsp, c)
+    return out[:d]
+
+
+def perturb_from_seed(w, seed, coeff, block: int = DEFAULT_BLOCK):
+    """Seed → threefry bits → fused Rademacher axpy.
+
+    ``seed`` may be a traced int32 scalar, so this composes into the AOT
+    ZO-delta artifact where the seed is a runtime input from the Rust
+    coordinator.
+    """
+    key = jax.random.PRNGKey(seed)
+    bits = jax.random.bits(key, shape=w.shape, dtype=jnp.uint32)
+    return rademacher_axpy(w, bits, coeff, block=block)
+
+
+def hbm_traffic_bytes(d: int) -> int:
+    """Bytes moved per perturbation on TPU (roofline model for §Perf):
+    read w (4d) + read bits (4d) + write w' (4d)."""
+    return 12 * d

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (same-math) reference here;
+pytest compares kernel output against these under shape/dtype sweeps
+(hypothesis) at build time. The oracles are also what the L2 models would
+use if Pallas were unavailable, so they double as documentation of the
+kernel semantics.
+"""
+
+import jax.numpy as jnp
+
+
+def apply_act(x, act: str):
+    """Activation used by both kernel and reference (keep in sync)."""
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "gelu":
+        # tanh-approximation GELU, matching the kernel exactly.
+        c = jnp.asarray(0.7978845608028654, x.dtype)  # sqrt(2/pi)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+    raise ValueError(f"unknown act {act!r}")
+
+
+def matmul_bias_act(x, w, b, act: str = "none"):
+    """Reference for kernels.matmul.matmul_bias_act.
+
+    Computes ``act(x @ w + b)`` with f32 accumulation regardless of input
+    dtype, mirroring the kernel's MXU-style accumulator.
+
+    Args:
+      x: [M, K] input.
+      w: [K, N] weights.
+      b: [N] bias (may be zeros).
+      act: one of "none", "relu", "gelu".
+    Returns:
+      [M, N] in x.dtype.
+    """
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    acc = acc + b.astype(jnp.float32)[None, :]
+    acc = apply_act(acc, "none" if act == "none" else act)
+    return acc.astype(x.dtype)
+
+
+def rademacher_axpy(w, bits, coeff):
+    """Reference for kernels.perturb.rademacher_axpy.
+
+    ``w + coeff * sign(bits)`` where ``sign(bits) = 1 - 2*(bits & 1)`` maps
+    uniform random u32 bits to a Rademacher(+1/-1) variate per element.
+
+    Args:
+      w: [D] f32 parameter vector.
+      bits: [D] uint32 random bits.
+      coeff: scalar f32 (typically ±ε·τ).
+    Returns:
+      [D] f32 perturbed vector.
+    """
+    sign = 1.0 - 2.0 * (bits & jnp.uint32(1)).astype(jnp.float32)
+    return w + jnp.asarray(coeff, jnp.float32) * sign

@@ -1,0 +1,98 @@
+"""Layer-2 registry: named model variants and their AOT artifact recipes.
+
+Each variant binds an architecture config to fixed AOT shapes (batch size,
+input shape) and exposes the three lowerable entry points:
+
+  fwd_loss(flat, x, y, mask)          -> (loss_sum, correct)      [Pallas path]
+  sgd_step(flat, x, y, mask, lr)      -> (flat', loss_sum)        [oracle path]
+  zo_delta(flat, seed, coeff, x, y, mask) -> (delta_l, mask_sum)  [Pallas path]
+
+The Rust coordinator selects variants by name via artifacts/manifest.json.
+"""
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .models import cnn, common, lm, vit
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """A model architecture pinned to concrete AOT shapes."""
+
+    name: str
+    kind: str  # "image" | "lm"
+    cfg: object
+    module: object
+    batch: int
+
+    @property
+    def specs(self):
+        return self.module.specs(self.cfg)
+
+    @property
+    def dim(self) -> int:
+        return common.total_dim(self.specs)
+
+    @property
+    def classes(self) -> int:
+        return self.cfg.classes if self.kind == "image" else self.cfg.vocab
+
+    def apply_fn(self) -> Callable:
+        return functools.partial(self.module.apply, self.cfg)
+
+    def input_shapes(self) -> Dict[str, Tuple]:
+        """ShapeDtypeStructs for (x, y, mask) at the AOT batch size."""
+        b = self.batch
+        f32, i32 = jnp.float32, jnp.int32
+        if self.kind == "image":
+            c = self.cfg
+            return {
+                "x": jax.ShapeDtypeStruct((b, c.img, c.img, c.channels), f32),
+                "y": jax.ShapeDtypeStruct((b,), i32),
+                "mask": jax.ShapeDtypeStruct((b,), f32),
+            }
+        c = self.cfg
+        return {
+            "x": jax.ShapeDtypeStruct((b, c.seq), i32),
+            "y": jax.ShapeDtypeStruct((b, c.seq), i32),
+            "mask": jax.ShapeDtypeStruct((b, c.seq), f32),
+        }
+
+    def entry_points(self) -> Dict[str, Tuple[Callable, Tuple]]:
+        """name -> (callable, example_args) for jax.jit(...).lower()."""
+        ap = self.apply_fn()
+        shp = self.input_shapes()
+        flat = jax.ShapeDtypeStruct((self.dim,), jnp.float32)
+        scalar = jax.ShapeDtypeStruct((), jnp.float32)
+        seed = jax.ShapeDtypeStruct((), jnp.int32)
+        x, y, mask = shp["x"], shp["y"], shp["mask"]
+        return {
+            "fwd_loss": (common.make_fwd_loss(ap), (flat, x, y, mask)),
+            "sgd_step": (common.make_sgd_step(ap), (flat, x, y, mask, scalar)),
+            "zo_delta": (common.make_zo_delta(ap), (flat, seed, scalar, x, y, mask)),
+        }
+
+
+def registry() -> Dict[str, Variant]:
+    """All AOT-built variants. cnn*_half are the HeteroFL sub-networks."""
+    out = {}
+
+    def add(v):
+        out[v.name] = v
+
+    add(Variant("cnn10", "image", cnn.Config(width=16, classes=10), cnn, 64))
+    add(Variant("cnn10_half", "image", cnn.Config(width=8, classes=10), cnn, 64))
+    add(Variant("cnn100", "image", cnn.Config(width=16, classes=100), cnn, 64))
+    add(Variant("cnn100_half", "image", cnn.Config(width=8, classes=100), cnn, 64))
+    add(Variant("vit10", "image", vit.Config(classes=10), vit, 64))
+    add(Variant("lm", "lm", lm.Config(), lm, 16))
+    return out
+
+
+def act_summary(v: Variant) -> dict:
+    return common.checkerboard_sizes(v.module.act_sizes(v.cfg))

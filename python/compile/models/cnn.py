@@ -1,0 +1,116 @@
+"""Mini-ResNet for 32x32x3 images (the paper's ResNet18 stand-in).
+
+Three stages of two basic residual blocks each (GroupNorm, stateless), a
+global-average-pool and a Pallas-dense head. Width is configurable: the
+default (w=16, ~230k params) is the full HeteroFL network, w=8 the
+half-width sub-network (DESIGN.md §2 scale substitution — the paper's
+11.2M ResNet18 is not tractable for 500 rounds x 50 clients on one CPU
+core; Table 1's cost model is additionally evaluated at the true ResNet18
+sizes).
+"""
+
+import dataclasses
+from typing import List
+
+from . import common
+from .common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    width: int = 16
+    classes: int = 10
+    groups: int = 8
+    img: int = 32
+    channels: int = 3
+
+    @property
+    def stage_widths(self):
+        return (self.width, 2 * self.width, 4 * self.width)
+
+
+def _gn_specs(prefix: str, ch: int) -> List[ParamSpec]:
+    return [
+        ParamSpec(f"{prefix}.gn_scale", (ch,), 0, "norm_scale", fill=1.0),
+        ParamSpec(f"{prefix}.gn_bias", (ch,), 0, "norm_bias", fill=0.0),
+    ]
+
+
+def _block_specs(prefix: str, cin: int, cout: int, downsample: bool) -> List[ParamSpec]:
+    specs = [
+        ParamSpec(f"{prefix}.conv1", (3, 3, cin, cout), 9 * cin, "conv"),
+        *_gn_specs(f"{prefix}.n1", cout),
+        ParamSpec(f"{prefix}.conv2", (3, 3, cout, cout), 9 * cout, "conv"),
+        *_gn_specs(f"{prefix}.n2", cout),
+    ]
+    if downsample:
+        specs += [
+            ParamSpec(f"{prefix}.short", (1, 1, cin, cout), cin, "conv"),
+            *_gn_specs(f"{prefix}.ns", cout),
+        ]
+    return specs
+
+
+def specs(cfg: Config) -> List[ParamSpec]:
+    """Flat-vector layout; order must match ``apply`` exactly."""
+    w1, w2, w3 = cfg.stage_widths
+    out = [
+        ParamSpec("stem.conv", (3, 3, cfg.channels, w1), 9 * cfg.channels, "conv"),
+        *_gn_specs("stem.n", w1),
+    ]
+    chains = [(w1, w1, False), (w1, w2, True), (w2, w3, True)]
+    for si, (cin, cout, down) in enumerate(chains):
+        out += _block_specs(f"s{si}.b0", cin, cout, down)
+        out += _block_specs(f"s{si}.b1", cout, cout, False)
+    out += [
+        ParamSpec("head.w", (w3, cfg.classes), w3, "dense"),
+        ParamSpec("head.b", (cfg.classes,), 0, "bias"),
+    ]
+    return out
+
+
+def _block(r, prefix, x, cin, cout, downsample, groups, stride):
+    h = common.conv3x3(x, r.take(f"{prefix}.conv1"), stride=stride)
+    h = common.group_norm(h, r.take(f"{prefix}.n1.gn_scale"), r.take(f"{prefix}.n1.gn_bias"), groups)
+    h = common.kref.apply_act(h, "relu")
+    h = common.conv3x3(h, r.take(f"{prefix}.conv2"))
+    h = common.group_norm(h, r.take(f"{prefix}.n2.gn_scale"), r.take(f"{prefix}.n2.gn_bias"), groups)
+    if downsample:
+        s = common.conv1x1(x, r.take(f"{prefix}.short"), stride=stride)
+        s = common.group_norm(s, r.take(f"{prefix}.ns.gn_scale"), r.take(f"{prefix}.ns.gn_bias"), groups)
+    else:
+        s = x
+    return common.kref.apply_act(h + s, "relu")
+
+
+def apply(cfg: Config, flat, x, y, mask, use_kernel: bool = True):
+    """Forward pass. x: [B, 32, 32, 3] f32; returns (logits, y, mask)."""
+    r = common.ParamReader(flat, specs(cfg))
+    w1, w2, w3 = cfg.stage_widths
+    h = common.conv3x3(x, r.take("stem.conv"))
+    h = common.group_norm(h, r.take("stem.n.gn_scale"), r.take("stem.n.gn_bias"), cfg.groups)
+    h = common.kref.apply_act(h, "relu")
+    chains = [(w1, w1, False, 1), (w1, w2, True, 2), (w2, w3, True, 2)]
+    for si, (cin, cout, down, stride) in enumerate(chains):
+        h = _block(r, f"s{si}.b0", h, cin, cout, down, cfg.groups, stride)
+        h = _block(r, f"s{si}.b1", h, cout, cout, False, cfg.groups, 1)
+    pooled = h.mean(axis=(1, 2))  # global average pool -> [B, 4w]
+    logits = common.dense(
+        pooled, r.take("head.w"), r.take("head.b"), act="none", use_kernel=use_kernel
+    )
+    r.done()
+    return logits, y, mask
+
+
+def act_sizes(cfg: Config) -> List[int]:
+    """Per-example activation element counts, per stored layer output —
+    feeds the eq. 4/5 memory model (comm/cost.rs)."""
+    w1, w2, w3 = cfg.stage_widths
+    i = cfg.img
+    sizes = [i * i * w1]  # stem
+    for (wch, scale) in ((w1, 1), (w2, 2), (w3, 4)):
+        hw = (i // scale) ** 2
+        # two blocks x (conv1, conv2, sum) outputs
+        sizes += [hw * wch] * 6
+    sizes += [w3, cfg.classes]
+    return sizes

@@ -1,0 +1,216 @@
+"""Shared Layer-2 model machinery: flat parameter vectors, layers, losses.
+
+Every model in this repo is a pure function over a single flat ``f32[d]``
+parameter vector. The flat layout (offsets per named tensor) is exported in
+``artifacts/manifest.json`` so the Rust coordinator can initialize, slice
+(HeteroFL) and perturb (SPSA) parameters without ever seeing Python.
+
+``use_kernel`` selects the Layer-1 Pallas kernel for dense layers on
+forward-only graphs (ZO delta, fwd_loss/eval — the paper's low-resource
+path never backprops, which is its whole point) and the identical-math
+jnp oracle on differentiable graphs (warm-phase sgd_step): interpret-mode
+``pallas_call`` has no autodiff rule. pytest asserts the two paths agree.
+"""
+
+import dataclasses
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import matmul as kmatmul
+from ..kernels import perturb as kperturb
+from ..kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One named tensor inside the flat parameter vector."""
+
+    name: str
+    shape: tuple
+    fan_in: int  # He/Glorot fan-in for Rust-side init (0 => init to `fill`)
+    kind: str  # "conv" | "dense" | "bias" | "norm_scale" | "norm_bias" | "embed" | "pos"
+    fill: float = 0.0  # constant init when fan_in == 0
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+class ParamReader:
+    """Sequential reader over the flat vector following a spec list."""
+
+    def __init__(self, flat, specs: Sequence[ParamSpec]):
+        self.flat = flat
+        self.specs = list(specs)
+        self.offset = 0
+        self.index = 0
+
+    def take(self, name: str):
+        spec = self.specs[self.index]
+        assert spec.name == name, f"spec order mismatch: {spec.name} != {name}"
+        t = jax.lax.dynamic_slice(self.flat, (self.offset,), (spec.size,))
+        t = t.reshape(spec.shape)
+        self.offset += spec.size
+        self.index += 1
+        return t
+
+    def done(self):
+        assert self.index == len(self.specs), (
+            f"consumed {self.index}/{len(self.specs)} params"
+        )
+        assert self.offset == self.flat.shape[0], (
+            f"offset {self.offset} != dim {self.flat.shape[0]}"
+        )
+
+
+def total_dim(specs: Sequence[ParamSpec]) -> int:
+    return sum(s.size for s in specs)
+
+
+def init_flat(specs: Sequence[ParamSpec], seed: int) -> np.ndarray:
+    """He-style init of the flat vector (mirrors rust/src/model/init.rs)."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for s in specs:
+        if s.fan_in == 0:
+            parts.append(np.full(s.size, s.fill, np.float32))
+        else:
+            std = np.sqrt(2.0 / s.fan_in)
+            parts.append(rng.normal(0.0, std, s.size).astype(np.float32))
+    return np.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def dense(x, w, b, act: str = "none", use_kernel: bool = True):
+    """act(x @ w + b); Pallas kernel or oracle depending on the graph kind."""
+    fn = kmatmul.matmul_bias_act if use_kernel else kref.matmul_bias_act
+    return fn(x, w, b, act=act)
+
+
+def conv3x3(x, w, stride: int = 1):
+    """NHWC 3x3 same-padding convolution. w: [kh, kw, cin, cout]."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv1x1(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def group_norm(x, scale, bias, groups: int, eps: float = 1e-5):
+    """GroupNorm over NHWC (stateless — no running stats, federated-friendly;
+    the paper uses GN for FedAdam runs)."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# Loss heads
+# ---------------------------------------------------------------------------
+
+
+def ce_loss_sum(logits, y, mask):
+    """Masked cross-entropy sum + masked correct-prediction count.
+
+    logits: [N, C] f32; y: [N] i32; mask: [N] f32 (0 for padding).
+    Sum (not mean) so the Rust side can chunk a client's full dataset
+    through a fixed-batch artifact and accumulate exactly (§3.1 single
+    full-batch ZO step).
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    loss = (lse - picked) * mask
+    correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32) * mask
+    return loss.sum(), correct.sum()
+
+
+# ---------------------------------------------------------------------------
+# Artifact factories (the functions that get AOT-lowered)
+# ---------------------------------------------------------------------------
+
+
+def make_fwd_loss(apply_fn: Callable):
+    """(flat, x, y, mask) -> (loss_sum, correct). Forward-only: Pallas path."""
+
+    def fwd_loss(flat, x, y, mask):
+        logits, y2, mask2 = apply_fn(flat, x, y, mask, use_kernel=True)
+        return ce_loss_sum(logits, y2, mask2)
+
+    return fwd_loss
+
+
+def make_sgd_step(apply_fn: Callable):
+    """(flat, x, y, mask, lr) -> (flat', loss_sum). Differentiable: oracle path."""
+
+    def mean_loss(flat, x, y, mask):
+        logits, y2, mask2 = apply_fn(flat, x, y, mask, use_kernel=False)
+        loss_sum, _ = ce_loss_sum(logits, y2, mask2)
+        return loss_sum / jnp.maximum(mask2.sum(), 1.0), loss_sum
+
+    def sgd_step(flat, x, y, mask, lr):
+        (_, loss_sum), grad = jax.value_and_grad(mean_loss, has_aux=True)(
+            flat, x, y, mask
+        )
+        return flat - lr * grad, loss_sum
+
+    return sgd_step
+
+
+def make_zo_delta(apply_fn: Callable):
+    """(flat, seed, coeff, x, y, mask) -> (delta_l_sum, mask_sum).
+
+    The graph-mode SPSA numerator: ΔL = L(w+cz) − L(w−cz) with
+    z = Rademacher(seed) regenerated in-graph (threefry) and applied by the
+    fused Pallas perturb kernel. coeff = ε·τ. The artifact input is only the
+    scalar seed — the d-length z never leaves the graph, matching the
+    paper's seed-only protocol.
+    """
+
+    def zo_delta(flat, seed, coeff, x, y, mask):
+        key = jax.random.PRNGKey(seed)
+        bits = jax.random.bits(key, shape=flat.shape, dtype=jnp.uint32)
+        w_plus = kperturb.rademacher_axpy(flat, bits, coeff)
+        w_minus = kperturb.rademacher_axpy(flat, bits, -coeff)
+        lp, _ = ce_loss_sum(*apply_fn(w_plus, x, y, mask, use_kernel=True))
+        lm, _ = ce_loss_sum(*apply_fn(w_minus, x, y, mask, use_kernel=True))
+        return lp - lm, mask.sum()
+
+    return zo_delta
+
+
+def act_elems_conv(b: int, h: int, w: int, c: int) -> int:
+    return b * h * w * c
+
+
+def checkerboard_sizes(sizes: List[int]) -> dict:
+    """Activation-memory summary for the eq. 4/5 cost model (per batch el.)."""
+    return {"sum": int(sum(sizes)), "max": int(max(sizes)) if sizes else 0}

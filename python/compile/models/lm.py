@@ -1,0 +1,111 @@
+"""Tiny decoder-only language model (Figure 5 stand-in).
+
+The paper's Fig. 5 compares FedKSeed with 200 local ZO steps against the
+1-step modification on DataJuicer-1.3B / Natural-Instructions. That claim
+is about optimizer dynamics at equal data, so we reproduce it with a
+byte-vocabulary causal transformer on a synthetic Markov-grammar corpus
+(DESIGN.md §2). Shares the attention/dense machinery with vit.py.
+"""
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+
+from . import common, vit
+from .common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab: int = 64
+    dim: int = 64
+    depth: int = 2
+    heads: int = 4
+    mlp: int = 128
+    seq: int = 64
+
+
+def _ln_specs(prefix: str, d: int) -> List[ParamSpec]:
+    return [
+        ParamSpec(f"{prefix}.ln_scale", (d,), 0, "norm_scale", fill=1.0),
+        ParamSpec(f"{prefix}.ln_bias", (d,), 0, "norm_bias", fill=0.0),
+    ]
+
+
+def specs(cfg: Config) -> List[ParamSpec]:
+    d = cfg.dim
+    out = [
+        ParamSpec("embed", (cfg.vocab, d), d, "embed"),
+        ParamSpec("pos", (cfg.seq, d), d, "pos"),
+    ]
+    for i in range(cfg.depth):
+        p = f"blk{i}"
+        out += [
+            *_ln_specs(f"{p}.ln1", d),
+            ParamSpec(f"{p}.qkv.w", (d, 3 * d), d, "dense"),
+            ParamSpec(f"{p}.qkv.b", (3 * d,), 0, "bias"),
+            ParamSpec(f"{p}.proj.w", (d, d), d, "dense"),
+            ParamSpec(f"{p}.proj.b", (d,), 0, "bias"),
+            *_ln_specs(f"{p}.ln2", d),
+            ParamSpec(f"{p}.fc1.w", (d, cfg.mlp), d, "dense"),
+            ParamSpec(f"{p}.fc1.b", (cfg.mlp,), 0, "bias"),
+            ParamSpec(f"{p}.fc2.w", (cfg.mlp, d), cfg.mlp, "dense"),
+            ParamSpec(f"{p}.fc2.b", (d,), 0, "bias"),
+        ]
+    out += [
+        *_ln_specs("final", d),
+        ParamSpec("head.w", (d, cfg.vocab), d, "dense"),
+        ParamSpec("head.b", (cfg.vocab,), 0, "bias"),
+    ]
+    return out
+
+
+def _block(r, p, h, cfg, use_kernel):
+    d = cfg.dim
+    b, t, _ = h.shape
+    x1 = common.layer_norm(h, r.take(f"{p}.ln1.ln_scale"), r.take(f"{p}.ln1.ln_bias"))
+    h = h + vit.attention(
+        x1,
+        r.take(f"{p}.qkv.w"),
+        r.take(f"{p}.qkv.b"),
+        r.take(f"{p}.proj.w"),
+        r.take(f"{p}.proj.b"),
+        cfg.heads,
+        use_kernel,
+        causal=True,
+    )
+    x2 = common.layer_norm(h, r.take(f"{p}.ln2.ln_scale"), r.take(f"{p}.ln2.ln_bias"))
+    m = common.dense(x2.reshape(b * t, d), r.take(f"{p}.fc1.w"), r.take(f"{p}.fc1.b"), act="gelu", use_kernel=use_kernel)
+    m = common.dense(m, r.take(f"{p}.fc2.w"), r.take(f"{p}.fc2.b"), use_kernel=use_kernel)
+    return h + m.reshape(b, t, d)
+
+
+def apply(cfg: Config, flat, x, y, mask, use_kernel: bool = True):
+    """Next-token LM.
+
+    x: [B, T] int32 tokens; y: [B, T] int32 targets (x shifted left, with
+    padding positions arbitrary); mask: [B, T] f32. Returns flattened
+    ([B*T, vocab] logits, [B*T] y, [B*T] mask) for the shared CE head.
+    """
+    r = common.ParamReader(flat, specs(cfg))
+    b, t = x.shape
+    embed = r.take("embed")
+    h = jnp.take(embed, x, axis=0) + r.take("pos")[None]
+    for i in range(cfg.depth):
+        h = _block(r, f"blk{i}", h, cfg, use_kernel)
+    h = common.layer_norm(h, r.take("final.ln_scale"), r.take("final.ln_bias"))
+    logits = common.dense(
+        h.reshape(b * t, cfg.dim), r.take("head.w"), r.take("head.b"), use_kernel=use_kernel
+    )
+    r.done()
+    return logits, y.reshape(b * t), mask.reshape(b * t)
+
+
+def act_sizes(cfg: Config) -> List[int]:
+    t, d = cfg.seq, cfg.dim
+    sizes = [t * d]
+    for _ in range(cfg.depth):
+        sizes += [t * 3 * d, cfg.heads * t * t, t * d, t * cfg.mlp, t * d]
+    sizes += [t * cfg.vocab]
+    return sizes

@@ -1,0 +1,134 @@
+"""ViT-tiny for 32x32x3 images (the paper's ViT-B/16 stand-in, Table 5).
+
+Patch-4 embedding, learned positional embeddings, pre-LN transformer
+blocks with mean-pool head. All projections route through the Layer-1
+Pallas matmul kernel on forward-only graphs.
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    dim: int = 64
+    depth: int = 4
+    heads: int = 4
+    mlp: int = 128
+    patch: int = 4
+    classes: int = 10
+    img: int = 32
+    channels: int = 3
+
+    @property
+    def tokens(self) -> int:
+        return (self.img // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+
+def _ln_specs(prefix: str, d: int) -> List[ParamSpec]:
+    return [
+        ParamSpec(f"{prefix}.ln_scale", (d,), 0, "norm_scale", fill=1.0),
+        ParamSpec(f"{prefix}.ln_bias", (d,), 0, "norm_bias", fill=0.0),
+    ]
+
+
+def specs(cfg: Config) -> List[ParamSpec]:
+    d = cfg.dim
+    out = [
+        ParamSpec("embed.w", (cfg.patch_dim, d), cfg.patch_dim, "dense"),
+        ParamSpec("embed.b", (d,), 0, "bias"),
+        ParamSpec("pos", (cfg.tokens, d), d, "pos"),
+    ]
+    for i in range(cfg.depth):
+        p = f"blk{i}"
+        out += [
+            *_ln_specs(f"{p}.ln1", d),
+            ParamSpec(f"{p}.qkv.w", (d, 3 * d), d, "dense"),
+            ParamSpec(f"{p}.qkv.b", (3 * d,), 0, "bias"),
+            ParamSpec(f"{p}.proj.w", (d, d), d, "dense"),
+            ParamSpec(f"{p}.proj.b", (d,), 0, "bias"),
+            *_ln_specs(f"{p}.ln2", d),
+            ParamSpec(f"{p}.fc1.w", (d, cfg.mlp), d, "dense"),
+            ParamSpec(f"{p}.fc1.b", (cfg.mlp,), 0, "bias"),
+            ParamSpec(f"{p}.fc2.w", (cfg.mlp, d), cfg.mlp, "dense"),
+            ParamSpec(f"{p}.fc2.b", (d,), 0, "bias"),
+        ]
+    out += [
+        *_ln_specs("final", d),
+        ParamSpec("head.w", (d, cfg.classes), d, "dense"),
+        ParamSpec("head.b", (cfg.classes,), 0, "bias"),
+    ]
+    return out
+
+
+def attention(x, qkv_w, qkv_b, proj_w, proj_b, heads: int, use_kernel: bool, causal: bool = False):
+    """Multi-head self-attention; projections via the Pallas dense layer."""
+    b, t, d = x.shape
+    hd = d // heads
+    qkv = common.dense(x.reshape(b * t, d), qkv_w, qkv_b, use_kernel=use_kernel)
+    qkv = qkv.reshape(b, t, 3, heads, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # [b, t, h, hd]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    if causal:
+        causal_mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(causal_mask[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b * t, d)
+    out = common.dense(out, proj_w, proj_b, use_kernel=use_kernel)
+    return out.reshape(b, t, d)
+
+
+def _block(r, p, h, cfg, use_kernel):
+    d = cfg.dim
+    b, t, _ = h.shape
+    x1 = common.layer_norm(h, r.take(f"{p}.ln1.ln_scale"), r.take(f"{p}.ln1.ln_bias"))
+    h = h + attention(
+        x1,
+        r.take(f"{p}.qkv.w"),
+        r.take(f"{p}.qkv.b"),
+        r.take(f"{p}.proj.w"),
+        r.take(f"{p}.proj.b"),
+        cfg.heads,
+        use_kernel,
+    )
+    x2 = common.layer_norm(h, r.take(f"{p}.ln2.ln_scale"), r.take(f"{p}.ln2.ln_bias"))
+    m = common.dense(x2.reshape(b * t, d), r.take(f"{p}.fc1.w"), r.take(f"{p}.fc1.b"), act="gelu", use_kernel=use_kernel)
+    m = common.dense(m, r.take(f"{p}.fc2.w"), r.take(f"{p}.fc2.b"), use_kernel=use_kernel)
+    return h + m.reshape(b, t, d)
+
+
+def apply(cfg: Config, flat, x, y, mask, use_kernel: bool = True):
+    """x: [B, 32, 32, 3] -> (logits [B, classes], y, mask)."""
+    r = common.ParamReader(flat, specs(cfg))
+    b = x.shape[0]
+    g = cfg.img // cfg.patch
+    patches = x.reshape(b, g, cfg.patch, g, cfg.patch, cfg.channels)
+    patches = patches.transpose(0, 1, 3, 2, 4, 5).reshape(b * cfg.tokens, cfg.patch_dim)
+    h = common.dense(patches, r.take("embed.w"), r.take("embed.b"), use_kernel=use_kernel)
+    h = h.reshape(b, cfg.tokens, cfg.dim) + r.take("pos")[None]
+    for i in range(cfg.depth):
+        h = _block(r, f"blk{i}", h, cfg, use_kernel)
+    h = common.layer_norm(h, r.take("final.ln_scale"), r.take("final.ln_bias"))
+    pooled = h.mean(axis=1)
+    logits = common.dense(pooled, r.take("head.w"), r.take("head.b"), use_kernel=use_kernel)
+    r.done()
+    return logits, y, mask
+
+
+def act_sizes(cfg: Config) -> List[int]:
+    t, d = cfg.tokens, cfg.dim
+    sizes = [t * d]
+    for _ in range(cfg.depth):
+        sizes += [t * 3 * d, cfg.heads * t * t, t * d, t * cfg.mlp, t * d]
+    sizes += [d, cfg.classes]
+    return sizes

@@ -1,0 +1,78 @@
+"""AOT pipeline tests: manifest integrity + HLO text well-formedness."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build one small model into a temp dir (module-scoped: lowering is
+    the slow part)."""
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, names=["lm"], verbose=False)
+    return out, manifest
+
+
+def test_manifest_offsets_contiguous(built):
+    _, manifest = built
+    entry = manifest["models"]["lm"]
+    offset = 0
+    for p in entry["params"]:
+        assert p["offset"] == offset
+        assert p["size"] == int__prod(p["shape"])
+        offset += p["size"]
+    assert offset == entry["dim"]
+
+
+def int__prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def test_manifest_matches_registry(built):
+    _, manifest = built
+    v = M.registry()["lm"]
+    entry = manifest["models"]["lm"]
+    assert entry["dim"] == v.dim
+    assert entry["batch"] == v.batch
+    assert entry["classes"] == v.classes
+    assert set(entry["artifacts"]) == {"fwd_loss", "sgd_step", "zo_delta"}
+
+
+def test_hlo_text_files_exist_and_parse_header(built):
+    out, manifest = built
+    for fname in manifest["models"]["lm"]["artifacts"].values():
+        path = os.path.join(out, fname)
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert text.startswith("HloModule"), text[:40]
+        assert "ENTRY" in text
+        # the interchange gotcha: must be text, never a serialized proto
+        assert "\x00" not in text
+
+
+def test_manifest_json_round_trips(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    assert loaded == manifest
+    assert loaded["version"] == 1
+
+
+def test_registry_names_stable():
+    names = set(M.registry())
+    assert names == {"cnn10", "cnn10_half", "cnn100", "cnn100_half", "vit10", "lm"}
+
+
+def test_entry_points_have_expected_arity():
+    v = M.registry()["cnn10"]
+    eps = v.entry_points()
+    assert len(eps["fwd_loss"][1]) == 4
+    assert len(eps["sgd_step"][1]) == 5
+    assert len(eps["zo_delta"][1]) == 6

@@ -1,0 +1,143 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the core correctness signal).
+
+hypothesis sweeps shapes/dtypes/activations/block sizes; assert_allclose
+against ref.py. interpret=True everywhere (CPU)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, perturb, ref
+
+settings.register_profile("ci", deadline=None, max_examples=40)
+settings.load_profile("ci")
+
+
+def _np_rng(seed):
+    return np.random.default_rng(seed)
+
+
+@st.composite
+def matmul_case(draw):
+    m = draw(st.integers(1, 96))
+    k = draw(st.integers(1, 160))
+    n = draw(st.integers(1, 96))
+    act = draw(st.sampled_from(["none", "relu", "gelu"]))
+    dtype = draw(st.sampled_from([np.float32, jnp.bfloat16]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, k, n, act, dtype, seed
+
+
+@given(matmul_case())
+def test_matmul_matches_ref(case):
+    m, k, n, act, dtype, seed = case
+    rng = _np_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    b = jnp.asarray(rng.normal(size=(n,)), dtype)
+    got = matmul.matmul_bias_act(x, w, b, act=act)
+    want = ref.matmul_bias_act(x, w, b, act=act)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+@pytest.mark.parametrize("block", [(8, 128, 8), (16, 128, 16), (64, 128, 64), (64, 256, 64)])
+def test_matmul_block_invariance(block):
+    """Result must not depend on the tiling choice."""
+    rng = _np_rng(7)
+    x = jnp.asarray(rng.normal(size=(70, 130)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(130, 50)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(50,)), jnp.float32)
+    base = ref.matmul_bias_act(x, w, b, act="relu")
+    got = matmul.matmul_bias_act(x, w, b, act="relu", block=block)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 3))
+    b = jnp.zeros((3,))
+    with pytest.raises(AssertionError):
+        matmul.matmul_bias_act(x, w, b)
+
+
+def test_matmul_zero_padding_exact():
+    """Padding path: K not a multiple of bk must still be exact (zeros
+    contribute nothing to the contraction)."""
+    rng = _np_rng(3)
+    x = jnp.asarray(rng.normal(size=(9, 129)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(129, 7)), jnp.float32)
+    b = jnp.zeros((7,), jnp.float32)
+    np.testing.assert_allclose(
+        matmul.matmul_bias_act(x, w, b),
+        ref.matmul_bias_act(x, w, b),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_vmem_estimate_positive():
+    assert matmul.vmem_bytes() > 0
+    assert matmul.vmem_bytes((8, 128, 8)) < matmul.vmem_bytes((128, 512, 128))
+    assert 0.0 < matmul.mxu_utilization(33, 70, 17) <= 1.0
+    assert matmul.mxu_utilization(64, 128, 64) == 1.0
+
+
+@st.composite
+def perturb_case(draw):
+    d = draw(st.integers(1, 200_000))
+    coeff = draw(st.floats(-1.0, 1.0, allow_nan=False))
+    block = draw(st.sampled_from([128, 4096, 65536]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return d, coeff, block, seed
+
+
+@given(perturb_case())
+@settings(deadline=None, max_examples=25)
+def test_perturb_matches_ref(case):
+    d, coeff, block, seed = case
+    rng = _np_rng(seed)
+    w = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    bits = jnp.asarray(rng.integers(0, 2**32, size=(d,), dtype=np.uint32))
+    got = perturb.rademacher_axpy(w, bits, coeff, block=block)
+    want = ref.rademacher_axpy(w, bits, coeff)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_perturb_two_sided_symmetry():
+    """w+cz and w-cz must bracket w exactly: (p+ + p-)/2 == w."""
+    rng = _np_rng(11)
+    w = jnp.asarray(rng.normal(size=(10_001,)), jnp.float32)
+    bits = jnp.asarray(rng.integers(0, 2**32, size=(10_001,), dtype=np.uint32))
+    p_plus = perturb.rademacher_axpy(w, bits, 0.25)
+    p_minus = perturb.rademacher_axpy(w, bits, -0.25)
+    np.testing.assert_allclose((np.asarray(p_plus) + np.asarray(p_minus)) / 2, w, rtol=0, atol=1e-6)
+    # and the step magnitude is 0.25 everywhere (up to f32 rounding of w±c)
+    np.testing.assert_allclose(np.abs(np.asarray(p_plus) - np.asarray(w)), 0.25, rtol=1e-5)
+
+
+def test_perturb_from_seed_deterministic():
+    w = jnp.zeros((5000,), jnp.float32)
+    a = perturb.perturb_from_seed(w, jnp.int32(42), 1.0)
+    b = perturb.perturb_from_seed(w, jnp.int32(42), 1.0)
+    c = perturb.perturb_from_seed(w, jnp.int32(43), 1.0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.mean(np.asarray(a) != np.asarray(c)) > 0.3  # different seed, different z
+
+
+def test_perturb_from_seed_is_rademacher():
+    """Signs should be ±1 balanced (law check, not just mechanics)."""
+    w = jnp.zeros((100_000,), jnp.float32)
+    z = np.asarray(perturb.perturb_from_seed(w, jnp.int32(0), 1.0))
+    assert set(np.unique(z)) == {-1.0, 1.0}
+    assert abs(z.mean()) < 0.02  # ~3 sigma for n=1e5
+
+
+def test_hbm_traffic_model():
+    assert perturb.hbm_traffic_bytes(1000) == 12_000

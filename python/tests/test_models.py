@@ -1,0 +1,229 @@
+"""L2 model tests: flat-param accounting, kernel/oracle parity, learning
+signal sanity, and SPSA delta consistency against true directional
+derivatives."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.models import cnn, common, lm, vit
+
+REG = M.registry()
+
+
+def _batch(v, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    b = batch or v.batch
+    if v.kind == "image":
+        c = v.cfg
+        x = jnp.asarray(rng.normal(size=(b, c.img, c.img, c.channels)) * 0.5, jnp.float32)
+        y = jnp.asarray(rng.integers(0, v.classes, (b,)), jnp.int32)
+        mask = jnp.ones((b,), jnp.float32)
+    else:
+        c = v.cfg
+        x = jnp.asarray(rng.integers(0, c.vocab, (b, c.seq)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, c.vocab, (b, c.seq)), jnp.int32)
+        mask = jnp.ones((b, c.seq), jnp.float32)
+    return x, y, mask
+
+
+@pytest.mark.parametrize("name", sorted(REG))
+def test_specs_consistent(name):
+    v = REG[name]
+    specs = v.specs
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names)), "duplicate param names"
+    assert v.dim == sum(s.size for s in specs)
+    for s in specs:
+        assert s.size > 0
+        assert s.kind in {"conv", "dense", "bias", "norm_scale", "norm_bias", "embed", "pos"}
+        if s.kind in {"conv", "dense", "embed", "pos"}:
+            assert s.fan_in > 0
+
+
+@pytest.mark.parametrize("name", ["cnn10", "vit10", "lm"])
+def test_fwd_shapes_and_reader_completion(name):
+    v = REG[name]
+    flat = jnp.asarray(common.init_flat(v.specs, 0))
+    x, y, mask = _batch(v, batch=4 if v.kind == "image" else None)
+    logits, y2, m2 = v.apply_fn()(flat, x, y, mask)  # ParamReader asserts completion
+    assert logits.shape[-1] == v.classes
+    assert logits.shape[0] == y2.shape[0] == m2.shape[0]
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ["cnn10", "vit10", "lm"])
+def test_kernel_oracle_parity(name):
+    """Pallas forward path must numerically match the differentiable oracle
+    path — this is what licenses mixing them across artifacts."""
+    v = REG[name]
+    flat = jnp.asarray(common.init_flat(v.specs, 1))
+    x, y, mask = _batch(v, seed=2, batch=4 if v.kind == "image" else None)
+    lk, yk, mk = v.apply_fn()(flat, x, y, mask, use_kernel=True)
+    lo, yo, mo = v.apply_fn()(flat, x, y, mask, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lo), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(yk), np.asarray(yo))
+
+
+def test_ce_loss_sum_masking():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0], [5.0, 0.0]])
+    y = jnp.asarray([0, 1, 1])
+    full, corr_full = common.ce_loss_sum(logits, y, jnp.asarray([1.0, 1.0, 1.0]))
+    part, corr_part = common.ce_loss_sum(logits, y, jnp.asarray([1.0, 1.0, 0.0]))
+    assert float(corr_full) == 2.0 and float(corr_part) == 2.0
+    assert float(part) < float(full)
+    zero, corr0 = common.ce_loss_sum(logits, y, jnp.zeros(3))
+    assert float(zero) == 0.0 and float(corr0) == 0.0
+
+
+def test_ce_loss_matches_manual():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(16, 10)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, 16), jnp.int32)
+    loss, _ = common.ce_loss_sum(logits, y, jnp.ones(16))
+    ref = -np.sum(
+        np.log(np.exp(logits)[np.arange(16), y] / np.exp(logits).sum(-1))
+    )
+    np.testing.assert_allclose(float(loss), ref, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["cnn10", "lm"])
+def test_sgd_step_reduces_loss(name):
+    v = REG[name]
+    flat = jnp.asarray(common.init_flat(v.specs, 3))
+    x, y, mask = _batch(v, seed=4, batch=8 if v.kind == "image" else None)
+    ap = v.apply_fn()
+    step = jax.jit(common.make_sgd_step(ap))
+    fwd = jax.jit(common.make_fwd_loss(ap))
+    l0, _ = fwd(flat, x, y, mask)
+    for _ in range(5):
+        flat, _ = step(flat, x, y, mask, jnp.float32(0.05))
+    l1, _ = fwd(flat, x, y, mask)
+    assert float(l1) < float(l0), f"loss {float(l0)} -> {float(l1)}"
+
+
+def test_sgd_step_respects_mask():
+    """Padding rows must not influence the gradient."""
+    v = REG["cnn10"]
+    flat = jnp.asarray(common.init_flat(v.specs, 5))
+    x, y, _ = _batch(v, seed=6, batch=8)
+    mask = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    step = jax.jit(common.make_sgd_step(v.apply_fn()))
+    out1, _ = step(flat, x, y, mask, jnp.float32(0.1))
+    # corrupt the padding rows; result must be identical
+    x2 = x.at[4:].set(123.0)
+    y2 = y.at[4:].set(0)
+    out2, _ = step(flat, x2, y2, mask, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5, atol=1e-6)
+
+
+def test_zo_delta_tracks_directional_derivative():
+    """ΔL/(2c) must approximate zᵀ∇L: SPSA's core identity (eq. 2)."""
+    v = REG["cnn10"]
+    flat = jnp.asarray(common.init_flat(v.specs, 7))
+    x, y, mask = _batch(v, seed=8, batch=8)
+    ap = v.apply_fn()
+    c = 1e-3
+
+    def mean_loss(w):
+        logits, y2, m2 = ap(w, x, y, mask, use_kernel=False)
+        s, _ = common.ce_loss_sum(logits, y2, m2)
+        return s
+
+    grad = jax.grad(mean_loss)(flat)
+    zo = jax.jit(common.make_zo_delta(ap))
+    for seed in (0, 1, 2):
+        key = jax.random.PRNGKey(seed)
+        bits = jax.random.bits(key, shape=flat.shape, dtype=jnp.uint32)
+        z = 1.0 - 2.0 * (bits & jnp.uint32(1)).astype(jnp.float32)
+        dl, msum = zo(flat, jnp.int32(seed), jnp.float32(c), x, y, mask)
+        assert float(msum) == 8.0
+        # (a) mechanics parity: the in-graph ΔL must equal the oracle-path
+        # central difference at the identical perturbed weights.
+        manual = mean_loss(flat + c * z) - mean_loss(flat - c * z)
+        assert abs(float(dl) - float(manual)) < 5e-3 * max(1.0, abs(float(manual)))
+        # (b) SPSA identity: ΔL/(2c) ≈ zᵀ∇L up to curvature (|cz|₂≈0.4 here,
+        # so allow a generous band — sign and scale must agree).
+        want = float(jnp.vdot(z, grad))
+        got = float(dl) / (2 * c)
+        assert got * want > 0, (seed, got, want)
+        assert abs(got - want) < 0.5 * max(20.0, abs(want)), (seed, got, want)
+
+
+def test_zo_delta_zero_coeff_is_zero():
+    v = REG["lm"]
+    flat = jnp.asarray(common.init_flat(v.specs, 9))
+    x, y, mask = _batch(v, seed=10)
+    zo = jax.jit(common.make_zo_delta(v.apply_fn()))
+    dl, _ = zo(flat, jnp.int32(5), jnp.float32(0.0), x, y, mask)
+    assert float(dl) == 0.0
+
+
+def test_init_flat_statistics():
+    specs = REG["cnn10"].specs
+    flat = common.init_flat(specs, 0)
+    offset = 0
+    for s in specs:
+        part = flat[offset : offset + s.size]
+        offset += s.size
+        if s.fan_in == 0:
+            assert np.all(part == s.fill)
+        elif s.size >= 256:
+            want = np.sqrt(2.0 / s.fan_in)
+            assert abs(part.std() - want) / want < 0.25, s.name
+    assert offset == flat.size
+
+
+def test_init_flat_seed_determinism():
+    specs = REG["lm"].specs
+    a = common.init_flat(specs, 4)
+    b = common.init_flat(specs, 4)
+    c = common.init_flat(specs, 5)
+    np.testing.assert_array_equal(a, b)
+    assert np.any(a != c)
+
+
+def test_half_width_is_smaller_and_sliceable():
+    full, half = REG["cnn10"], REG["cnn10_half"]
+    assert half.dim < full.dim / 2
+    sf = {s.name: s.shape for s in full.specs}
+    sh = {s.name: s.shape for s in half.specs}
+    assert set(sf) == set(sh), "HeteroFL pairing requires identical tensor names"
+    for name, shape in sf.items():
+        for a, b in zip(sh[name], shape):
+            assert a <= b, (name, sh[name], shape)
+
+
+@pytest.mark.parametrize("name", sorted(REG))
+def test_act_sizes_positive(name):
+    v = REG[name]
+    sizes = v.module.act_sizes(v.cfg)
+    assert all(s > 0 for s in sizes)
+    summary = M.act_summary(v)
+    assert summary["max"] <= summary["sum"]
+
+
+def test_group_norm_normalizes():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(3.0, 5.0, size=(2, 8, 8, 16)), jnp.float32)
+    out = common.group_norm(x, jnp.ones(16), jnp.zeros(16), groups=8)
+    g = np.asarray(out).reshape(2, 8, 8, 8, 2)
+    assert abs(g.mean(axis=(1, 2, 4))).max() < 1e-4
+    assert abs(g.std(axis=(1, 2, 4)) - 1).max() < 1e-3
+
+
+def test_causal_attention_no_future_leak():
+    """Perturbing tokens at position t must not change logits before t."""
+    v = REG["lm"]
+    flat = jnp.asarray(common.init_flat(v.specs, 11))
+    x, y, mask = _batch(v, seed=12)
+    logits1, _, _ = v.apply_fn()(flat, x, y, mask, use_kernel=False)
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % v.cfg.vocab)
+    logits2, _, _ = v.apply_fn()(flat, x2, y, mask, use_kernel=False)
+    t = v.cfg.seq
+    l1 = np.asarray(logits1).reshape(v.batch, t, -1)
+    l2 = np.asarray(logits2).reshape(v.batch, t, -1)
+    np.testing.assert_allclose(l1[:, : t - 1], l2[:, : t - 1], rtol=1e-5, atol=1e-6)
+    assert np.abs(l1[:, -1] - l2[:, -1]).max() > 1e-6

@@ -1,0 +1,94 @@
+//! Bench: coordinator primitives — aggregation, HeteroFL slicing/scatter,
+//! Dirichlet partitioning, data generation, batch assembly (§Perf L3).
+
+use std::sync::Arc;
+
+use zowarmup::baselines::heterofl::{heterofl_aggregate, SliceMap};
+use zowarmup::config::ServerOpt;
+use zowarmup::data::dirichlet::dirichlet_split;
+use zowarmup::data::loader::{ClientData, Source};
+use zowarmup::data::synthetic::{generate, GenConfig, SynthKind};
+use zowarmup::fed::aggregate::{weighted_average, ServerOptState};
+use zowarmup::model::params::ParamVec;
+use zowarmup::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fed_primitives");
+
+    // weighted average at warm-round shape (P=10 clients, d=175k)
+    {
+        let d = 175_258;
+        let updates: Vec<(ParamVec, f64)> =
+            (0..10).map(|i| (ParamVec(vec![i as f32; d]), 100.0)).collect();
+        b.iter_with_items("weighted_average P=10 d=175k", (d * 10) as f64, || {
+            black_box(weighted_average(&updates));
+        });
+    }
+
+    // server optimizers
+    {
+        let d = 175_258;
+        let delta = ParamVec(vec![0.01f32; d]);
+        let mut g_sgd = ParamVec(vec![0.0f32; d]);
+        let mut sgd = ServerOptState::new(ServerOpt::Sgd, d);
+        b.iter_with_items("server_opt sgd d=175k", d as f64, || {
+            sgd.apply(&mut g_sgd, &delta, 1.0);
+            black_box(&g_sgd.0[0]);
+        });
+        let mut g_adam = ParamVec(vec![0.0f32; d]);
+        let mut adam = ServerOptState::new(ServerOpt::adam(), d);
+        b.iter_with_items("server_opt adam d=175k", d as f64, || {
+            adam.apply(&mut g_adam, &delta, 0.001);
+            black_box(&g_adam.0[0]);
+        });
+    }
+
+    // HeteroFL slice + aggregate at linear-probe shape
+    {
+        let classes = 10;
+        let features = 3072;
+        let fh = features / 2;
+        let map = SliceMap::from_shape_pairs(
+            &[
+                (vec![classes, features], 0, vec![classes, fh], 0),
+                (vec![classes], classes * features, vec![classes], classes * fh),
+            ],
+            classes * features + classes,
+            classes * fh + classes,
+        )
+        .unwrap();
+        let global = ParamVec(vec![0.5f32; map.full_dim]);
+        b.iter_with_items("heterofl slice d=30k", map.half_dim() as f64, || {
+            black_box(map.slice(&global));
+        });
+        let mut g = global.clone();
+        let fulls: Vec<(ParamVec, f64)> =
+            (0..3).map(|_| (ParamVec(vec![1.0; map.full_dim]), 100.0)).collect();
+        let halves: Vec<(ParamVec, f64)> =
+            (0..7).map(|_| (ParamVec(vec![2.0; map.half_dim()]), 100.0)).collect();
+        b.iter_with_items("heterofl aggregate 3 full + 7 half", map.full_dim as f64, || {
+            heterofl_aggregate(&mut g, &fulls, &halves, &map);
+            black_box(&g.0[0]);
+        });
+    }
+
+    // data pipeline
+    {
+        b.iter_with_items("synth10 generate n=1000", 1000.0, || {
+            black_box(generate(SynthKind::Synth10, 1000, GenConfig::default()));
+        });
+        let data = generate(SynthKind::Synth10, 2000, GenConfig::default());
+        b.iter("dirichlet_split K=50 alpha=0.1", || {
+            black_box(dirichlet_split(&data, 50, 0.1, 0));
+        });
+        let cd = ClientData {
+            source: Source::Image(Arc::new(data.clone())),
+            indices: (0..512).collect(),
+        };
+        b.iter_with_items("batch assembly 512 samples @B=64", 512.0, || {
+            black_box(cd.chunks(64));
+        });
+    }
+
+    b.report();
+}

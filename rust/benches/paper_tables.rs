@@ -1,0 +1,35 @@
+//! Bench: one end-to-end timing per paper table/figure regenerator
+//! (DESIGN.md §4) at smoke scale. Each case runs the same code path as
+//! `zowarmup exp <id>`; the printed rows ARE a miniature of the paper's
+//! artifact, so this doubles as a regression gate on the harness.
+//!
+//! XLA-backed experiments (table5, fig5) and table1's manifest section are
+//! skipped gracefully when artifacts/ is absent.
+
+use zowarmup::config::Scale;
+use zowarmup::exp;
+use zowarmup::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::slow("paper_tables_smoke");
+    b.min_iters = 1;
+    b.warmup_iters = 0;
+
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    for id in exp::ALL_IDS {
+        if !have_artifacts && (id == "table5" || id == "fig5") {
+            eprintln!("[skip] {id}: artifacts/ missing (run `make artifacts`)");
+            continue;
+        }
+        let mut report = String::new();
+        b.iter(&format!("exp {id} (smoke)"), || {
+            report = exp::run(id, Scale::Smoke, "artifacts").unwrap_or_else(|e| {
+                panic!("exp {id} failed: {e:#}");
+            });
+        });
+        // echo the table itself so `cargo bench` output contains the rows
+        println!("{report}");
+    }
+
+    b.report();
+}

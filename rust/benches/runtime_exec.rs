@@ -1,0 +1,81 @@
+//! Bench: PJRT artifact execution latency — the L2/L1 unit costs the
+//! coordinator schedules around (§Perf L2). Requires `make artifacts`.
+//!
+//! Measures, per model: fwd_loss (the ZO-phase unit, 2 per seed),
+//! sgd_step (the warm-phase unit), and the fused graph-mode zo_delta
+//! (1 exec = both SPSA sides + in-graph perturbation) vs the host path
+//! (2 fwd execs + 2 host perturbs) at equal semantics.
+
+use std::sync::Arc;
+
+use zowarmup::data::loader::{ClientData, Source};
+use zowarmup::data::synthetic::{generate, GenConfig, SynthKind};
+use zowarmup::data::lm;
+use zowarmup::model::backend::ModelBackend;
+use zowarmup::model::manifest::Manifest;
+use zowarmup::model::params::ParamVec;
+use zowarmup::runtime::Engine;
+use zowarmup::util::bench::{black_box, Bench};
+use zowarmup::util::rng::Distribution;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime_exec bench: {e}");
+            return Ok(());
+        }
+    };
+    let engine = Engine::cpu()?;
+    let mut b = Bench::slow("runtime_exec");
+    b.min_iters = 5;
+
+    for model in ["cnn10", "cnn10_half", "vit10"] {
+        let backend = engine.backend(&manifest, model)?;
+        let entry = manifest.model(model)?.clone();
+        let data = generate(SynthKind::Synth10, entry.batch, GenConfig::default());
+        let cd = ClientData {
+            source: Source::Image(Arc::new(data)),
+            indices: (0..entry.batch).collect(),
+        };
+        let batch = cd.chunks(entry.batch).pop().unwrap();
+        let mut params = ParamVec::he_init(&entry, 0);
+        let items = entry.batch as f64;
+
+        b.iter_with_items(&format!("{model} fwd_loss B={}", entry.batch), items, || {
+            black_box(backend.fwd_loss(&params, &batch).unwrap());
+        });
+        b.iter_with_items(&format!("{model} sgd_step B={}", entry.batch), items, || {
+            black_box(backend.sgd_step(&mut params, &batch, 1e-4).unwrap());
+        });
+        b.iter_with_items(&format!("{model} zo_delta host (2 fwd + 2 axpy)"), items, || {
+            black_box(
+                backend
+                    .zo_delta(&params, &batch, 42, 1e-4, 0.75, Distribution::Rademacher)
+                    .unwrap(),
+            );
+        });
+        b.iter_with_items(&format!("{model} zo_delta fused (1 exec)"), items, || {
+            black_box(backend.zo_delta_fused(&params, &batch, 42, 7.5e-5).unwrap());
+        });
+    }
+
+    // the LM path (fig5's workhorse)
+    {
+        let backend = engine.backend(&manifest, "lm")?;
+        let entry = manifest.model("lm")?.clone();
+        let data = lm::generate(64, 64, entry.batch, 0);
+        let cd = ClientData {
+            source: Source::Lm(Arc::new(data)),
+            indices: (0..entry.batch).collect(),
+        };
+        let batch = cd.chunks(entry.batch).pop().unwrap();
+        let params = ParamVec::he_init(&entry, 0);
+        b.iter_with_items("lm fwd_loss B=16", entry.batch as f64, || {
+            black_box(backend.fwd_loss(&params, &batch).unwrap());
+        });
+    }
+
+    b.report();
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Bench: the ZO-phase hot loop — seeded perturbation streams and the
+//! ZOUPDATE axpy reconstruction. This is the L3 path that runs once per
+//! (seed, ΔL) pair per round on every participant, so its throughput caps
+//! feasible model size (§Perf L3).
+
+use zowarmup::config::ZoConfig;
+use zowarmup::model::params::ParamVec;
+use zowarmup::util::bench::{black_box, Bench};
+use zowarmup::util::rng::{Distribution, PerturbStream, Xoshiro256};
+use zowarmup::zo::{apply_zo_update, ZoContribution};
+
+fn main() {
+    let mut b = Bench::new("zo_core");
+
+    // raw stream generation
+    for d in [44_370usize, 175_258, 11_173_962] {
+        let mut out = vec![0.0f32; d];
+        b.iter_with_items(&format!("rademacher_stream d={d}"), d as f64, || {
+            let mut s = PerturbStream::new(7, 0.75, Distribution::Rademacher);
+            s.fill(&mut out);
+            black_box(&out);
+        });
+    }
+    {
+        let d = 175_258;
+        let mut out = vec![0.0f32; d];
+        b.iter_with_items(&format!("gaussian_stream d={d}"), d as f64, || {
+            let mut s = PerturbStream::new(7, 0.75, Distribution::Gaussian);
+            s.fill(&mut out);
+            black_box(&out);
+        });
+    }
+
+    // the fused perturb-axpy (the protocol's unit of work)
+    for d in [175_258usize, 11_173_962] {
+        let mut w = ParamVec(vec![0.1f32; d]);
+        b.iter_with_items(&format!("perturb_axpy d={d}"), d as f64, || {
+            w.perturb_axpy(13, 0.75, Distribution::Rademacher, 1e-4);
+            black_box(&w.0[0]);
+        });
+    }
+
+    // one full ZOUPDATE: Q=10 clients x S=3 seeds at ResNet18 scale
+    {
+        let d = 1_000_000;
+        let mut global = ParamVec(vec![0.1f32; d]);
+        let cfg = ZoConfig::default();
+        let contribs: Vec<ZoContribution> = (0..10)
+            .map(|c| ZoContribution {
+                client: c,
+                seeds: vec![c as u64 * 3, c as u64 * 3 + 1, c as u64 * 3 + 2],
+                delta_l: vec![0.01, -0.02, 0.005],
+                n_samples: 100,
+            })
+            .collect();
+        b.iter_with_items("apply_zo_update d=1M Q=10 S=3", (d * 30) as f64, || {
+            apply_zo_update(&mut global, &contribs, &cfg, 0.01);
+            black_box(&global.0[0]);
+        });
+    }
+
+    // the fused single-pass variant actually used by apply_zo_update
+    {
+        let d = 1_000_000;
+        let mut w = vec![0.1f32; d];
+        let items: Vec<(u64, f32)> = (0..30).map(|i| (i as u64, 1e-4)).collect();
+        b.iter_with_items(
+            "perturb_axpy_many d=1M x30 (fused pass)",
+            (d * 30) as f64,
+            || {
+                zowarmup::model::params::perturb_axpy_many(
+                    &mut w,
+                    &items,
+                    0.75,
+                    Distribution::Rademacher,
+                );
+                black_box(&w[0]);
+            },
+        );
+    }
+
+    // xoshiro baseline for context
+    {
+        let mut rng = Xoshiro256::seed_from(3);
+        b.iter_with_items("xoshiro_u64 x1M", 1e6, || {
+            let mut acc = 0u64;
+            for _ in 0..1_000_000 {
+                acc = acc.wrapping_add(rng.next_u64());
+            }
+            black_box(acc);
+        });
+    }
+
+    b.report();
+}

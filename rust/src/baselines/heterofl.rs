@@ -1,0 +1,387 @@
+//! HeteroFL baseline (Diao et al., 2020): width-scaled sub-networks.
+//!
+//! High-resource clients train the full-width model; low-resource clients
+//! train a half-width sub-network whose tensors are the *leading slices*
+//! (first channels) of the full tensors. The server aggregates
+//! position-wise: coordinates covered by both populations average over
+//! all updates, full-only coordinates average over high-resource updates.
+//!
+//! The slice correspondence is derived mechanically from the paired
+//! manifests (`cnn10` / `cnn10_half` share tensor names; every half dim ≤
+//! full dim), so it works unchanged for any architecture pair.
+
+use crate::comm::CommLedger;
+use crate::config::FedConfig;
+use crate::data::loader::{eval_chunks, ClientData, Source};
+use crate::fed::client::{warm_local_train, ClientState, Resource};
+use crate::fed::server::assign_resources;
+use crate::metrics::{Phase, RoundRecord, RunLog};
+use crate::model::backend::{LossSums, ModelBackend};
+use crate::model::manifest::ModelEntry;
+use crate::model::params::ParamVec;
+use crate::util::rng::Xoshiro256;
+
+/// Index map from the half-width flat vector into the full flat vector.
+#[derive(Debug, Clone)]
+pub struct SliceMap {
+    /// map[i] = full-vector position of half-vector element i
+    pub map: Vec<u32>,
+    pub full_dim: usize,
+}
+
+impl SliceMap {
+    /// Build from paired (full, half) tensor shape lists with offsets.
+    /// Each half shape must be a leading sub-block of its full shape.
+    pub fn from_shape_pairs(
+        pairs: &[(Vec<usize>, usize, Vec<usize>, usize)], // (full_shape, full_off, half_shape, half_off)
+        full_dim: usize,
+        half_dim: usize,
+    ) -> anyhow::Result<Self> {
+        let mut map = vec![u32::MAX; half_dim];
+        for (full_shape, full_off, half_shape, half_off) in pairs {
+            anyhow::ensure!(
+                full_shape.len() == half_shape.len(),
+                "rank mismatch {full_shape:?} vs {half_shape:?}"
+            );
+            for (f, h) in full_shape.iter().zip(half_shape) {
+                anyhow::ensure!(h <= f, "half dim {h} > full dim {f}");
+            }
+            // iterate all half coordinates (row-major)
+            let hsize: usize = half_shape.iter().product();
+            let mut coords = vec![0usize; half_shape.len()];
+            for hi in 0..hsize {
+                // ravel coords into the full shape
+                let mut fi = 0usize;
+                for (d, &c) in coords.iter().enumerate() {
+                    fi = fi * full_shape[d] + c;
+                }
+                let slot = half_off + hi;
+                anyhow::ensure!(map[slot] == u32::MAX, "overlapping half tensors");
+                map[slot] = (full_off + fi) as u32;
+                // increment coords
+                for d in (0..coords.len()).rev() {
+                    coords[d] += 1;
+                    if coords[d] < half_shape[d] {
+                        break;
+                    }
+                    coords[d] = 0;
+                }
+            }
+        }
+        anyhow::ensure!(
+            map.iter().all(|&m| m != u32::MAX),
+            "unmapped half positions"
+        );
+        Ok(Self {
+            map,
+            full_dim,
+        })
+    }
+
+    /// Derive from paired manifests (same tensor names, smaller shapes).
+    pub fn from_manifest_pair(full: &ModelEntry, half: &ModelEntry) -> anyhow::Result<Self> {
+        let mut pairs = Vec::new();
+        for ht in &half.params {
+            let ft = full
+                .tensor(&ht.name)
+                .ok_or_else(|| anyhow::anyhow!("tensor {} missing in full model", ht.name))?;
+            pairs.push((ft.shape.clone(), ft.offset, ht.shape.clone(), ht.offset));
+        }
+        Self::from_shape_pairs(&pairs, full.dim, half.dim)
+    }
+
+    pub fn half_dim(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Extract the half-width parameters from the full vector.
+    pub fn slice(&self, full: &ParamVec) -> ParamVec {
+        assert_eq!(full.dim(), self.full_dim);
+        ParamVec(self.map.iter().map(|&i| full.0[i as usize]).collect())
+    }
+}
+
+/// HeteroFL position-wise aggregation.
+pub fn heterofl_aggregate(
+    global: &mut ParamVec,
+    full_updates: &[(ParamVec, f64)],
+    half_updates: &[(ParamVec, f64)],
+    map: &SliceMap,
+) {
+    let dim = global.dim();
+    let mut sum = vec![0.0f64; dim];
+    let mut weight = vec![0.0f64; dim];
+    for (p, w) in full_updates {
+        for i in 0..dim {
+            sum[i] += *w * p.0[i] as f64;
+            weight[i] += *w;
+        }
+    }
+    for (p, w) in half_updates {
+        for (hi, &fi) in map.map.iter().enumerate() {
+            sum[fi as usize] += *w * p.0[hi] as f64;
+            weight[fi as usize] += *w;
+        }
+    }
+    for i in 0..dim {
+        if weight[i] > 0.0 {
+            global.0[i] = (sum[i] / weight[i]) as f32;
+        }
+    }
+}
+
+/// One full HeteroFL training run.
+pub struct HeteroFlRun<'a, BF: ModelBackend, BH: ModelBackend> {
+    pub cfg: FedConfig,
+    pub full: &'a BF,
+    pub half: &'a BH,
+    pub map: SliceMap,
+    pub clients: Vec<ClientState>,
+    pub test: Source,
+    pub global: ParamVec,
+    pub log: RunLog,
+    pub ledger: CommLedger,
+    rng: Xoshiro256,
+}
+
+impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
+    pub fn new(
+        cfg: FedConfig,
+        full: &'a BF,
+        half: &'a BH,
+        map: SliceMap,
+        shards: Vec<ClientData>,
+        test: Source,
+        init: ParamVec,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(map.full_dim == full.dim(), "map/full dim");
+        anyhow::ensure!(map.half_dim() == half.dim(), "map/half dim");
+        let classes = assign_resources(cfg.clients, cfg.hi_count(), cfg.seed);
+        let clients = shards
+            .into_iter()
+            .zip(classes)
+            .enumerate()
+            .map(|(id, (data, resource))| ClientState { id, data, resource })
+            .collect();
+        let rng = Xoshiro256::seed_from(cfg.seed ^ 0x8E7E_0F1);
+        Ok(Self {
+            cfg,
+            full,
+            half,
+            map,
+            clients,
+            test,
+            global: init,
+            log: RunLog::default(),
+            ledger: CommLedger::default(),
+            rng,
+        })
+    }
+
+    pub fn eval(&self) -> anyhow::Result<LossSums> {
+        let mut sums = LossSums::default();
+        for b in eval_chunks(&self.test, self.full.batch_size()) {
+            sums.add(self.full.fwd_loss(&self.global, &b)?);
+        }
+        Ok(sums)
+    }
+
+    /// One round: sample from *all* clients; high-res train the full net,
+    /// low-res train the half slice; aggregate position-wise.
+    pub fn round(&mut self, round: usize) -> anyhow::Result<f64> {
+        let q = self.cfg.sample_zo.clamp(1, self.cfg.clients);
+        let picked = self.rng.choose(self.cfg.clients, q);
+        let mut full_updates = Vec::new();
+        let mut half_updates = Vec::new();
+        let mut train = LossSums::default();
+        let mut bytes = 0u64;
+        for &cid in &picked {
+            let client = &self.clients[cid];
+            let mut crng =
+                Xoshiro256::seed_from(self.cfg.seed ^ (round as u64) << 20 ^ cid as u64);
+            match client.resource {
+                Resource::High => {
+                    let (w, sums) = warm_local_train(
+                        self.full,
+                        &self.global,
+                        &client.data,
+                        &self.cfg,
+                        &mut crng,
+                    )?;
+                    train.add(sums);
+                    full_updates.push((w, client.n() as f64));
+                    bytes += (self.full.dim() * 4) as u64;
+                }
+                Resource::Low => {
+                    let sub = self.map.slice(&self.global);
+                    let (w, sums) = warm_local_train(
+                        self.half,
+                        &sub,
+                        &client.data,
+                        &self.cfg,
+                        &mut crng,
+                    )?;
+                    train.add(sums);
+                    half_updates.push((w, client.n() as f64));
+                    bytes += (self.half.dim() * 4) as u64;
+                }
+            }
+        }
+        heterofl_aggregate(&mut self.global, &full_updates, &half_updates, &self.map);
+        self.ledger.record_round(bytes, bytes);
+        Ok(train.mean_loss())
+    }
+
+    pub fn run(&mut self) -> anyhow::Result<()> {
+        for round in 0..self.cfg.rounds_total {
+            let t0 = std::time::Instant::now();
+            let train_loss = self.round(round)?;
+            let do_eval =
+                round % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds_total;
+            let (test_acc, test_loss) = if do_eval {
+                let e = self.eval()?;
+                (e.accuracy(), e.mean_loss())
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let (up, down) = *self.ledger.per_round.last().unwrap();
+            self.log.push(RoundRecord {
+                round,
+                phase: Phase::Warm,
+                train_loss,
+                test_acc,
+                test_loss,
+                bytes_up: up,
+                bytes_down: down,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
+        }
+        Ok(())
+    }
+
+    /// Per-round average communication bytes (for the paper's fixed
+    /// communication budget: rounds = budget / per_round).
+    pub fn per_round_bytes(&self) -> u64 {
+        let q = self.cfg.sample_zo.clamp(1, self.cfg.clients) as u64;
+        let hi_share = self.cfg.hi_count() as f64 / self.cfg.clients as f64;
+        let per_client = hi_share * (self.full.dim() * 4) as f64
+            + (1.0 - hi_share) * (self.half.dim() * 4) as f64;
+        (q as f64 * per_client * 2.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::backend::LinearBackend;
+
+    /// Linear-probe slice pair: half keeps the first F/2 features.
+    pub(crate) fn linear_slice_map(classes: usize, features: usize) -> SliceMap {
+        let fh = features / 2;
+        SliceMap::from_shape_pairs(
+            &[
+                (vec![classes, features], 0, vec![classes, fh], 0),
+                (
+                    vec![classes],
+                    classes * features,
+                    vec![classes],
+                    classes * fh,
+                ),
+            ],
+            classes * features + classes,
+            classes * fh + classes,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn slice_map_linear_layout() {
+        let m = linear_slice_map(2, 4);
+        assert_eq!(m.half_dim(), 6);
+        // class 0 row: full 0..2; class 1 row: full 4..6; biases full 8,9
+        assert_eq!(m.map, vec![0, 1, 4, 5, 8, 9]);
+        let full = ParamVec((0..10).map(|i| i as f32).collect());
+        let half = m.slice(&full);
+        assert_eq!(half.0, vec![0.0, 1.0, 4.0, 5.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn slice_map_conv_like() {
+        // conv [2,2,3,4] -> [2,2,2,2]: kernel dims kept, channels halved
+        let full_shape = vec![2, 2, 3, 4];
+        let half_shape = vec![2, 2, 2, 2];
+        let m = SliceMap::from_shape_pairs(
+            &[(full_shape.clone(), 0, half_shape.clone(), 0)],
+            48,
+            16,
+        )
+        .unwrap();
+        // half coord (1,1,1,1) -> full flat ((1*2+1)*3+1)*4+1 = 41
+        assert_eq!(*m.map.last().unwrap(), 41);
+    }
+
+    #[test]
+    fn aggregate_full_only_positions_keep_full_average() {
+        let m = linear_slice_map(1, 4); // full dim 5, half keeps feats 0,1 + bias
+        let mut global = ParamVec(vec![0.0; 5]);
+        let full_up = vec![(ParamVec(vec![1.0; 5]), 1.0)];
+        let half_up = vec![(ParamVec(vec![3.0, 3.0, 3.0]), 1.0)];
+        heterofl_aggregate(&mut global, &full_up, &half_up, &m);
+        // positions 0,1 (shared): avg(1,3)=2 ; positions 2,3 (full only): 1
+        assert_eq!(global.0, vec![2.0, 2.0, 1.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn aggregate_half_only_population() {
+        let m = linear_slice_map(1, 4);
+        let mut global = ParamVec(vec![9.0; 5]);
+        heterofl_aggregate(
+            &mut global,
+            &[],
+            &[(ParamVec(vec![1.0, 2.0, 3.0]), 2.0)],
+            &m,
+        );
+        // uncovered full-only positions keep the old value
+        assert_eq!(global.0, vec![1.0, 2.0, 9.0, 9.0, 3.0]);
+    }
+
+    #[test]
+    fn heterofl_run_learns() {
+        use crate::data::dirichlet::dirichlet_split;
+        use crate::data::synthetic::{train_test, SynthKind};
+        use crate::fed::server::shards_from_partition;
+        use std::sync::Arc;
+
+        let mut cfg = FedConfig::default().smoke_scale();
+        cfg.lr_client_warm = 0.02;
+        let f = 32 * 32 * 3;
+        let full = LinearBackend::new(f, 10, 32);
+        let half = LinearBackend::sliced(&full, f / 2);
+        // half model sees only the first half of the features: the shard
+        // batches carry full features, so the half backend needs its own
+        // view. For the test we slice features by constructing half batches
+        // — covered in exp/table2; here we exercise mechanics with full
+        // feature dim for both (map = identity-prefix).
+        let map = linear_slice_map(10, f);
+        assert_eq!(map.half_dim(), half.dim());
+        let (train, test) = train_test(SynthKind::Synth10, 300, 100, 0);
+        let part = dirichlet_split(&train, cfg.clients, 0.5, 0);
+        let src = Source::Image(Arc::new(train));
+        let shards = shards_from_partition(&src, &part);
+        let init = ParamVec::zeros(full.dim());
+        let run = HeteroFlRun::new(
+            cfg,
+            &full,
+            &half,
+            map,
+            shards,
+            Source::Image(Arc::new(test)),
+            init,
+        );
+        // LinearBackend::fwd_loss on half batches would need feature
+        // slicing — the image half-backend path is exercised against the
+        // XLA cnn_half in integration tests. Here assert construction works.
+        assert!(run.is_ok());
+    }
+}

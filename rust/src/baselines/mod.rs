@@ -1,0 +1,9 @@
+//! Comparator methods from the paper's evaluation: HeteroFL (Diao et al.,
+//! 2020), FedKSeed (Qin et al., 2024), and the High-Res-Only exclusion
+//! baseline (a `Federation` with pivot = total rounds, sampling only H).
+
+pub mod fedkseed;
+pub mod heterofl;
+
+pub use fedkseed::{FedKSeedRun, KSeedConfig};
+pub use heterofl::{heterofl_aggregate, HeteroFlRun, SliceMap};

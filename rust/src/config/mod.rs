@@ -1,0 +1,371 @@
+//! Experiment configuration: every hyperparameter of Algorithm 1 plus the
+//! simulation scales. Configs are plain structs with JSON file / CLI
+//! override support (`--config file.json --clients 50 ...`).
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Distribution;
+
+/// Server-side optimizer for aggregated updates (§4.4 compares Adam).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServerOpt {
+    Sgd,
+    Adam { beta1: f64, beta2: f64, eps: f64 },
+}
+
+impl ServerOpt {
+    pub fn adam() -> Self {
+        ServerOpt::Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sgd" => Some(ServerOpt::Sgd),
+            "adam" => Some(ServerOpt::adam()),
+            _ => None,
+        }
+    }
+}
+
+/// ZO-phase hyperparameters (§A.5 defaults: ε=1e-4, S=3, τ=0.75).
+#[derive(Debug, Clone, Copy)]
+pub struct ZoConfig {
+    pub eps: f32,
+    pub tau: f32,
+    pub s_seeds: usize,
+    pub dist: Distribution,
+    /// local ZO gradient steps per round (1 = the paper's method; >1 for
+    /// the Table 3 ablation, splitting the client's data across steps)
+    pub grad_steps: usize,
+}
+
+impl Default for ZoConfig {
+    fn default() -> Self {
+        Self {
+            eps: 1e-4,
+            tau: 0.75,
+            s_seeds: 3,
+            dist: Distribution::Rademacher,
+            grad_steps: 1,
+        }
+    }
+}
+
+/// Full federation config (Algorithm 1's knobs).
+#[derive(Debug, Clone)]
+pub struct FedConfig {
+    /// total clients K
+    pub clients: usize,
+    /// fraction of clients that are high-resource (the "10/90" splits)
+    pub hi_frac: f64,
+    /// total federated rounds N + M
+    pub rounds_total: usize,
+    /// pivot point: rounds of high-resource warm-up (N); ZO thereafter
+    pub pivot: usize,
+    /// clients sampled per warm round (P ⊆ H; clamped to |H|)
+    pub sample_warm: usize,
+    /// clients sampled per ZO round (Q ⊆ K)
+    pub sample_zo: usize,
+    /// local epochs per warm round (paper: 3)
+    pub local_epochs: usize,
+    /// warm-phase minibatch size (paper: 64)
+    pub batch: usize,
+    /// learning rates (client/server × warm/zo, per §A.5)
+    pub lr_client_warm: f32,
+    pub lr_server_warm: f32,
+    pub lr_client_zo: f32,
+    pub lr_server_zo: f32,
+    pub server_opt: ServerOpt,
+    pub zo: ZoConfig,
+    /// evaluate on the test set every this many rounds (always at pivot/end)
+    pub eval_every: usize,
+    /// master seed: drives init, partition, sampling, perturbations
+    pub seed: u64,
+    /// let high-resource clients keep making first-order updates in step 2
+    /// (§A.4 ablation; default false = all-ZO, which the paper finds better)
+    pub mixed_step2: bool,
+}
+
+impl Default for FedConfig {
+    fn default() -> Self {
+        Self {
+            clients: 20,
+            hi_frac: 0.5,
+            rounds_total: 100,
+            pivot: 40,
+            sample_warm: 5,
+            sample_zo: 5,
+            local_epochs: 3,
+            batch: 64,
+            lr_client_warm: 0.05,
+            lr_server_warm: 1.0,
+            lr_client_zo: 1.0,
+            lr_server_zo: 0.05,
+            server_opt: ServerOpt::Sgd,
+            zo: ZoConfig::default(),
+            eval_every: 5,
+            seed: 0,
+            mixed_step2: false,
+        }
+    }
+}
+
+impl FedConfig {
+    /// Number of high-resource clients |H| (at least 1).
+    pub fn hi_count(&self) -> usize {
+        ((self.clients as f64 * self.hi_frac).round() as usize)
+            .clamp(1, self.clients)
+    }
+
+    /// The paper's full protocol: 50 clients, 200 + 300 rounds.
+    pub fn paper_scale(mut self) -> Self {
+        self.clients = 50;
+        self.rounds_total = 500;
+        self.pivot = 200;
+        self.sample_warm = 10;
+        self.sample_zo = 10;
+        self
+    }
+
+    /// Seconds-scale smoke preset (CI / quick checks).
+    pub fn smoke_scale(mut self) -> Self {
+        self.clients = 8;
+        self.rounds_total = 12;
+        self.pivot = 6;
+        self.sample_warm = 3;
+        self.sample_zo = 4;
+        self.local_epochs = 1;
+        self.eval_every = 3;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.clients > 0, "clients must be > 0");
+        anyhow::ensure!(self.pivot <= self.rounds_total, "pivot beyond total rounds");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.hi_frac),
+            "hi_frac must be in [0,1]"
+        );
+        anyhow::ensure!(self.zo.s_seeds > 0, "S must be >= 1");
+        anyhow::ensure!(self.zo.grad_steps > 0, "grad_steps must be >= 1");
+        anyhow::ensure!(self.zo.eps > 0.0, "eps must be > 0");
+        anyhow::ensure!(
+            self.zo.tau > 0.0 && self.zo.tau <= 1.0,
+            "tau must be in (0,1]"
+        );
+        anyhow::ensure!(self.batch > 0, "batch must be > 0");
+        Ok(())
+    }
+
+    /// Apply `--key value` CLI overrides (unknown keys rejected upstream).
+    pub fn apply_args(&mut self, a: &Args) -> anyhow::Result<()> {
+        self.clients = a.usize_or("clients", self.clients)?;
+        self.hi_frac = a.f64_or("hi-frac", self.hi_frac)?;
+        self.rounds_total = a.usize_or("rounds", self.rounds_total)?;
+        self.pivot = a.usize_or("pivot", self.pivot)?;
+        self.sample_warm = a.usize_or("sample-warm", self.sample_warm)?;
+        self.sample_zo = a.usize_or("sample-zo", self.sample_zo)?;
+        self.local_epochs = a.usize_or("local-epochs", self.local_epochs)?;
+        self.batch = a.usize_or("batch", self.batch)?;
+        self.lr_client_warm = a.f64_or("lr-client-warm", self.lr_client_warm as f64)? as f32;
+        self.lr_server_warm = a.f64_or("lr-server-warm", self.lr_server_warm as f64)? as f32;
+        self.lr_client_zo = a.f64_or("lr-client-zo", self.lr_client_zo as f64)? as f32;
+        self.lr_server_zo = a.f64_or("lr-server-zo", self.lr_server_zo as f64)? as f32;
+        self.zo.eps = a.f64_or("eps", self.zo.eps as f64)? as f32;
+        self.zo.tau = a.f64_or("tau", self.zo.tau as f64)? as f32;
+        self.zo.s_seeds = a.usize_or("seeds-s", self.zo.s_seeds)?;
+        self.zo.grad_steps = a.usize_or("grad-steps", self.zo.grad_steps)?;
+        self.eval_every = a.usize_or("eval-every", self.eval_every)?;
+        self.seed = a.usize_or("seed", self.seed as usize)? as u64;
+        self.mixed_step2 = a.bool_or("mixed-step2", self.mixed_step2)?;
+        if let Some(d) = a.get("dist") {
+            self.zo.dist =
+                Distribution::parse(d).ok_or_else(|| anyhow::anyhow!("bad --dist {d:?}"))?;
+        }
+        if let Some(o) = a.get("server-opt") {
+            self.server_opt =
+                ServerOpt::parse(o).ok_or_else(|| anyhow::anyhow!("bad --server-opt {o:?}"))?;
+        }
+        self.validate()
+    }
+
+    /// Load overrides from a JSON config file (flat key/value object using
+    /// the same names as the CLI flags).
+    pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config root must be an object"))?;
+        let mut argv = Vec::new();
+        for (k, v) in obj {
+            argv.push(format!("--{k}"));
+            argv.push(match v {
+                Json::Str(s) => s.clone(),
+                other => other.to_string(),
+            });
+        }
+        let args = Args::parse(&argv)?;
+        self.apply_args(&args)
+    }
+}
+
+/// Data/scale configuration.
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    pub dataset: String, // "synth10" | "synth100" | "lm"
+    pub n_train: usize,
+    pub n_test: usize,
+    pub alpha: f64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "synth10".into(),
+            n_train: 2000,
+            n_test: 500,
+            alpha: 0.1,
+        }
+    }
+}
+
+impl DataConfig {
+    pub fn apply_args(&mut self, a: &Args) -> anyhow::Result<()> {
+        self.dataset = a.str_or("dataset", &self.dataset);
+        self.n_train = a.usize_or("n-train", self.n_train)?;
+        self.n_test = a.usize_or("n-test", self.n_test)?;
+        self.alpha = a.f64_or("alpha", self.alpha)?;
+        Ok(())
+    }
+}
+
+/// Experiment scale presets shared by the exp runners and benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Default,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "smoke" => Some(Scale::Smoke),
+            "default" => Some(Scale::Default),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    pub fn fed(self) -> FedConfig {
+        match self {
+            Scale::Smoke => FedConfig::default().smoke_scale(),
+            Scale::Default => FedConfig::default(),
+            Scale::Paper => FedConfig::default().paper_scale(),
+        }
+    }
+
+    pub fn data(self) -> DataConfig {
+        match self {
+            Scale::Smoke => DataConfig {
+                n_train: 400,
+                n_test: 200,
+                ..Default::default()
+            },
+            Scale::Default => DataConfig::default(),
+            Scale::Paper => DataConfig {
+                n_train: 20_000,
+                n_test: 4_000,
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn seeds(self) -> usize {
+        match self {
+            Scale::Smoke => 1,
+            Scale::Default => 3,
+            Scale::Paper => 5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        FedConfig::default().validate().unwrap();
+        FedConfig::default().paper_scale().validate().unwrap();
+        FedConfig::default().smoke_scale().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_scale_matches_protocol() {
+        let c = FedConfig::default().paper_scale();
+        assert_eq!(c.clients, 50);
+        assert_eq!(c.pivot, 200);
+        assert_eq!(c.rounds_total, 500);
+        assert_eq!(c.zo.s_seeds, 3);
+        assert_eq!(c.zo.tau, 0.75);
+        assert_eq!(c.zo.eps, 1e-4);
+    }
+
+    #[test]
+    fn hi_count_rounds_and_clamps() {
+        let mut c = FedConfig::default();
+        c.clients = 50;
+        c.hi_frac = 0.1;
+        assert_eq!(c.hi_count(), 5);
+        c.hi_frac = 0.0;
+        assert_eq!(c.hi_count(), 1); // at least one high-res client
+        c.hi_frac = 1.0;
+        assert_eq!(c.hi_count(), 50);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let argv: Vec<String> = "--clients 12 --pivot 3 --rounds 9 --tau 0.5 --dist gaussian --server-opt adam"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.clients, 12);
+        assert_eq!(c.pivot, 3);
+        assert_eq!(c.zo.tau, 0.5);
+        assert_eq!(c.zo.dist, Distribution::Gaussian);
+        assert!(matches!(c.server_opt, ServerOpt::Adam { .. }));
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let mut c = FedConfig::default();
+        c.pivot = c.rounds_total + 1;
+        assert!(c.validate().is_err());
+        let mut c = FedConfig::default();
+        c.zo.tau = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_config() {
+        let j = Json::parse(r#"{"clients": 30, "tau": 0.25, "dist": "rademacher"}"#).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.clients, 30);
+        assert_eq!(c.zo.tau, 0.25);
+    }
+
+    #[test]
+    fn scale_presets() {
+        assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
+        assert!(Scale::Smoke.fed().rounds_total < Scale::Default.fed().rounds_total);
+        assert_eq!(Scale::Paper.seeds(), 5);
+    }
+}

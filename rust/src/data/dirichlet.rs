@@ -1,0 +1,176 @@
+//! Dirichlet(α) non-IID partitioner (the paper's split: α = 0.1 over 50
+//! clients, equal sizes).
+//!
+//! Standard label-skew recipe: for each class, draw client proportions
+//! from Dirichlet(α·1_K) and deal that class's samples accordingly, then
+//! rebalance so every client ends up with (approximately) `n/K` samples —
+//! the paper partitions "equally between 50 clients".
+
+use crate::data::synthetic::Dataset;
+use crate::util::rng::Xoshiro256;
+
+/// Index-based partition of a dataset across clients.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// per-client sample indices into the parent dataset
+    pub clients: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn client_sizes(&self) -> Vec<usize> {
+        self.clients.iter().map(|c| c.len()).collect()
+    }
+
+    pub fn total(&self) -> usize {
+        self.clients.iter().map(|c| c.len()).sum()
+    }
+}
+
+/// Dirichlet label-skew split with equal client sizes.
+pub fn dirichlet_split(data: &Dataset, k: usize, alpha: f64, seed: u64) -> Partition {
+    assert!(k > 0);
+    let n = data.len();
+    let per_client = n / k; // equal sizes (paper); remainder dropped
+    let mut rng = Xoshiro256::seed_from(seed ^ 0xD112_1C11);
+
+    // indices by class, shuffled
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.classes];
+    for (i, &y) in data.y.iter().enumerate() {
+        by_class[y as usize].push(i);
+    }
+    for c in &mut by_class {
+        rng.shuffle(c);
+    }
+
+    // per-client class preference vectors
+    let prefs: Vec<Vec<f64>> = (0..k).map(|_| rng.dirichlet(alpha, data.classes)).collect();
+
+    // deal samples: each client fills its quota by drawing classes from its
+    // preference distribution, falling back to whatever is left.
+    let mut clients: Vec<Vec<usize>> = vec![Vec::with_capacity(per_client); k];
+    let mut order: Vec<usize> = (0..k).collect();
+    rng.shuffle(&mut order);
+    for &ci in &order {
+        let pref = &prefs[ci];
+        while clients[ci].len() < per_client {
+            // sample a class from pref restricted to non-empty classes
+            let mut mass: f64 = by_class
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| !v.is_empty())
+                .map(|(c, _)| pref[c])
+                .sum();
+            if mass <= 0.0 {
+                // preference mass exhausted on empty classes: uniform fallback
+                mass = by_class.iter().filter(|v| !v.is_empty()).count() as f64;
+                if mass == 0.0 {
+                    break;
+                }
+                let mut r = rng.next_f64() * mass;
+                for v in by_class.iter_mut() {
+                    if v.is_empty() {
+                        continue;
+                    }
+                    r -= 1.0;
+                    if r <= 0.0 {
+                        clients[ci].push(v.pop().unwrap());
+                        break;
+                    }
+                }
+                continue;
+            }
+            let mut r = rng.next_f64() * mass;
+            for (c, v) in by_class.iter_mut().enumerate() {
+                if v.is_empty() {
+                    continue;
+                }
+                r -= pref[c];
+                if r <= 0.0 {
+                    clients[ci].push(v.pop().unwrap());
+                    break;
+                }
+            }
+        }
+    }
+    Partition { clients }
+}
+
+/// Label histogram for one client (diagnostics + skew tests).
+pub fn label_histogram(data: &Dataset, indices: &[usize]) -> Vec<usize> {
+    let mut h = vec![0usize; data.classes];
+    for &i in indices {
+        h[data.y[i] as usize] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GenConfig, SynthKind};
+
+    fn data() -> Dataset {
+        generate(SynthKind::Synth10, 1000, GenConfig::default())
+    }
+
+    #[test]
+    fn equal_sizes_and_disjoint() {
+        let d = data();
+        let p = dirichlet_split(&d, 10, 0.1, 0);
+        assert_eq!(p.clients.len(), 10);
+        for c in &p.clients {
+            assert_eq!(c.len(), 100);
+        }
+        let mut all: Vec<usize> = p.clients.iter().flatten().cloned().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 1000, "samples must not be shared");
+    }
+
+    #[test]
+    fn low_alpha_is_skewed_high_alpha_flat() {
+        let d = data();
+        let skew_of = |alpha: f64| -> f64 {
+            let p = dirichlet_split(&d, 10, alpha, 1);
+            // mean over clients of (max class share)
+            p.clients
+                .iter()
+                .map(|c| {
+                    let h = label_histogram(&d, c);
+                    *h.iter().max().unwrap() as f64 / c.len() as f64
+                })
+                .sum::<f64>()
+                / 10.0
+        };
+        let low = skew_of(0.1);
+        let high = skew_of(100.0);
+        assert!(low > 0.45, "alpha=0.1 skew {low}");
+        assert!(high < 0.25, "alpha=100 skew {high}");
+        assert!(low > high + 0.2);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let d = data();
+        let a = dirichlet_split(&d, 7, 0.1, 5);
+        let b = dirichlet_split(&d, 7, 0.1, 5);
+        let c = dirichlet_split(&d, 7, 0.1, 6);
+        assert_eq!(a.clients, b.clients);
+        assert_ne!(a.clients, c.clients);
+    }
+
+    #[test]
+    fn handles_more_clients_than_classes() {
+        let d = data();
+        let p = dirichlet_split(&d, 50, 0.1, 2);
+        assert_eq!(p.clients.len(), 50);
+        assert_eq!(p.total(), 1000);
+    }
+
+    #[test]
+    fn single_client_gets_everything() {
+        let d = data();
+        let p = dirichlet_split(&d, 1, 0.1, 3);
+        assert_eq!(p.clients[0].len(), 1000);
+    }
+}

@@ -1,0 +1,223 @@
+//! Client-side data views and padded-batch assembly for `ModelBackend`s.
+
+use std::sync::Arc;
+
+use crate::data::lm::LmData;
+use crate::data::synthetic::{Dataset, SAMPLE_LEN};
+use crate::model::backend::{Batch, BatchX};
+use crate::util::rng::Xoshiro256;
+
+/// Cheap-to-clone handle on the underlying task data.
+#[derive(Clone)]
+pub enum Source {
+    Image(Arc<Dataset>),
+    Lm(Arc<LmData>),
+}
+
+impl Source {
+    pub fn len(&self) -> usize {
+        match self {
+            Source::Image(d) => d.len(),
+            Source::Lm(d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Assemble one batch from sample indices, padded to `bsize` rows with
+    /// zero mask. Image masks are per-sample; LM masks per-token.
+    pub fn batch(&self, indices: &[usize], bsize: usize) -> Batch {
+        assert!(indices.len() <= bsize, "{} > batch {}", indices.len(), bsize);
+        match self {
+            Source::Image(d) => {
+                let mut x = vec![0.0f32; bsize * SAMPLE_LEN];
+                let mut y = vec![0i32; bsize];
+                let mut mask = vec![0.0f32; bsize];
+                for (row, &i) in indices.iter().enumerate() {
+                    x[row * SAMPLE_LEN..(row + 1) * SAMPLE_LEN].copy_from_slice(d.sample(i));
+                    y[row] = d.y[i];
+                    mask[row] = 1.0;
+                }
+                Batch {
+                    x: BatchX::F32(x),
+                    y,
+                    mask,
+                }
+            }
+            Source::Lm(d) => {
+                let t = d.seq;
+                let mut x = vec![0i32; bsize * t];
+                let mut y = vec![0i32; bsize * t];
+                let mut mask = vec![0.0f32; bsize * t];
+                for (row, &i) in indices.iter().enumerate() {
+                    x[row * t..(row + 1) * t].copy_from_slice(d.seq_x(i));
+                    y[row * t..(row + 1) * t].copy_from_slice(d.seq_y(i));
+                    mask[row * t..(row + 1) * t].fill(1.0);
+                }
+                Batch {
+                    x: BatchX::I32(x),
+                    y,
+                    mask,
+                }
+            }
+        }
+    }
+}
+
+/// One client's shard: a view (index list) over the shared source.
+#[derive(Clone)]
+pub struct ClientData {
+    pub source: Source,
+    pub indices: Vec<usize>,
+}
+
+impl ClientData {
+    pub fn n(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Shuffled minibatches for one local epoch (warm phase). The final
+    /// partial batch is padded and mask-corrected.
+    pub fn epoch_batches(&self, bsize: usize, rng: &mut Xoshiro256) -> Vec<Batch> {
+        let mut idx = self.indices.clone();
+        rng.shuffle(&mut idx);
+        idx.chunks(bsize)
+            .map(|chunk| self.source.batch(chunk, bsize))
+            .collect()
+    }
+
+    /// Deterministic full-dataset chunks (ZO phase: one gradient step on
+    /// the client's entire dataset, chunked exactly through the fixed-batch
+    /// backend via loss-sum accumulation).
+    pub fn chunks(&self, bsize: usize) -> Vec<Batch> {
+        self.indices
+            .chunks(bsize)
+            .map(|chunk| self.source.batch(chunk, bsize))
+            .collect()
+    }
+
+    /// A single random minibatch of `take` real samples padded into a
+    /// `bsize`-row batch (FedKSeed local steps; `bsize` must match the
+    /// backend's fixed batch).
+    pub fn minibatch(&self, take: usize, bsize: usize, rng: &mut Xoshiro256) -> Batch {
+        let take = take.min(self.n()).min(bsize);
+        let picks = rng.choose(self.n(), take);
+        let idx: Vec<usize> = picks.into_iter().map(|p| self.indices[p]).collect();
+        self.source.batch(&idx, bsize)
+    }
+}
+
+/// Whole-dataset evaluation view (server-side test set).
+pub fn eval_chunks(source: &Source, bsize: usize) -> Vec<Batch> {
+    let all: Vec<usize> = (0..source.len()).collect();
+    all.chunks(bsize)
+        .map(|chunk| source.batch(chunk, bsize))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::lm;
+    use crate::data::synthetic::{generate, GenConfig, SynthKind};
+
+    fn image_source(n: usize) -> Source {
+        Source::Image(Arc::new(generate(SynthKind::Synth10, n, GenConfig::default())))
+    }
+
+    #[test]
+    fn image_batch_padding_and_mask() {
+        let s = image_source(10);
+        let b = s.batch(&[0, 3, 7], 8);
+        assert_eq!(b.mask, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(b.real_count(), 3.0);
+        if let BatchX::F32(x) = &b.x {
+            assert_eq!(x.len(), 8 * SAMPLE_LEN);
+            assert!(x[3 * SAMPLE_LEN..].iter().all(|&v| v == 0.0));
+        } else {
+            panic!("wrong x type");
+        }
+    }
+
+    #[test]
+    fn lm_batch_layout() {
+        let s = Source::Lm(Arc::new(lm::generate(64, 8, 4, 0)));
+        let b = s.batch(&[1, 2], 4);
+        if let BatchX::I32(x) = &b.x {
+            assert_eq!(x.len(), 32);
+        } else {
+            panic!("wrong x type");
+        }
+        assert_eq!(b.mask[..16], vec![1.0; 16][..]);
+        assert_eq!(b.mask[16..], vec![0.0; 16][..]);
+        assert_eq!(b.real_count(), 16.0); // per-token mask
+    }
+
+    #[test]
+    fn epoch_batches_cover_all_once() {
+        let s = image_source(25);
+        let cd = ClientData {
+            source: s,
+            indices: (0..25).collect(),
+        };
+        let mut rng = Xoshiro256::seed_from(0);
+        let batches = cd.epoch_batches(8, &mut rng);
+        assert_eq!(batches.len(), 4); // 8+8+8+1
+        let total: f64 = batches.iter().map(|b| b.real_count()).sum();
+        assert_eq!(total, 25.0);
+    }
+
+    #[test]
+    fn chunks_deterministic() {
+        let s = image_source(20);
+        let cd = ClientData {
+            source: s,
+            indices: (5..20).collect(),
+        };
+        let a = cd.chunks(4);
+        let b = cd.chunks(4);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.y, y.y);
+        }
+    }
+
+    #[test]
+    fn minibatch_has_no_duplicates() {
+        let s = image_source(30);
+        let cd = ClientData {
+            source: s,
+            indices: (0..30).collect(),
+        };
+        let mut rng = Xoshiro256::seed_from(1);
+        let b = cd.minibatch(16, 16, &mut rng);
+        assert_eq!(b.real_count(), 16.0);
+    }
+
+    #[test]
+    fn minibatch_smaller_shard_pads() {
+        let s = image_source(30);
+        let cd = ClientData {
+            source: s,
+            indices: vec![2, 4, 6],
+        };
+        let mut rng = Xoshiro256::seed_from(2);
+        let b = cd.minibatch(8, 8, &mut rng);
+        assert_eq!(b.real_count(), 3.0);
+        // take < bsize pads the rest
+        let b2 = cd.minibatch(2, 8, &mut rng);
+        assert_eq!(b2.real_count(), 2.0);
+        assert_eq!(b2.mask.len(), 8);
+    }
+
+    #[test]
+    fn eval_chunks_cover_source() {
+        let s = image_source(17);
+        let chunks = eval_chunks(&s, 8);
+        assert_eq!(chunks.len(), 3);
+        let total: f64 = chunks.iter().map(|b| b.real_count()).sum();
+        assert_eq!(total, 17.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data substrate: procedural datasets (CIFAR-10/ImageNet32 substitutes,
+//! Markov LM corpus), the Dirichlet non-IID partitioner, and padded-batch
+//! assembly.
+
+pub mod dirichlet;
+pub mod lm;
+pub mod loader;
+pub mod synthetic;
+
+pub use dirichlet::{dirichlet_split, label_histogram, Partition};
+pub use loader::{eval_chunks, ClientData, Source};
+pub use synthetic::{Dataset, GenConfig, SynthKind};

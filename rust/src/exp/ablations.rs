@@ -1,0 +1,246 @@
+//! Ablation experiments: Table 3 (local ZO gradient steps), Table 6
+//! (Gaussian vs Rademacher variance), Table 7 (mixed vs all-ZO step 2),
+//! Figure 6 (τ sweep), Figure 7 (S sweep).
+
+use crate::config::Scale;
+use crate::data::synthetic::SynthKind;
+use crate::exp::common::{run_method, run_path, Method};
+use crate::metrics::{summarize_accuracies, MdTable};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Distribution;
+use crate::util::stats;
+
+/// Table 3: more local ZO steps per round hurts; τ must shrink with steps
+/// (paper pairs steps {1,2,4,6} with τ {0.75, 0.25, 0.1, 0.01}).
+pub fn table3(scale: Scale) -> anyhow::Result<String> {
+    let pairs: [(usize, f32); 4] = [(1, 0.75), (2, 0.25), (4, 0.1), (6, 0.01)];
+    let splits: [(f64, &str); 3] = [(0.1, "10/90"), (0.5, "50/50"), (0.9, "90/10")];
+    let seeds = scale.seeds();
+    let mut out =
+        String::from("## Table 3 — local ZO gradient steps ablation (accuracy %, mean(std))\n\n");
+    let mut t = MdTable::new(&["steps (τ)", "10/90", "50/50", "90/10"]);
+    let mut csv = CsvWriter::create(
+        run_path("table3.csv"),
+        &["steps", "tau", "split", "seed", "final_acc"],
+    )?;
+    for (steps, tau) in pairs {
+        let mut cells = vec![format!("{steps} ({tau})")];
+        for (hi_frac, label) in splits {
+            let mut accs = Vec::new();
+            for seed in 0..seeds {
+                let mut cfg = scale.fed();
+                cfg.hi_frac = hi_frac;
+                cfg.seed = seed as u64;
+                cfg.zo.grad_steps = steps;
+                cfg.zo.tau = tau;
+                let data = scale.data();
+                let log = run_method(Method::ZoWarmup, SynthKind::Synth10, &data, &cfg)?;
+                accs.push(log.final_accuracy());
+                csv.row(&[
+                    steps.to_string(),
+                    tau.to_string(),
+                    label.to_string(),
+                    seed.to_string(),
+                    format!("{:.4}", accs.last().unwrap()),
+                ])?;
+            }
+            cells.push(summarize_accuracies(&accs));
+        }
+        t.row(cells);
+    }
+    csv.flush()?;
+    out.push_str(&t.render());
+    out.push_str("\nExpected shape: 1 step best; more steps degrade (client drift × ZO noise).\n");
+    Ok(out)
+}
+
+/// Table 6 (§A.1): Rademacher vs Gaussian — mean/std of final accuracy and
+/// of δ_lo = acc(after ZO) − acc(at pivot), over many seeds.
+pub fn table6(scale: Scale) -> anyhow::Result<String> {
+    let n_seeds = match scale {
+        Scale::Smoke => 4,
+        Scale::Default => 8,
+        Scale::Paper => 12, // the paper's 12 seeds
+    };
+    let mut out = String::from("## Table 6 — perturbation distribution variance (§A.1)\n\n");
+    let mut t = MdTable::new(&["Distribution", "Acc", "StdDev", "δ_lo", "StdDev(δ)"]);
+    let mut csv = CsvWriter::create(
+        run_path("table6.csv"),
+        &["dist", "seed", "acc_final", "acc_pivot", "delta_lo"],
+    )?;
+    for (dist, label) in [
+        (Distribution::Gaussian, "N(0,1)"),
+        (Distribution::Rademacher, "Rademacher"),
+    ] {
+        let mut accs = Vec::new();
+        let mut deltas = Vec::new();
+        for seed in 0..n_seeds {
+            let mut cfg = scale.fed();
+            cfg.hi_frac = 0.1;
+            cfg.seed = seed as u64;
+            cfg.zo.dist = dist;
+            let data = scale.data();
+            let log = run_method(Method::ZoWarmup, SynthKind::Synth10, &data, &cfg)?;
+            let curve = log.accuracy_curve();
+            let at_pivot = curve
+                .iter()
+                .filter(|(r, _)| *r < cfg.pivot)
+                .map(|(_, a)| *a)
+                .last()
+                .unwrap_or(0.0);
+            let final_acc = log.final_accuracy();
+            accs.push(final_acc * 100.0);
+            deltas.push((final_acc - at_pivot) * 100.0);
+            csv.row(&[
+                label.to_string(),
+                seed.to_string(),
+                format!("{final_acc:.4}"),
+                format!("{at_pivot:.4}"),
+                format!("{:.4}", final_acc - at_pivot),
+            ])?;
+        }
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", stats::mean(&accs)),
+            format!("{:.1}", stats::std_dev(&accs)),
+            format!("{:.1}", stats::mean(&deltas)),
+            format!("{:.1}", stats::std_dev(&deltas)),
+        ]);
+    }
+    csv.flush()?;
+    out.push_str(&t.render());
+    out.push_str("\nExpected shape: Rademacher has lower variance and better accuracy.\n");
+    Ok(out)
+}
+
+/// Table 7 (§A.4): all-ZO step 2 vs letting high-res clients continue FO.
+pub fn table7(scale: Scale) -> anyhow::Result<String> {
+    let splits: [(f64, &str); 3] = [(0.1, "10/90"), (0.5, "50/50"), (0.9, "90/10")];
+    let seeds = scale.seeds();
+    let mut out = String::from("## Table 7 — combining high & low resource updates (§A.4)\n\n");
+    let mut t = MdTable::new(&["Method", "10/90", "50/50", "90/10"]);
+    for (method, label) in [
+        (Method::ZoWarmupMixed, "ZOWarmUp (hi+lo)"),
+        (Method::ZoWarmup, "ZOWarmUp (lo only)"),
+    ] {
+        let mut cells = vec![label.to_string()];
+        for (hi_frac, _lab) in splits {
+            let mut accs = Vec::new();
+            for seed in 0..seeds {
+                let mut cfg = scale.fed();
+                cfg.hi_frac = hi_frac;
+                cfg.seed = seed as u64;
+                let data = scale.data();
+                let log = run_method(method, SynthKind::Synth10, &data, &cfg)?;
+                accs.push(log.final_accuracy());
+            }
+            cells.push(summarize_accuracies(&accs));
+        }
+        t.row(cells);
+    }
+    out.push_str(&t.render());
+    out.push_str("\nExpected shape: enforcing ZO for everyone in step 2 does better.\n");
+    Ok(out)
+}
+
+/// Figure 6 (§A.2): final accuracy as a function of τ for both
+/// distributions.
+pub fn fig6(scale: Scale) -> anyhow::Result<String> {
+    let taus = [0.75f32, 0.5, 0.25, 0.1];
+    let seeds = scale.seeds();
+    let mut out = String::from("## Figure 6 — accuracy vs τ (§A.2)\n\n");
+    let mut t = MdTable::new(&["τ", "Rademacher", "Gaussian"]);
+    let mut csv = CsvWriter::create(
+        run_path("fig6.csv"),
+        &["tau", "dist", "seed", "final_acc"],
+    )?;
+    for tau in taus {
+        let mut cells = vec![format!("{tau}")];
+        for dist in [Distribution::Rademacher, Distribution::Gaussian] {
+            let mut accs = Vec::new();
+            for seed in 0..seeds {
+                let mut cfg = scale.fed();
+                cfg.hi_frac = 0.1;
+                cfg.seed = seed as u64;
+                cfg.zo.tau = tau;
+                cfg.zo.dist = dist;
+                let data = scale.data();
+                let log = run_method(Method::ZoWarmup, SynthKind::Synth10, &data, &cfg)?;
+                accs.push(log.final_accuracy());
+                csv.row(&[
+                    tau.to_string(),
+                    format!("{dist:?}"),
+                    seed.to_string(),
+                    format!("{:.4}", accs.last().unwrap()),
+                ])?;
+            }
+            cells.push(summarize_accuracies(&accs));
+        }
+        t.row(cells);
+    }
+    csv.flush()?;
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+/// Figure 7 (§A.2): variance across seeds shrinks as S grows.
+pub fn fig7(scale: Scale) -> anyhow::Result<String> {
+    let s_values = [1usize, 3, 9];
+    let n_seeds = scale.seeds().max(3);
+    let mut out = String::from("## Figure 7 — variance vs S (§A.2)\n\n");
+    let mut t = MdTable::new(&["S", "mean acc %", "std over seeds", "per-seed accs"]);
+    for s in s_values {
+        let mut accs = Vec::new();
+        for seed in 0..n_seeds {
+            let mut cfg = scale.fed();
+            cfg.hi_frac = 0.1;
+            cfg.seed = seed as u64;
+            cfg.zo.s_seeds = s;
+            let data = scale.data();
+            let log = run_method(Method::ZoWarmup, SynthKind::Synth10, &data, &cfg)?;
+            accs.push(log.final_accuracy() * 100.0);
+        }
+        t.row(vec![
+            s.to_string(),
+            format!("{:.1}", stats::mean(&accs)),
+            format!("{:.2}", stats::std_dev(&accs)),
+            format!("{accs:.1?}"),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("\nExpected shape: higher S -> higher mean, lower spread, diminishing returns.\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_smoke() {
+        let md = table3(Scale::Smoke).unwrap();
+        assert!(md.contains("1 (0.75)"));
+        assert!(md.contains("6 (0.01)"));
+    }
+
+    #[test]
+    fn table6_smoke() {
+        let md = table6(Scale::Smoke).unwrap();
+        assert!(md.contains("Rademacher"));
+        assert!(md.contains("N(0,1)"));
+    }
+
+    #[test]
+    fn table7_smoke() {
+        let md = table7(Scale::Smoke).unwrap();
+        assert!(md.contains("hi+lo"));
+        assert!(md.contains("lo only"));
+    }
+
+    #[test]
+    fn fig7_smoke() {
+        let md = fig7(Scale::Smoke).unwrap();
+        assert!(md.contains("| 1 |"));
+        assert!(md.contains("| 9 |"));
+    }
+}

@@ -1,0 +1,65 @@
+//! Experiment runners — one per paper table/figure (DESIGN.md §4).
+//!
+//! Dispatch: `zowarmup exp <id> [--scale smoke|default|paper]`. Every
+//! runner returns a Markdown report (appended to runs/report.md) and
+//! writes raw CSVs under runs/.
+
+pub mod ablations;
+pub mod common;
+pub mod curves;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod table5;
+
+use crate::config::Scale;
+use crate::data::synthetic::SynthKind;
+
+pub const ALL_IDS: [&str; 12] = [
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7", "fig3", "fig4",
+    "fig5", "fig6", "fig7",
+];
+
+/// Run one experiment by id; returns the Markdown report.
+pub fn run(id: &str, scale: Scale, artifacts_dir: &str) -> anyhow::Result<String> {
+    let both = [SynthKind::Synth10, SynthKind::Synth100];
+    let one = [SynthKind::Synth10];
+    let datasets: &[SynthKind] = if scale == Scale::Smoke { &one } else { &both };
+    match id {
+        "table1" => table1::run(scale, artifacts_dir),
+        "table2" => table2::run(scale, datasets),
+        "table3" => ablations::table3(scale),
+        "table4" => table2::run_table4(scale, datasets),
+        "table5" => table5::run(scale, artifacts_dir),
+        "table6" => ablations::table6(scale),
+        "table7" => ablations::table7(scale),
+        "fig3" => curves::fig3(scale),
+        "fig4" => curves::fig4(scale),
+        "fig5" => fig5::run(scale, artifacts_dir),
+        "fig6" => ablations::fig6(scale),
+        "fig7" => ablations::fig7(scale),
+        "all" => {
+            let mut out = String::new();
+            for id in ALL_IDS {
+                eprintln!("[exp] running {id} at {scale:?} scale...");
+                out.push_str(&run(id, scale, artifacts_dir)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        _ => anyhow::bail!(
+            "unknown experiment {id:?}; available: {:?} or \"all\"",
+            ALL_IDS
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("table99", Scale::Smoke, "artifacts").is_err());
+    }
+}

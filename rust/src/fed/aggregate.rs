@@ -1,0 +1,140 @@
+//! Server-side aggregation: n-weighted FedAvg and the FedAdam server
+//! optimizer (Reddi et al., 2020; the paper's §4.4 comparison).
+
+use crate::config::ServerOpt;
+use crate::model::params::ParamVec;
+
+/// n-weighted average of client weight vectors (Algorithm 1 line 7).
+pub fn weighted_average(updates: &[(ParamVec, f64)]) -> ParamVec {
+    assert!(!updates.is_empty(), "no updates to aggregate");
+    let dim = updates[0].0.dim();
+    let total: f64 = updates.iter().map(|(_, w)| *w).sum();
+    assert!(total > 0.0, "zero total weight");
+    let mut out = ParamVec::zeros(dim);
+    for (p, w) in updates {
+        assert_eq!(p.dim(), dim, "dim mismatch in aggregation");
+        out.axpy((w / total) as f32, p);
+    }
+    out
+}
+
+/// Server optimizer state: consumes the aggregated *pseudo-gradient*
+/// Δ = avg(w_i) − w_global and steps the global weights.
+#[derive(Debug, Clone)]
+pub enum ServerOptState {
+    Sgd,
+    Adam {
+        beta1: f64,
+        beta2: f64,
+        eps: f64,
+        m: Vec<f64>,
+        v: Vec<f64>,
+        t: u64,
+    },
+}
+
+impl ServerOptState {
+    pub fn new(opt: ServerOpt, dim: usize) -> Self {
+        match opt {
+            ServerOpt::Sgd => ServerOptState::Sgd,
+            ServerOpt::Adam { beta1, beta2, eps } => ServerOptState::Adam {
+                beta1,
+                beta2,
+                eps,
+                m: vec![0.0; dim],
+                v: vec![0.0; dim],
+                t: 0,
+            },
+        }
+    }
+
+    /// global ← global + step(lr, Δ). For SGD this is `global += lr·Δ`
+    /// (lr = 1 recovers plain FedAvg); for Adam, Δ plays the role of the
+    /// negative gradient as in Reddi et al.
+    pub fn apply(&mut self, global: &mut ParamVec, delta: &ParamVec, lr: f32) {
+        match self {
+            ServerOptState::Sgd => global.axpy(lr, delta),
+            ServerOptState::Adam {
+                beta1,
+                beta2,
+                eps,
+                m,
+                v,
+                t,
+            } => {
+                *t += 1;
+                let bc1 = 1.0 - beta1.powi(*t as i32);
+                let bc2 = 1.0 - beta2.powi(*t as i32);
+                for i in 0..global.dim() {
+                    let g = delta.0[i] as f64;
+                    m[i] = *beta1 * m[i] + (1.0 - *beta1) * g;
+                    v[i] = *beta2 * v[i] + (1.0 - *beta2) * g * g;
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    global.0[i] += (lr as f64 * mhat / (vhat.sqrt() + *eps)) as f32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_average_respects_weights() {
+        let a = ParamVec(vec![0.0, 0.0]);
+        let b = ParamVec(vec![4.0, 8.0]);
+        let avg = weighted_average(&[(a, 3.0), (b, 1.0)]);
+        assert_eq!(avg.0, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn single_update_is_identity() {
+        let a = ParamVec(vec![1.5, -2.0]);
+        let avg = weighted_average(&[(a.clone(), 7.0)]);
+        assert_eq!(avg, a);
+    }
+
+    #[test]
+    #[should_panic(expected = "no updates")]
+    fn empty_aggregation_panics() {
+        weighted_average(&[]);
+    }
+
+    #[test]
+    fn sgd_server_is_fedavg_at_lr1() {
+        let mut opt = ServerOptState::new(ServerOpt::Sgd, 2);
+        let mut global = ParamVec(vec![1.0, 1.0]);
+        let delta = ParamVec(vec![0.5, -0.5]); // avg(w_i) − w
+        opt.apply(&mut global, &delta, 1.0);
+        assert_eq!(global.0, vec![1.5, 0.5]);
+    }
+
+    #[test]
+    fn adam_steps_toward_delta_sign() {
+        let mut opt = ServerOptState::new(ServerOpt::adam(), 3);
+        let mut global = ParamVec(vec![0.0; 3]);
+        let delta = ParamVec(vec![1.0, -1.0, 0.0]);
+        for _ in 0..10 {
+            opt.apply(&mut global, &delta, 0.01);
+        }
+        assert!(global.0[0] > 0.0);
+        assert!(global.0[1] < 0.0);
+        assert_eq!(global.0[2], 0.0);
+        // Adam normalizes magnitudes: |step| ≈ lr per iteration
+        assert!((global.0[0] - 0.1).abs() < 0.02, "{}", global.0[0]);
+    }
+
+    #[test]
+    fn adam_state_persists_momentum() {
+        let mut opt = ServerOptState::new(ServerOpt::adam(), 1);
+        let mut g1 = ParamVec(vec![0.0]);
+        opt.apply(&mut g1, &ParamVec(vec![1.0]), 0.1);
+        // after a +1 delta, a zero delta still moves (momentum)
+        let before = g1.0[0];
+        opt.apply(&mut g1, &ParamVec(vec![0.0]), 0.1);
+        assert!(g1.0[0] > before);
+    }
+}

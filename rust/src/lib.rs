@@ -1,0 +1,30 @@
+//! # ZOWarmUp — zeroth-order federated pre-training with low-resource clients
+//!
+//! Rust + JAX + Pallas reproduction of *"Warming Up for Zeroth-Order
+//! Federated Pre-Training with Low Resource Clients"* (Legate, Rish,
+//! Belilovsky, 2025). See DESIGN.md for the architecture and the
+//! per-experiment index, EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * [`runtime`] — PJRT client executing AOT HLO-text artifacts (L2/L1
+//!   compiled from `python/compile/`).
+//! * [`fed`] — the coordinator: Algorithm 1's two-phase loop, FedAvg /
+//!   FedAdam aggregation, and the seed-based SPSA protocol.
+//! * [`zo`] — SPSA estimation and seed bookkeeping.
+//! * [`baselines`] — HeteroFL, FedKSeed, High-Res-Only comparators.
+//! * [`data`] — procedural datasets + Dirichlet partitioner.
+//! * [`comm`] — measured byte accounting + the eq. 4/5 analytic cost model.
+//! * [`exp`] — runners that regenerate every paper table and figure.
+//! * [`util`] — offline substrates (RNG, JSON, CLI, bench, property tests).
+
+pub mod baselines;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod fed;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod util;
+pub mod zo;

@@ -1,0 +1,211 @@
+//! `zowarmup` — the leader entrypoint / CLI launcher.
+//!
+//! Subcommands:
+//!   train   — run one federated training job (ZOWarmUp by default)
+//!   exp     — regenerate a paper table/figure (see DESIGN.md §4)
+//!   comm    — print the Table 1 cost model
+//!   check   — validate artifacts/manifest.json and compile every artifact
+
+use zowarmup::config::{DataConfig, FedConfig, Scale};
+use zowarmup::data::synthetic::SynthKind;
+use zowarmup::exp;
+use zowarmup::exp::common::{image_setup, linear_lrs, run_path};
+use zowarmup::fed::server::Federation;
+use zowarmup::model::backend::ModelBackend;
+use zowarmup::model::manifest::Manifest;
+use zowarmup::model::params::ParamVec;
+use zowarmup::runtime::Engine;
+use zowarmup::util::cli::Args;
+use zowarmup::util::json::Json;
+
+const USAGE: &str = "\
+zowarmup — zeroth-order federated pre-training (paper reproduction)
+
+USAGE: zowarmup <subcommand> [flags]
+
+SUBCOMMANDS
+  train   run one federated training job
+            --backend linear|xla       (default linear)
+            --model cnn10|vit10|...    (xla backend; default cnn10)
+            --dataset synth10|synth100 --n-train N --n-test N --alpha A
+            --clients K --hi-frac F --rounds R --pivot P
+            --seeds-s S --tau T --eps E --dist rademacher|gaussian
+            --server-opt sgd|adam --config file.json --out runs/train.csv
+  exp     regenerate a paper table/figure
+            zowarmup exp <table1..table7|fig3..fig7|all> [--scale smoke|default|paper]
+  comm    print the Table 1 communication/memory cost model
+  check   validate the artifact manifest and compile all artifacts
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("comm") => cmd_comm(&args),
+        Some("check") => cmd_check(&args),
+        Some(other) => {
+            eprintln!("{USAGE}");
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn load_cfg(args: &Args) -> anyhow::Result<(FedConfig, DataConfig)> {
+    let mut cfg = match Scale::parse(&args.str_or("scale", "default")) {
+        Some(s) => s.fed(),
+        None => anyhow::bail!("bad --scale"),
+    };
+    let mut data = DataConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        cfg.apply_json(&json)?;
+    }
+    cfg.apply_args(args)?;
+    data.apply_args(args)?;
+    Ok((cfg, data))
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let backend_kind = args.str_or("backend", "linear");
+    let (mut cfg, data) = load_cfg(args)?;
+    let out = args.str_or("out", &run_path("train.csv"));
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let model = args.str_or("model", "cnn10");
+    args.reject_unknown()?;
+
+    let kind = SynthKind::parse(&data.dataset)
+        .ok_or_else(|| anyhow::anyhow!("bad --dataset {:?}", data.dataset))?;
+
+    match backend_kind.as_str() {
+        "linear" => {
+            linear_lrs(&mut cfg);
+            // re-apply CLI lr overrides on top of the preset
+            cfg.apply_args(args)?;
+            let s = image_setup(kind, &data, &cfg);
+            let init = ParamVec::zeros(s.backend.dim());
+            let mut fed = Federation::new(cfg, &s.backend, s.shards, s.test, init)?;
+            run_and_report(&mut fed, &out)
+        }
+        "xla" => {
+            let manifest = Manifest::load(&artifacts)?;
+            let engine = Engine::cpu()?;
+            let backend = engine.backend(&manifest, &model)?;
+            let entry = manifest.model(&model)?;
+            anyhow::ensure!(
+                entry.classes == kind.classes(),
+                "model {model} has {} classes but dataset {} has {}",
+                entry.classes,
+                data.dataset,
+                kind.classes()
+            );
+            cfg.batch = entry.batch;
+            let s = image_setup(kind, &data, &cfg);
+            let init = ParamVec::he_init(entry, cfg.seed);
+            let mut fed = Federation::new(cfg, &backend, s.shards, s.test, init)?;
+            run_and_report(&mut fed, &out)
+        }
+        other => anyhow::bail!("bad --backend {other:?} (linear|xla)"),
+    }
+}
+
+fn run_and_report<B: ModelBackend>(
+    fed: &mut Federation<'_, B>,
+    out: &str,
+) -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    println!(
+        "training: {} clients ({} high-res), {} rounds (pivot {}), d={}",
+        fed.cfg.clients,
+        fed.cfg.hi_count(),
+        fed.cfg.rounds_total,
+        fed.cfg.pivot,
+        fed.backend.dim()
+    );
+    while fed.round < fed.cfg.rounds_total {
+        fed.step()?;
+        let r = fed.log.rounds.last().unwrap();
+        if !r.test_acc.is_nan() {
+            println!(
+                "round {:4} [{}] train {:8.4}  test acc {:5.1}%  loss {:.4}",
+                r.round,
+                r.phase.as_str(),
+                r.train_loss,
+                r.test_acc * 100.0,
+                r.test_loss
+            );
+        }
+    }
+    fed.log.write_csv(out)?;
+    let (up, down) = fed.log.total_bytes();
+    println!(
+        "done in {:.1}s: final acc {:.2}% best {:.2}% | comm up {:.3} MB down {:.3} MB | log {out}",
+        t0.elapsed().as_secs_f64(),
+        fed.log.final_accuracy() * 100.0,
+        fed.log.best_accuracy() * 100.0,
+        up as f64 / 1e6,
+        down as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let scale = Scale::parse(&args.str_or("scale", "smoke"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scale"))?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.reject_unknown()?;
+    let report = exp::run(&id, scale, &artifacts)?;
+    println!("{report}");
+    let path = run_path(&format!("report_{id}.md"));
+    std::fs::write(&path, &report)?;
+    eprintln!("[exp] report written to {path}");
+    Ok(())
+}
+
+fn cmd_comm(args: &Args) -> anyhow::Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.reject_unknown()?;
+    let report = exp::table1::run(Scale::Smoke, &artifacts)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> anyhow::Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.reject_unknown()?;
+    let manifest = Manifest::load(&artifacts)?;
+    manifest.validate()?;
+    println!("manifest: {} models, layouts consistent", manifest.models.len());
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    for (name, entry) in &manifest.models {
+        for ep in entry.artifacts.keys() {
+            let path = entry.artifact_path(&manifest.dir, ep)?;
+            let t0 = std::time::Instant::now();
+            engine.compile(&path)?;
+            println!(
+                "  compiled {name}/{ep} ({:.2}s)",
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    println!("all artifacts compile: OK");
+    Ok(())
+}

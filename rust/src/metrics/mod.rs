@@ -1,0 +1,206 @@
+//! Round-level metrics, CSV export and multi-seed summaries.
+
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+
+/// Training phase of a round (Algorithm 1's two steps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Warm,
+    Zo,
+}
+
+impl Phase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Warm => "warm",
+            Phase::Zo => "zo",
+        }
+    }
+}
+
+/// One federated round's record.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub phase: Phase,
+    /// mean training loss over participating clients (pre-update)
+    pub train_loss: f64,
+    /// test metrics (NaN when the round was not evaluated)
+    pub test_acc: f64,
+    pub test_loss: f64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub wall_ms: f64,
+}
+
+/// Full run history.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunLog {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    /// Last evaluated test accuracy (the headline number).
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .find(|r| !r.test_acc.is_nan())
+            .map(|r| r.test_acc)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Best test accuracy over the run.
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| r.test_acc)
+            .fold(f64::NAN, f64::max)
+    }
+
+    pub fn total_bytes(&self) -> (u64, u64) {
+        (
+            self.rounds.iter().map(|r| r.bytes_up).sum(),
+            self.rounds.iter().map(|r| r.bytes_down).sum(),
+        )
+    }
+
+    /// Accuracy series (round, acc) at evaluated rounds — figure data.
+    pub fn accuracy_curve(&self) -> Vec<(usize, f64)> {
+        self.rounds
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| (r.round, r.test_acc))
+            .collect()
+    }
+
+    pub fn write_csv(&self, path: &str) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "round", "phase", "train_loss", "test_acc", "test_loss", "bytes_up",
+                "bytes_down", "wall_ms",
+            ],
+        )?;
+        for r in &self.rounds {
+            w.row(&[
+                r.round.to_string(),
+                r.phase.as_str().to_string(),
+                format!("{:.6}", r.train_loss),
+                format!("{:.6}", r.test_acc),
+                format!("{:.6}", r.test_loss),
+                r.bytes_up.to_string(),
+                r.bytes_down.to_string(),
+                format!("{:.3}", r.wall_ms),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+/// Multi-seed cell: the paper's "mean(std)" aggregation (accuracies in %).
+pub fn summarize_accuracies(accs_frac: &[f64]) -> String {
+    let pct: Vec<f64> = accs_frac.iter().map(|a| a * 100.0).collect();
+    stats::mean_std_cell(&pct)
+}
+
+/// Markdown table builder shared by all exp runners.
+pub struct MdTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.header.len())
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            phase: Phase::Warm,
+            train_loss: 1.0,
+            test_acc: acc,
+            test_loss: 1.0,
+            bytes_up: 10,
+            bytes_down: 20,
+            wall_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn final_and_best_accuracy_skip_nan() {
+        let mut log = RunLog::default();
+        log.push(rec(0, 0.3));
+        log.push(rec(1, f64::NAN));
+        log.push(rec(2, 0.5));
+        log.push(rec(3, f64::NAN));
+        assert_eq!(log.final_accuracy(), 0.5);
+        assert_eq!(log.best_accuracy(), 0.5);
+        assert_eq!(log.accuracy_curve(), vec![(0, 0.3), (2, 0.5)]);
+        assert_eq!(log.total_bytes(), (40, 80));
+    }
+
+    #[test]
+    fn empty_log_is_nan() {
+        assert!(RunLog::default().final_accuracy().is_nan());
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut log = RunLog::default();
+        log.push(rec(0, 0.25));
+        let path = std::env::temp_dir().join("zow_metrics_test.csv");
+        log.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,phase,"));
+        assert!(text.contains("0,warm,1.000000,0.250000"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn summary_format() {
+        assert_eq!(summarize_accuracies(&[0.543, 0.543]), "54.3(0.0)");
+    }
+
+    #[test]
+    fn md_table() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.render();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+}

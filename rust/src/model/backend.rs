@@ -1,0 +1,465 @@
+//! `ModelBackend`: the uniform compute interface the federated layer
+//! drives. Two implementations:
+//!
+//! * [`crate::runtime::XlaBackend`] — executes the AOT HLO artifacts on the
+//!   PJRT CPU client (the production path).
+//! * [`LinearBackend`] — an analytic softmax-regression model implemented
+//!   host-side. Same trait, no artifacts: it makes the full federated stack
+//!   (sampling, pivot, SPSA protocol, baselines) testable and lets the big
+//!   experiment sweeps run at tractable wall-clock on a 1-core testbed
+//!   (DESIGN.md §4; the e2e example and fig3 use the XLA CNN).
+//!
+//! All losses are *sums* over the batch (with a padding mask) so a client's
+//! full dataset can be chunked through a fixed-batch backend exactly.
+
+use crate::model::params::ParamVec;
+use crate::util::rng::Distribution;
+
+/// Input tensor for one padded batch. Image models consume `F32` (NHWC
+/// flattened), the LM consumes `I32` token ids.
+#[derive(Debug, Clone)]
+pub enum BatchX {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl BatchX {
+    pub fn len(&self) -> usize {
+        match self {
+            BatchX::F32(v) => v.len(),
+            BatchX::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One padded batch: exactly `backend.batch_size()` rows, with `mask`
+/// zeroing the padding rows (mask may be per-sample or per-token).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: BatchX,
+    pub y: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl Batch {
+    /// Number of real (unmasked) loss rows.
+    pub fn real_count(&self) -> f64 {
+        self.mask.iter().map(|&m| m as f64).sum()
+    }
+}
+
+/// Loss/accuracy sums over one batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LossSums {
+    pub loss_sum: f64,
+    pub correct: f64,
+    pub count: f64,
+}
+
+impl LossSums {
+    pub fn add(&mut self, other: LossSums) {
+        self.loss_sum += other.loss_sum;
+        self.correct += other.correct;
+        self.count += other.count;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.count > 0.0 {
+            self.loss_sum / self.count
+        } else {
+            0.0
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.count > 0.0 {
+            self.correct / self.count
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The uniform compute interface (see module docs).
+pub trait ModelBackend {
+    /// Flat parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Fixed batch size every call must be padded to.
+    fn batch_size(&self) -> usize;
+
+    /// Forward pass: masked loss/correct sums.
+    fn fwd_loss(&self, params: &ParamVec, batch: &Batch) -> anyhow::Result<LossSums>;
+
+    /// One SGD step on the masked *mean* loss; returns pre-step sums.
+    fn sgd_step(
+        &self,
+        params: &mut ParamVec,
+        batch: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<LossSums>;
+
+    /// SPSA numerator ΔL = L(w+cz) − L(w−cz) for z = dist(seed) (z carries
+    /// τ via `tau`; `c = eps`). Default: host-side perturbation + two
+    /// forward passes — the genuinely low-memory path (only one perturbed
+    /// copy of w alive at a time). Backends may override with a fused
+    /// in-graph version.
+    fn zo_delta(
+        &self,
+        params: &ParamVec,
+        batch: &Batch,
+        seed: u64,
+        eps: f32,
+        tau: f32,
+        dist: Distribution,
+    ) -> anyhow::Result<f64> {
+        let mut w = params.clone();
+        w.perturb_axpy(seed, tau, dist, eps);
+        let plus = self.fwd_loss(&w, batch)?;
+        // flip to the minus side in-place: w + εz − 2εz = w − εz
+        w.perturb_axpy(seed, tau, dist, -2.0 * eps);
+        let minus = self.fwd_loss(&w, batch)?;
+        Ok(plus.loss_sum - minus.loss_sum)
+    }
+}
+
+/// Analytic softmax regression over flattened features (see module docs).
+///
+/// params layout: W [classes, features] row-major, then b [classes].
+/// `row_stride` is the feature count carried by the batch layout;
+/// `pool > 1` average-pools the raw NHWC row (assumed square, 3-channel)
+/// before the dot product — shrinking `d` both speeds the sweeps and keeps
+/// SPSA's √d noise in a regime comparable to the paper's tuned setup.
+/// `features <= pooled_len` lets a width-sliced sub-network (HeteroFL's
+/// half model) consume the same batches while using only a feature prefix.
+pub struct LinearBackend {
+    pub features: usize,
+    pub row_stride: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub pool: usize,
+}
+
+impl LinearBackend {
+    pub fn new(features: usize, classes: usize, batch: usize) -> Self {
+        Self {
+            features,
+            row_stride: features,
+            classes,
+            batch,
+            pool: 1,
+        }
+    }
+
+    /// Average-pooled probe over raw NHWC rows of `row_stride` floats
+    /// (img×img×3): features = (img/pool)²·3.
+    pub fn pooled(row_stride: usize, pool: usize, classes: usize, batch: usize) -> Self {
+        let img = ((row_stride / 3) as f64).sqrt() as usize;
+        assert_eq!(img * img * 3, row_stride, "row is not square NHWC");
+        assert_eq!(img % pool, 0, "pool must divide img");
+        let features = (img / pool) * (img / pool) * 3;
+        Self {
+            features,
+            row_stride,
+            classes,
+            batch,
+            pool,
+        }
+    }
+
+    /// Width-sliced variant: consume only the first `features` of the
+    /// (pooled) feature vector.
+    pub fn sliced(base: &LinearBackend, features: usize) -> Self {
+        assert!(features <= base.features);
+        Self {
+            features,
+            row_stride: base.row_stride,
+            classes: base.classes,
+            batch: base.batch,
+            pool: base.pool,
+        }
+    }
+
+    /// Pooled feature view of one row (identity when pool == 1).
+    fn features_of<'a>(&self, x: &'a [f32], row: usize, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        let raw = &x[row * self.row_stride..(row + 1) * self.row_stride];
+        if self.pool == 1 {
+            return &raw[..self.features.min(raw.len())];
+        }
+        let img = ((self.row_stride / 3) as f64).sqrt() as usize;
+        let out_img = img / self.pool;
+        scratch.clear();
+        scratch.resize(out_img * out_img * 3, 0.0);
+        let inv = 1.0 / (self.pool * self.pool) as f32;
+        for py in 0..img {
+            for px in 0..img {
+                let oy = py / self.pool;
+                let ox = px / self.pool;
+                for ch in 0..3 {
+                    scratch[(oy * out_img + ox) * 3 + ch] +=
+                        raw[(py * img + px) * 3 + ch] * inv;
+                }
+            }
+        }
+        &scratch[..self.features]
+    }
+
+    fn logits(&self, params: &ParamVec, x: &[f32], row: usize, scratch: &mut Vec<f32>) -> Vec<f64> {
+        let (f, c) = (self.features, self.classes);
+        let mut out = vec![0.0f64; c];
+        let xs = self.features_of(x, row, scratch);
+        for (k, o) in out.iter_mut().enumerate() {
+            let wrow = &params.0[k * f..(k + 1) * f];
+            let mut acc = 0.0f64;
+            for (w, v) in wrow.iter().zip(xs) {
+                acc += (*w as f64) * (*v as f64);
+            }
+            *o = acc + params.0[c * f + k] as f64;
+        }
+        out
+    }
+}
+
+fn softmax_stats(logits: &[f64], y: i32) -> (f64, bool, Vec<f64>) {
+    let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&l| (l - max).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    let probs: Vec<f64> = exps.iter().map(|e| e / z).collect();
+    let loss = z.ln() + max - logits[y as usize];
+    let argmax = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    (loss, argmax == y as usize, probs)
+}
+
+impl ModelBackend for LinearBackend {
+    fn dim(&self) -> usize {
+        self.classes * self.features + self.classes
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn fwd_loss(&self, params: &ParamVec, batch: &Batch) -> anyhow::Result<LossSums> {
+        let x = match &batch.x {
+            BatchX::F32(v) => v,
+            _ => anyhow::bail!("LinearBackend expects f32 features"),
+        };
+        let mut out = LossSums::default();
+        let mut scratch = Vec::new();
+        for row in 0..batch.mask.len() {
+            let m = batch.mask[row] as f64;
+            if m == 0.0 {
+                continue;
+            }
+            let logits = self.logits(params, x, row, &mut scratch);
+            let (loss, correct, _) = softmax_stats(&logits, batch.y[row]);
+            out.loss_sum += m * loss;
+            out.correct += m * if correct { 1.0 } else { 0.0 };
+            out.count += m;
+        }
+        Ok(out)
+    }
+
+    fn sgd_step(
+        &self,
+        params: &mut ParamVec,
+        batch: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<LossSums> {
+        let x = match &batch.x {
+            BatchX::F32(v) => v,
+            _ => anyhow::bail!("LinearBackend expects f32 features"),
+        };
+        let (f, c) = (self.features, self.classes);
+        let mut grad = vec![0.0f64; self.dim()];
+        let mut sums = LossSums::default();
+        let mut scratch = Vec::new();
+        for row in 0..batch.mask.len() {
+            let m = batch.mask[row] as f64;
+            if m == 0.0 {
+                continue;
+            }
+            let logits = self.logits(params, x, row, &mut scratch);
+            let (loss, correct, probs) = softmax_stats(&logits, batch.y[row]);
+            sums.loss_sum += m * loss;
+            sums.correct += m * if correct { 1.0 } else { 0.0 };
+            sums.count += m;
+            let mut scratch2 = Vec::new();
+            let xs = self.features_of(x, row, &mut scratch2);
+            for k in 0..c {
+                let coef = m * (probs[k] - if k == batch.y[row] as usize { 1.0 } else { 0.0 });
+                let g = &mut grad[k * f..(k + 1) * f];
+                for (gi, v) in g.iter_mut().zip(xs) {
+                    *gi += coef * *v as f64;
+                }
+                grad[c * f + k] += coef;
+            }
+        }
+        let denom = sums.count.max(1.0);
+        for (p, g) in params.0.iter_mut().zip(&grad) {
+            *p -= lr * (*g / denom) as f32;
+        }
+        Ok(sums)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn toy_batch(b: usize, f: usize, seed: u64) -> Batch {
+        // two linearly separable clusters
+        let mut rng = Xoshiro256::seed_from(seed);
+        let mut x = Vec::with_capacity(b * f);
+        let mut y = Vec::with_capacity(b);
+        for i in 0..b {
+            let cls = (i % 2) as i32;
+            y.push(cls);
+            for j in 0..f {
+                let center = if cls == 0 { -1.0 } else { 1.0 };
+                let jitter = (rng.next_f32() - 0.5) * 0.2;
+                x.push(if j % 2 == 0 { center + jitter } else { jitter });
+            }
+        }
+        Batch {
+            x: BatchX::F32(x),
+            y,
+            mask: vec![1.0; b],
+        }
+    }
+
+    #[test]
+    fn linear_learns_separable_data() {
+        let be = LinearBackend::new(8, 2, 16);
+        let mut params = ParamVec::zeros(be.dim());
+        let batch = toy_batch(16, 8, 0);
+        let before = be.fwd_loss(&params, &batch).unwrap();
+        assert!((before.mean_loss() - (2.0f64).ln()).abs() < 1e-9);
+        for _ in 0..50 {
+            be.sgd_step(&mut params, &batch, 0.5).unwrap();
+        }
+        let after = be.fwd_loss(&params, &batch).unwrap();
+        assert!(after.mean_loss() < 0.1, "loss {}", after.mean_loss());
+        assert_eq!(after.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let be = LinearBackend::new(3, 2, 4);
+        let batch = toy_batch(4, 3, 1);
+        let mut params = ParamVec::zeros(be.dim());
+        let mut rng = Xoshiro256::seed_from(2);
+        for p in &mut params.0 {
+            *p = (rng.next_f32() - 0.5) * 0.5;
+        }
+        // analytic step with lr so that delta = -lr * grad/count
+        let lr = 1e-3f32;
+        let mut stepped = params.clone();
+        be.sgd_step(&mut stepped, &batch, lr).unwrap();
+        let count = batch.real_count();
+        for i in 0..be.dim() {
+            let eps = 1e-4f32;
+            let mut pp = params.clone();
+            pp.0[i] += eps;
+            let lp = be.fwd_loss(&pp, &batch).unwrap().loss_sum;
+            pp.0[i] -= 2.0 * eps;
+            let lm = be.fwd_loss(&pp, &batch).unwrap().loss_sum;
+            let fd = (lp - lm) / (2.0 * eps as f64) / count;
+            let analytic = ((params.0[i] - stepped.0[i]) / lr) as f64;
+            assert!(
+                (fd - analytic).abs() < 1e-2 * fd.abs().max(1.0),
+                "param {i}: fd {fd} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn masked_rows_do_not_contribute() {
+        let be = LinearBackend::new(4, 2, 4);
+        let mut b1 = toy_batch(4, 4, 3);
+        b1.mask = vec![1.0, 1.0, 0.0, 0.0];
+        // corrupt masked rows
+        let mut b2 = b1.clone();
+        if let BatchX::F32(x) = &mut b2.x {
+            for v in &mut x[8..] {
+                *v = 1e6;
+            }
+        }
+        b2.y[2] = 1;
+        let params = ParamVec::zeros(be.dim());
+        assert_eq!(
+            be.fwd_loss(&params, &b1).unwrap(),
+            be.fwd_loss(&params, &b2).unwrap()
+        );
+        let mut p1 = params.clone();
+        let mut p2 = params.clone();
+        be.sgd_step(&mut p1, &b1, 0.1).unwrap();
+        be.sgd_step(&mut p2, &b2, 0.1).unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn default_zo_delta_is_antisymmetric_in_coeff_sign() {
+        // ΔL(seed) with z and −z must negate: L(w+cz)−L(w−cz)
+        let be = LinearBackend::new(4, 2, 8);
+        let batch = toy_batch(8, 4, 4);
+        let mut params = ParamVec::zeros(be.dim());
+        params.0[0] = 0.3;
+        let d1 = be
+            .zo_delta(&params, &batch, 11, 1e-3, 0.75, Distribution::Rademacher)
+            .unwrap();
+        // same seed, eps negated == swap the two sides
+        let d2 = be
+            .zo_delta(&params, &batch, 11, -1e-3, 0.75, Distribution::Rademacher)
+            .unwrap();
+        assert!((d1 + d2).abs() < 1e-9, "{d1} vs {d2}");
+        assert!(d1 != 0.0);
+    }
+
+    #[test]
+    fn zo_delta_tracks_gradient_direction() {
+        // SPSA estimate must have positive expected alignment with -grad:
+        // stepping w -= lr * (ΔL/2ε) z should reduce loss for small lr.
+        let be = LinearBackend::new(8, 2, 16);
+        let batch = toy_batch(16, 8, 5);
+        let mut params = ParamVec::zeros(be.dim());
+        let l0 = be.fwd_loss(&params, &batch).unwrap().mean_loss();
+        let (eps, tau) = (1e-3, 1.0);
+        for seed in 0..20u64 {
+            let dl = be
+                .zo_delta(&params, &batch, seed, eps, tau, Distribution::Rademacher)
+                .unwrap();
+            let ghat = dl / (2.0 * eps as f64) / batch.real_count();
+            params.perturb_axpy(seed, tau, Distribution::Rademacher, (-0.05 * ghat) as f32);
+        }
+        let l1 = be.fwd_loss(&params, &batch).unwrap().mean_loss();
+        assert!(l1 < l0, "ZO-SGD should reduce loss: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn loss_sums_arithmetic() {
+        let mut a = LossSums {
+            loss_sum: 2.0,
+            correct: 1.0,
+            count: 2.0,
+        };
+        a.add(LossSums {
+            loss_sum: 4.0,
+            correct: 2.0,
+            count: 2.0,
+        });
+        assert_eq!(a.mean_loss(), 1.5);
+        assert_eq!(a.accuracy(), 0.75);
+        assert_eq!(LossSums::default().accuracy(), 0.0);
+    }
+}

@@ -1,0 +1,265 @@
+//! `artifacts/manifest.json` loader: the contract between the Python
+//! compile path and the Rust runtime.
+//!
+//! The manifest describes, per model variant: the flat parameter layout
+//! (named tensors with offsets — what HeteroFL slicing and He-init need),
+//! the AOT batch/input shapes, activation-size summaries for the eq. 4/5
+//! memory model, and the artifact file per entry point.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub fan_in: usize,
+    pub kind: String,
+    pub fill: f32,
+}
+
+/// Activation summary (elements per example) for the memory cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActSummary {
+    pub sum: usize,
+    pub max: usize,
+}
+
+/// One model variant's full description.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dim: usize,
+    pub batch: usize,
+    pub kind: String, // "image" | "lm"
+    pub classes: usize,
+    pub input_shape: Vec<usize>,
+    pub mask_shape: Vec<usize>,
+    pub act: ActSummary,
+    pub params: Vec<TensorSpec>,
+    /// entry point -> artifact file name (relative to the artifacts dir)
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ModelEntry {
+    pub fn tensor(&self, name: &str) -> Option<&TensorSpec> {
+        self.params.iter().find(|t| t.name == name)
+    }
+
+    /// Samples per artifact invocation (mask elements = loss rows).
+    pub fn mask_len(&self) -> usize {
+        self.mask_shape.iter().product()
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn artifact_path(&self, dir: &Path, entry: &str) -> anyhow::Result<PathBuf> {
+        let f = self
+            .artifacts
+            .get(entry)
+            .ok_or_else(|| anyhow::anyhow!("model {} has no artifact {entry:?}", self.name))?;
+        Ok(dir.join(f))
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        anyhow::ensure!(
+            root.req("version")?.as_usize() == Some(1),
+            "unsupported manifest version"
+        );
+        let mut models = BTreeMap::new();
+        for (name, m) in root
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models not an object"))?
+        {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest"))
+    }
+
+    /// Validate internal consistency (offsets contiguous, dims add up,
+    /// artifact files present on disk). Called by `zowarmup check`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for m in self.models.values() {
+            let mut offset = 0;
+            for t in &m.params {
+                anyhow::ensure!(
+                    t.offset == offset,
+                    "{}: tensor {} offset {} != expected {}",
+                    m.name,
+                    t.name,
+                    t.offset,
+                    offset
+                );
+                anyhow::ensure!(
+                    t.size == t.shape.iter().product::<usize>(),
+                    "{}: tensor {} size mismatch",
+                    m.name,
+                    t.name
+                );
+                offset += t.size;
+            }
+            anyhow::ensure!(
+                offset == m.dim,
+                "{}: params sum {} != dim {}",
+                m.name,
+                offset,
+                m.dim
+            );
+            for entry in m.artifacts.keys() {
+                let p = m.artifact_path(&self.dir, entry)?;
+                anyhow::ensure!(p.exists(), "missing artifact file {p:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> anyhow::Result<ModelEntry> {
+    let usize_of = |j: &Json, k: &str| -> anyhow::Result<usize> {
+        j.req(k)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("{name}: {k} not a number"))
+    };
+    let vec_of = |j: &Json, k: &str| -> anyhow::Result<Vec<usize>> {
+        Ok(j.req(k)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("{name}: {k} not an array"))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect())
+    };
+    let mut params = Vec::new();
+    for p in m
+        .req("params")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{name}: params not an array"))?
+    {
+        params.push(TensorSpec {
+            name: p
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("param name"))?
+                .to_string(),
+            shape: vec_of(p, "shape")?,
+            offset: usize_of(p, "offset")?,
+            size: usize_of(p, "size")?,
+            fan_in: usize_of(p, "fan_in")?,
+            kind: p
+                .req("kind")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("param kind"))?
+                .to_string(),
+            fill: p.req("fill")?.as_f64().unwrap_or(0.0) as f32,
+        });
+    }
+    let act = m.req("act")?;
+    let mut artifacts = BTreeMap::new();
+    if let Some(obj) = m.req("artifacts")?.as_obj() {
+        for (k, v) in obj {
+            artifacts.insert(
+                k.clone(),
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("artifact path"))?
+                    .to_string(),
+            );
+        }
+    }
+    Ok(ModelEntry {
+        name: name.to_string(),
+        dim: usize_of(m, "dim")?,
+        batch: usize_of(m, "batch")?,
+        kind: m
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("{name}: kind"))?
+            .to_string(),
+        classes: usize_of(m, "classes")?,
+        input_shape: vec_of(m, "input_shape")?,
+        mask_shape: vec_of(m, "mask_shape")?,
+        act: ActSummary {
+            sum: usize_of(act, "sum")?,
+            max: usize_of(act, "max")?,
+        },
+        params,
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) const MINI: &str = r#"{
+      "version": 1,
+      "models": {
+        "tiny": {
+          "dim": 6, "batch": 2, "kind": "image", "classes": 2,
+          "input_shape": [2, 1, 1, 1], "mask_shape": [2],
+          "act": {"sum": 10, "max": 4},
+          "params": [
+            {"name": "w", "shape": [1, 4], "offset": 0, "size": 4,
+             "fan_in": 1, "kind": "dense", "fill": 0.0},
+            {"name": "b", "shape": [2], "offset": 4, "size": 2,
+             "fan_in": 0, "kind": "bias", "fill": 0.5}
+          ],
+          "artifacts": {}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI, PathBuf::from("/tmp")).unwrap();
+        let t = m.model("tiny").unwrap();
+        assert_eq!(t.dim, 6);
+        assert_eq!(t.params.len(), 2);
+        assert_eq!(t.tensor("b").unwrap().fill, 0.5);
+        assert_eq!(t.mask_len(), 2);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_gaps() {
+        let bad = MINI.replace("\"offset\": 4", "\"offset\": 5");
+        let m = Manifest::parse(&bad, PathBuf::from("/tmp")).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let m = Manifest::parse(MINI, PathBuf::from("/tmp")).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

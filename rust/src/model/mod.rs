@@ -1,0 +1,10 @@
+//! Model state: flat parameter vectors, the manifest contract with the
+//! Python compile path, and the `ModelBackend` compute interface.
+
+pub mod backend;
+pub mod manifest;
+pub mod params;
+
+pub use backend::{Batch, BatchX, LinearBackend, LossSums, ModelBackend};
+pub use manifest::{Manifest, ModelEntry, TensorSpec};
+pub use params::ParamVec;

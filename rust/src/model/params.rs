@@ -1,0 +1,278 @@
+//! Flat parameter vector: init, axpy, and the seeded-perturbation ops that
+//! implement the ZOUPDATE reconstruction of Algorithm 1.
+
+use crate::model::manifest::ModelEntry;
+use crate::util::rng::{Distribution, PerturbStream, Xoshiro256};
+
+/// The global model state: a single flat `f32` vector whose layout is
+/// defined by the manifest. All federated arithmetic happens here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamVec(pub Vec<f32>);
+
+impl ParamVec {
+    pub fn zeros(dim: usize) -> Self {
+        ParamVec(vec![0.0; dim])
+    }
+
+    /// He-init per tensor (std = sqrt(2/fan_in)); constant `fill` tensors
+    /// (norm scales/biases, biases) are set exactly. Mirrors
+    /// `python/compile/models/common.py::init_flat` in spirit — bitwise
+    /// parity is not required (each run owns its init).
+    pub fn he_init(entry: &ModelEntry, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from(seed ^ 0x1417_5EED);
+        let mut v = vec![0.0f32; entry.dim];
+        for t in &entry.params {
+            let part = &mut v[t.offset..t.offset + t.size];
+            if t.fan_in == 0 {
+                part.fill(t.fill);
+            } else {
+                let std = (2.0 / t.fan_in as f64).sqrt();
+                for x in part {
+                    *x = (rng.normal() * std) as f32;
+                }
+            }
+        }
+        ParamVec(v)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.0.len()
+    }
+
+    /// self += alpha * other  (FedAvg accumulation, server opt steps)
+    pub fn axpy(&mut self, alpha: f32, other: &ParamVec) {
+        debug_assert_eq!(self.dim(), other.dim());
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.0 {
+            *a *= alpha;
+        }
+    }
+
+    /// self += coeff * z(seed)  — the ZOUPDATE hot loop. z is regenerated
+    /// from the seed (never stored/transmitted), matching the paper's
+    /// S·4-byte up-link. coeff already folds η, ΔL/(2ε), weighting and the
+    /// sign, so one call applies one (seed, ΔL) pair.
+    pub fn perturb_axpy(&mut self, seed: u64, tau: f32, dist: Distribution, coeff: f32) {
+        let mut stream = PerturbStream::new(seed, tau, dist);
+        perturb_axpy_slice(&mut self.0, &mut stream, coeff);
+    }
+
+    /// out = self + coeff*z(seed) without touching self (SPSA's w ± εz).
+    pub fn perturbed(&self, seed: u64, tau: f32, dist: Distribution, coeff: f32) -> ParamVec {
+        let mut out = self.clone();
+        out.perturb_axpy(seed, tau, dist, coeff);
+        out
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.0.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.0.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.0.iter().all(|x| x.is_finite())
+    }
+}
+
+/// Streaming axpy kernel over a slice (also used by the in-place two-sided
+/// flip: w+εz -> w−εz is one axpy with −2εz). Delegates to the stream's
+/// branchless fast path (§Perf L3: 350 M/s → memory-bound after the
+/// bit-XOR rewrite; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn perturb_axpy_slice(w: &mut [f32], stream: &mut PerturbStream, coeff: f32) {
+    stream.axpy(w, coeff);
+}
+
+/// Fused multi-seed axpy: `w += Σ_k coeff_k · z(seed_k)` in a SINGLE pass
+/// over `w`, interleaving all perturbation streams per 64-element block so
+/// the weight vector is read/written once instead of once per seed
+/// (§Perf L3: a ZOUPDATE applies Q·S = 30+ seeds per round; this cuts its
+/// memory traffic by that factor). Bit consumption per stream is identical
+/// to [`PerturbStream::axpy`] (LSB-first, one u64 per 64-block), so the
+/// result equals the sequential application up to f32 addition order.
+pub fn perturb_axpy_many(w: &mut [f32], items: &[(u64, f32)], tau: f32, dist: Distribution) {
+    if items.is_empty() {
+        return;
+    }
+    if dist != Distribution::Rademacher || items.len() == 1 {
+        for &(seed, coeff) in items {
+            let mut stream = PerturbStream::new(seed, tau, dist);
+            stream.axpy(w, coeff);
+        }
+        return;
+    }
+    let mut streams: Vec<(crate::util::rng::Xoshiro256, u32)> = items
+        .iter()
+        .map(|&(seed, coeff)| {
+            (
+                crate::util::rng::Xoshiro256::seed_from(seed),
+                (coeff * tau).to_bits(),
+            )
+        })
+        .collect();
+    for chunk in w.chunks_mut(64) {
+        for (rng, ct_bits) in streams.iter_mut() {
+            let mut bits = rng.next_u64();
+            let ct = *ct_bits;
+            for x in chunk.iter_mut() {
+                *x += f32::from_bits(ct ^ (((bits & 1) as u32) << 31));
+                bits >>= 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn mini_entry() -> ModelEntry {
+        let src = r#"{
+          "version": 1,
+          "models": {"t": {
+            "dim": 6, "batch": 1, "kind": "image", "classes": 2,
+            "input_shape": [1], "mask_shape": [1],
+            "act": {"sum": 1, "max": 1},
+            "params": [
+              {"name": "w", "shape": [4], "offset": 0, "size": 4,
+               "fan_in": 4, "kind": "dense", "fill": 0.0},
+              {"name": "b", "shape": [2], "offset": 4, "size": 2,
+               "fan_in": 0, "kind": "norm_scale", "fill": 1.0}
+            ],
+            "artifacts": {}
+          }}}"#;
+        Manifest::parse(src, PathBuf::from("/tmp"))
+            .unwrap()
+            .model("t")
+            .unwrap()
+            .clone()
+    }
+
+    #[test]
+    fn he_init_fills_and_randomizes() {
+        let e = mini_entry();
+        let p = ParamVec::he_init(&e, 0);
+        assert_eq!(p.dim(), 6);
+        assert_eq!(&p.0[4..], &[1.0, 1.0]); // fill tensor exact
+        assert!(p.0[..4].iter().any(|&x| x != 0.0));
+        // deterministic per seed
+        assert_eq!(p, ParamVec::he_init(&e, 0));
+        assert_ne!(p, ParamVec::he_init(&e, 1));
+    }
+
+    #[test]
+    fn he_init_std_matches_fan_in() {
+        // large synthetic tensor to check the law
+        let src = r#"{
+          "version": 1,
+          "models": {"t": {
+            "dim": 100000, "batch": 1, "kind": "image", "classes": 2,
+            "input_shape": [1], "mask_shape": [1],
+            "act": {"sum": 1, "max": 1},
+            "params": [{"name": "w", "shape": [100000], "offset": 0,
+              "size": 100000, "fan_in": 50, "kind": "dense", "fill": 0.0}],
+            "artifacts": {}
+          }}}"#;
+        let e = Manifest::parse(src, PathBuf::from("/tmp"))
+            .unwrap()
+            .model("t")
+            .unwrap()
+            .clone();
+        let p = ParamVec::he_init(&e, 7);
+        let mean: f64 = p.0.iter().map(|&x| x as f64).sum::<f64>() / p.dim() as f64;
+        let var: f64 =
+            p.0.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / p.dim() as f64;
+        let want = 2.0 / 50.0;
+        assert!((var - want).abs() / want < 0.05, "var {var} want {want}");
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = ParamVec(vec![1.0, 2.0]);
+        let b = ParamVec(vec![10.0, 20.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.0, vec![6.0, 12.0]);
+        a.scale(2.0);
+        assert_eq!(a.0, vec![12.0, 24.0]);
+    }
+
+    #[test]
+    fn perturb_round_trip_cancels() {
+        // w + c*z then + (-c)*z with the same seed must restore w exactly
+        // (Rademacher: c*z is ±c·τ, exactly representable cancellation).
+        let mut p = ParamVec(vec![0.25; 1000]);
+        let orig = p.clone();
+        p.perturb_axpy(99, 0.75, Distribution::Rademacher, 0.5);
+        assert_ne!(p, orig);
+        p.perturb_axpy(99, 0.75, Distribution::Rademacher, -0.5);
+        assert_eq!(p, orig);
+    }
+
+    #[test]
+    fn two_sided_spsa_brackets() {
+        // (w+εz) and (w−εz) average back to w
+        let w = ParamVec(vec![1.0; 512]);
+        let plus = w.perturbed(5, 0.75, Distribution::Rademacher, 1e-2);
+        let minus = w.perturbed(5, 0.75, Distribution::Rademacher, -1e-2);
+        for i in 0..512 {
+            let mid = (plus.0[i] + minus.0[i]) / 2.0;
+            assert!((mid - 1.0).abs() < 1e-6);
+            assert!((plus.0[i] - 1.0).abs() > 0.0);
+        }
+    }
+
+    #[test]
+    fn different_seeds_different_directions() {
+        let w = ParamVec::zeros(4096);
+        let a = w.perturbed(1, 1.0, Distribution::Rademacher, 1.0);
+        let b = w.perturbed(2, 1.0, Distribution::Rademacher, 1.0);
+        let agree = a.0.iter().zip(&b.0).filter(|(x, y)| x == y).count();
+        // ~50% agreement expected for independent Rademacher vectors
+        assert!((agree as f64 / 4096.0 - 0.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn perturb_axpy_many_matches_sequential() {
+        let items: Vec<(u64, f32)> = (0..7).map(|i| (100 + i, 0.01 * (i as f32 - 3.0))).collect();
+        for d in [1usize, 63, 64, 65, 1000, 4097] {
+            let mut fused = vec![0.5f32; d];
+            perturb_axpy_many(&mut fused, &items, 0.75, Distribution::Rademacher);
+            let mut seq = vec![0.5f32; d];
+            for &(seed, coeff) in &items {
+                let mut s = PerturbStream::new(seed, 0.75, Distribution::Rademacher);
+                s.axpy(&mut seq, coeff);
+            }
+            for (a, b) in fused.iter().zip(&seq) {
+                assert!((a - b).abs() < 1e-6, "d={d}: {a} vs {b}");
+            }
+        }
+        // gaussian falls back to the sequential path exactly
+        let mut fused = vec![0.0f32; 130];
+        perturb_axpy_many(&mut fused, &items, 0.5, Distribution::Gaussian);
+        let mut seq = vec![0.0f32; 130];
+        for &(seed, coeff) in &items {
+            let mut s = PerturbStream::new(seed, 0.5, Distribution::Gaussian);
+            s.axpy(&mut seq, coeff);
+        }
+        assert_eq!(fused, seq);
+    }
+
+    #[test]
+    fn norms() {
+        let p = ParamVec(vec![3.0, 4.0]);
+        assert!((p.l2() - 5.0).abs() < 1e-12);
+        assert_eq!(p.max_abs(), 4.0);
+        assert!(p.is_finite());
+        assert!(!ParamVec(vec![f32::NAN]).is_finite());
+    }
+}

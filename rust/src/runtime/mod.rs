@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! coordinator's hot path. This is the only module that touches the `xla`
+//! crate. Python never runs here.
+//!
+//! Pattern (per /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — the crate's xla_extension 0.5.1
+//! rejects jax≥0.5 serialized protos (64-bit instruction ids).
+
+pub mod xla_backend;
+
+pub use xla_backend::{Engine, XlaBackend};

@@ -1,0 +1,219 @@
+//! `XlaBackend`: the production `ModelBackend` over compiled PJRT
+//! executables, plus the `Engine` (client + executable cache).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::model::backend::{Batch, BatchX, LossSums, ModelBackend};
+use crate::model::manifest::{Manifest, ModelEntry};
+use crate::model::params::ParamVec;
+
+/// Convert the xla crate's error type (no std::error::Error impl needed).
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+/// Shared PJRT CPU client + a compile cache keyed by artifact path.
+/// Compilation is the expensive one-time cost; executions are cheap and
+/// reentrant.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> anyhow::Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(xerr)?,
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact (memoized).
+    pub fn compile(&self, path: &Path) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp).map_err(xerr)?);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Build the `ModelBackend` for one manifest model.
+    pub fn backend(&self, manifest: &Manifest, model: &str) -> anyhow::Result<XlaBackend<'_>> {
+        let entry = manifest.model(model)?.clone();
+        let fwd = self.compile(&entry.artifact_path(&manifest.dir, "fwd_loss")?)?;
+        let sgd = self.compile(&entry.artifact_path(&manifest.dir, "sgd_step")?)?;
+        let zo = match entry.artifacts.contains_key("zo_delta") {
+            true => Some(self.compile(&entry.artifact_path(&manifest.dir, "zo_delta")?)?),
+            false => None,
+        };
+        Ok(XlaBackend {
+            _engine: self,
+            entry,
+            fwd,
+            sgd,
+            zo,
+        })
+    }
+}
+
+/// Compiled executables for one model variant.
+pub struct XlaBackend<'e> {
+    _engine: &'e Engine,
+    pub entry: ModelEntry,
+    fwd: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    sgd: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    zo: Option<std::sync::Arc<xla::PjRtLoadedExecutable>>,
+}
+
+fn dims_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+impl<'e> XlaBackend<'e> {
+    fn literal_params(&self, params: &ParamVec) -> anyhow::Result<xla::Literal> {
+        anyhow::ensure!(
+            params.dim() == self.entry.dim,
+            "param dim {} != model dim {}",
+            params.dim(),
+            self.entry.dim
+        );
+        Ok(xla::Literal::vec1(&params.0))
+    }
+
+    fn literal_x(&self, batch: &Batch) -> anyhow::Result<xla::Literal> {
+        let dims = dims_i64(&self.entry.input_shape);
+        let lit = match (&batch.x, self.entry.kind.as_str()) {
+            (BatchX::F32(v), "image") => {
+                anyhow::ensure!(v.len() == self.entry.input_len(), "x len");
+                xla::Literal::vec1(v).reshape(&dims).map_err(xerr)?
+            }
+            (BatchX::I32(v), "lm") => {
+                anyhow::ensure!(v.len() == self.entry.input_len(), "x len");
+                xla::Literal::vec1(v).reshape(&dims).map_err(xerr)?
+            }
+            _ => anyhow::bail!(
+                "batch x type does not match model kind {:?}",
+                self.entry.kind
+            ),
+        };
+        Ok(lit)
+    }
+
+    fn literal_y_mask(&self, batch: &Batch) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        let dims = dims_i64(&self.entry.mask_shape);
+        anyhow::ensure!(batch.y.len() == self.entry.mask_len(), "y len");
+        anyhow::ensure!(batch.mask.len() == self.entry.mask_len(), "mask len");
+        let y = xla::Literal::vec1(&batch.y).reshape(&dims).map_err(xerr)?;
+        let mask = xla::Literal::vec1(&batch.mask).reshape(&dims).map_err(xerr)?;
+        Ok((y, mask))
+    }
+
+    fn exec(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(inputs).map_err(xerr)?;
+        let lit = out[0][0].to_literal_sync().map_err(xerr)?;
+        lit.to_tuple().map_err(xerr)
+    }
+
+    fn scalar_f32(lit: &xla::Literal) -> anyhow::Result<f64> {
+        let v = lit.to_vec::<f32>().map_err(xerr)?;
+        anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+        Ok(v[0] as f64)
+    }
+
+    /// The fused in-graph SPSA numerator (threefry z inside the artifact;
+    /// Pallas perturb kernel). NOTE: its z differs from the host
+    /// `PerturbStream`, so it pairs only with an in-graph update — it is
+    /// exposed for the §Perf graph-vs-host comparison, not the default
+    /// protocol (see DESIGN.md §6).
+    pub fn zo_delta_fused(
+        &self,
+        params: &ParamVec,
+        batch: &Batch,
+        seed: i32,
+        coeff: f32,
+    ) -> anyhow::Result<f64> {
+        let zo = self
+            .zo
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model {} has no zo_delta artifact", self.entry.name))?;
+        let (y, mask) = self.literal_y_mask(batch)?;
+        let outs = self.exec(
+            zo,
+            &[
+                self.literal_params(params)?,
+                xla::Literal::scalar(seed),
+                xla::Literal::scalar(coeff),
+                self.literal_x(batch)?,
+                y,
+                mask,
+            ],
+        )?;
+        Self::scalar_f32(&outs[0])
+    }
+}
+
+impl<'e> ModelBackend for XlaBackend<'e> {
+    fn dim(&self) -> usize {
+        self.entry.dim
+    }
+
+    fn batch_size(&self) -> usize {
+        self.entry.batch
+    }
+
+    fn fwd_loss(&self, params: &ParamVec, batch: &Batch) -> anyhow::Result<LossSums> {
+        let (y, mask) = self.literal_y_mask(batch)?;
+        let outs = self.exec(
+            &self.fwd,
+            &[self.literal_params(params)?, self.literal_x(batch)?, y, mask],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "fwd_loss returns 2 outputs");
+        Ok(LossSums {
+            loss_sum: Self::scalar_f32(&outs[0])?,
+            correct: Self::scalar_f32(&outs[1])?,
+            count: batch.real_count(),
+        })
+    }
+
+    fn sgd_step(
+        &self,
+        params: &mut ParamVec,
+        batch: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<LossSums> {
+        let (y, mask) = self.literal_y_mask(batch)?;
+        let outs = self.exec(
+            &self.sgd,
+            &[
+                self.literal_params(params)?,
+                self.literal_x(batch)?,
+                y,
+                mask,
+                xla::Literal::scalar(lr),
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "sgd_step returns 2 outputs");
+        let new_params = outs[0].to_vec::<f32>().map_err(xerr)?;
+        anyhow::ensure!(new_params.len() == self.entry.dim, "sgd output dim");
+        params.0 = new_params;
+        Ok(LossSums {
+            loss_sum: Self::scalar_f32(&outs[1])?,
+            correct: f64::NAN, // sgd artifact does not report accuracy
+            count: batch.real_count(),
+        })
+    }
+}

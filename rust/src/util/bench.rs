@@ -1,0 +1,182 @@
+//! Micro/endto-end bench harness (criterion is unavailable offline).
+//!
+//! Usage from a `[[bench]] harness = false` target:
+//! ```no_run
+//! use zowarmup::util::bench::Bench;
+//! let mut b = Bench::new("rademacher_axpy");
+//! b.iter("d=175k", || { /* work */ });
+//! b.report();
+//! ```
+//! Warms up, then runs timed batches until both a minimum wall time and a
+//! minimum iteration count are reached; reports mean/p50/p95 per iteration.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One measured case inside a bench group.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// optional user-provided throughput denominator (items per iter)
+    pub items_per_iter: f64,
+}
+
+impl Measurement {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            return 0.0;
+        }
+        self.items_per_iter * 1e9 / self.mean_ns
+    }
+}
+
+/// A named group of measurements with a shared time budget per case.
+pub struct Bench {
+    pub group: String,
+    pub min_time: Duration,
+    pub min_iters: usize,
+    pub warmup_iters: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Self {
+            group: group.to_string(),
+            min_time: Duration::from_millis(300),
+            min_iters: 10,
+            warmup_iters: 2,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick preset for expensive end-to-end cases.
+    pub fn slow(group: &str) -> Self {
+        let mut b = Self::new(group);
+        b.min_time = Duration::from_millis(0);
+        b.min_iters = 3;
+        b.warmup_iters = 1;
+        b
+    }
+
+    pub fn iter<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        self.iter_with_items(name, 1.0, f)
+    }
+
+    /// `items` feeds the throughput column (e.g. parameters touched).
+    pub fn iter_with_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: F,
+    ) -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples_ns.len() < self.min_iters
+            || (start.elapsed() < self.min_time && samples_ns.len() < 10_000)
+        {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 0.5),
+            p95_ns: stats::percentile(&samples_ns, 0.95),
+            items_per_iter: items,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print a criterion-ish table to stdout.
+    pub fn report(&self) {
+        println!("\n== bench {} ==", self.group);
+        println!(
+            "{:<42} {:>8} {:>12} {:>12} {:>12} {:>14}",
+            "case", "iters", "mean", "p50", "p95", "throughput/s"
+        );
+        for m in &self.results {
+            println!(
+                "{:<42} {:>8} {:>12} {:>12} {:>12} {:>14}",
+                m.name,
+                m.iters,
+                fmt_ns(m.mean_ns),
+                fmt_ns(m.p50_ns),
+                fmt_ns(m.p95_ns),
+                fmt_qty(m.throughput_per_sec()),
+            );
+        }
+    }
+}
+
+/// Human duration from nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Human quantity (1.2M, 3.4G, ...).
+pub fn fmt_qty(q: f64) -> String {
+    if q >= 1e9 {
+        format!("{:.2}G", q / 1e9)
+    } else if q >= 1e6 {
+        format!("{:.2}M", q / 1e6)
+    } else if q >= 1e3 {
+        format!("{:.2}k", q / 1e3)
+    } else {
+        format!("{q:.1}")
+    }
+}
+
+/// Guard against the optimizer deleting benched work (std::hint wrapper).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test");
+        b.min_time = Duration::from_millis(5);
+        b.min_iters = 3;
+        let m = b.iter_with_items("spin", 100.0, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean_ns > 0.0);
+        assert!(m.throughput_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1_500_000.0), "1.50ms");
+        assert_eq!(fmt_qty(2_000_000.0), "2.00M");
+    }
+}

@@ -1,0 +1,168 @@
+//! Tiny CLI argument substrate (clap is unavailable offline; DESIGN.md §2).
+//!
+//! Grammar: `zowarmup <subcommand> [--key value]... [--flag]...`.
+//! Unknown keys are an error — typos in experiment sweeps must not silently
+//! fall back to defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one positional subcommand plus `--key value` pairs.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let (k, v) = if let Some((k, v)) = key.split_once('=') {
+                    (k.to_string(), v.to_string())
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    (key.to_string(), argv[i].clone())
+                } else {
+                    (key.to_string(), "true".to_string()) // bare flag
+                };
+                if out.kv.insert(k.clone(), v).is_some() {
+                    anyhow::bail!("duplicate flag --{k}");
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(v) => anyhow::bail!("--{key} expects true/false, got {v:?}"),
+        }
+    }
+
+    /// Comma-separated list, e.g. `--splits 10,30,50`.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    /// Call after all `get`s: errors on flags nobody consumed (typo guard).
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown flag(s): {unknown:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_and_flags() {
+        let a = Args::parse(&argv("exp table2 --seeds 3 --scale=smoke --verbose")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.usize_or("seeds", 1).unwrap(), 3);
+        assert_eq!(a.str_or("scale", "default"), "smoke");
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_and_type_errors() {
+        let a = Args::parse(&argv("train --lr abc")).unwrap();
+        assert_eq!(a.usize_or("rounds", 7).unwrap(), 7);
+        assert!(a.f64_or("lr", 0.1).is_err());
+    }
+
+    #[test]
+    fn duplicate_flags_rejected() {
+        assert!(Args::parse(&argv("x --a 1 --a 2")).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_guard() {
+        let a = Args::parse(&argv("train --rounds 5 --typo 1")).unwrap();
+        let _ = a.usize_or("rounds", 0).unwrap();
+        assert!(a.reject_unknown().is_err());
+        let b = Args::parse(&argv("train --rounds 5")).unwrap();
+        let _ = b.usize_or("rounds", 0).unwrap();
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&argv("x --splits 10,30,50")).unwrap();
+        assert_eq!(a.list_or("splits", &[]), vec!["10", "30", "50"]);
+        let b = Args::parse(&argv("x")).unwrap();
+        assert_eq!(b.list_or("splits", &["90"]), vec!["90"]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = Args::parse(&argv("x --lr -0.5")).unwrap();
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+    }
+}

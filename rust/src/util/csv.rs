@@ -1,0 +1,103 @@
+//! CSV writer for experiment outputs under `runs/` (plotting-friendly).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Append-only CSV file with a fixed header written on creation.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Self {
+            w,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "csv row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        let escaped: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.w, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, fields: &[CsvField]) -> anyhow::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Typed field helper so call sites stay tidy.
+pub enum CsvField {
+    U(usize),
+    F(f64),
+    S(String),
+}
+
+impl std::fmt::Display for CsvField {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsvField::U(v) => write!(f, "{v}"),
+            CsvField::F(v) => write!(f, "{v:.6}"),
+            CsvField::S(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("zowarmup_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["round", "acc", "note"]).unwrap();
+            w.row(&["1".into(), "0.5".into(), "plain".into()]).unwrap();
+            w.row(&["2".into(), "0.6".into(), "has,comma".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text,
+            "round,acc,note\n1,0.5,plain\n2,0.6,\"has,comma\"\n"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let dir = std::env::temp_dir().join("zowarmup_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

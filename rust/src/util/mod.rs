@@ -1,0 +1,12 @@
+//! In-repo substrates replacing crates unavailable in the offline build
+//! sandbox (DESIGN.md §2): RNG, JSON, CLI parsing, CSV, stats, a bench
+//! harness and a mini property-test runner.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,74 @@
+//! Scoped parallel-map substrate (tokio/rayon unavailable offline).
+//!
+//! Client-local computations inside a federated round are independent, so
+//! the server fans them out with `parallel_map`. On a 1-core testbed this
+//! degrades gracefully to the sequential path (thread overhead avoided).
+
+/// Number of worker threads to use (respects `ZOWARMUP_THREADS`).
+pub fn worker_count() -> usize {
+    if let Ok(v) = std::env::var("ZOWARMUP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` preserving order, using scoped threads when more
+/// than one worker is available and the job count warrants it.
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let workers = worker_count();
+    if workers <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    // Work queue: (index, item) pairs pulled by workers via a mutex.
+    let queue = std::sync::Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>());
+    let slots_ref = std::sync::Mutex::new(&mut slots);
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    None => break,
+                    Some((i, item)) => {
+                        let r = f(item);
+                        slots_ref.lock().unwrap()[i] = Some(r);
+                    }
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker died")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map((0..100).collect::<Vec<_>>(), |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(parallel_map(Vec::<i32>::new(), |x| x), Vec::<i32>::new());
+        assert_eq!(parallel_map(vec![7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn respects_env_override() {
+        // worker_count is advisory; just exercise the parse path
+        assert!(worker_count() >= 1);
+    }
+}

@@ -1,0 +1,411 @@
+//! Deterministic RNG substrate (no `rand` crate offline; see DESIGN.md §2).
+//!
+//! [`SplitMix64`] seeds [`Xoshiro256`] (xoshiro256++), which drives all
+//! simulation randomness: data generation, Dirichlet partitioning, client
+//! sampling, and — crucially — the seeded Rademacher/Gaussian perturbations
+//! of the SPSA protocol. A perturbation is *never stored*: both sides of
+//! the protocol regenerate it from the 8-byte seed, which is what makes the
+//! paper's `S·4`-byte up-link possible.
+
+/// SplitMix64: tiny, full-period seeder (Steele et al.).
+#[derive(Clone, Debug)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — fast, high-quality, 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 (the canonical recommendation; avoids the
+    /// all-zero state and decorrelates nearby integer seeds).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = SplitMix64(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift (unbiased
+    /// enough for simulation; n ≪ 2^32 here).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() >> 32).wrapping_mul(n as u64) >> 32) as usize
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple > fast
+    /// here — Gaussian perturbation is the paper's *worse* variant).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia-Tsang; used by [`Self::dirichlet`].
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = self.next_f64().max(1e-300);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_k): the paper's non-IID label-skew sampler.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(alpha).max(1e-12)).collect();
+        let sum: f64 = g.iter().sum();
+        for v in &mut g {
+            *v /= sum;
+        }
+        g
+    }
+
+    /// Sample `m` distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn choose(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n, "choose({m}) from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// The seeded perturbation stream of the SPSA protocol (§3.1).
+///
+/// `Rademacher`: ±τ with equal probability — the paper's preferred,
+/// lower-variance choice (Table 6). `Gaussian`: τ·N(0,1), kept as the
+/// ablation baseline. Every consumer regenerates the identical stream from
+/// the same `(seed, tau)` pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Distribution {
+    Rademacher,
+    Gaussian,
+}
+
+impl Distribution {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rademacher" => Some(Self::Rademacher),
+            "gaussian" => Some(Self::Gaussian),
+            _ => None,
+        }
+    }
+}
+
+/// Stream of perturbation components z_i for one seed.
+pub struct PerturbStream {
+    rng: Xoshiro256,
+    tau: f32,
+    dist: Distribution,
+    /// 64-bit buffer for Rademacher: one next_u64 yields 64 signs.
+    bits: u64,
+    left: u32,
+}
+
+impl PerturbStream {
+    pub fn new(seed: u64, tau: f32, dist: Distribution) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from(seed),
+            tau,
+            dist,
+            bits: 0,
+            left: 0,
+        }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> f32 {
+        match self.dist {
+            Distribution::Rademacher => {
+                if self.left == 0 {
+                    self.bits = self.rng.next_u64();
+                    self.left = 64;
+                }
+                let sign = 1.0 - 2.0 * (self.bits & 1) as f32;
+                self.bits >>= 1;
+                self.left -= 1;
+                self.tau * sign
+            }
+            Distribution::Gaussian => self.tau * self.rng.normal() as f32,
+        }
+    }
+
+    /// Fill a whole z-vector (used by tests & the host-side axpy fast path).
+    pub fn fill(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.next();
+        }
+    }
+
+    /// Fused `w[i] += coeff * z_i` over a whole slice — the ZOUPDATE hot
+    /// loop (§Perf L3). Rademacher fast path: one `next_u64` yields 64
+    /// signs applied branchlessly by XOR-ing the f32 sign bit, consuming
+    /// bits LSB-first exactly like [`Self::next`]. Must only be called on
+    /// a fresh stream (callers construct one per (seed, coeff) pair).
+    pub fn axpy(&mut self, w: &mut [f32], coeff: f32) {
+        match self.dist {
+            Distribution::Rademacher => {
+                debug_assert_eq!(self.left, 0, "axpy requires a fresh stream");
+                let ct = coeff * self.tau;
+                let ct_bits = ct.to_bits();
+                let mut chunks = w.chunks_exact_mut(64);
+                for chunk in &mut chunks {
+                    let mut bits = self.rng.next_u64();
+                    // bit set -> -ct (sign-bit flip), matching next().
+                    // (an indexed `bits >> j` variant benched 15% slower —
+                    // EXPERIMENTS.md §Perf iteration log)
+                    for x in chunk.iter_mut() {
+                        *x += f32::from_bits(ct_bits ^ (((bits & 1) as u32) << 31));
+                        bits >>= 1;
+                    }
+                }
+                let rem = chunks.into_remainder();
+                if !rem.is_empty() {
+                    let mut bits = self.rng.next_u64();
+                    for x in rem.iter_mut() {
+                        *x += f32::from_bits(ct_bits ^ (((bits & 1) as u32) << 31));
+                        bits >>= 1;
+                    }
+                }
+            }
+            Distribution::Gaussian => {
+                for x in w.iter_mut() {
+                    *x += coeff * self.next();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values for seed 0 (Vigna's splitmix64.c).
+        let mut sm = SplitMix64(0);
+        assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(sm.next_u64(), 0x6E789E6AA1B965F4);
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_distinct() {
+        let mut a = Xoshiro256::seed_from(1);
+        let mut b = Xoshiro256::seed_from(1);
+        let mut c = Xoshiro256::seed_from(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256::seed_from(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Xoshiro256::seed_from(4);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::seed_from(5);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_alpha_controls_skew() {
+        let mut r = Xoshiro256::seed_from(6);
+        let p = r.dirichlet(0.1, 10);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // alpha=0.1 should be skewed: max component dominates
+        let trials: Vec<f64> = (0..200)
+            .map(|_| {
+                let p = r.dirichlet(0.1, 10);
+                p.iter().cloned().fold(0.0, f64::max)
+            })
+            .collect();
+        let mean_max = trials.iter().sum::<f64>() / trials.len() as f64;
+        assert!(mean_max > 0.5, "alpha=0.1 should concentrate: {mean_max}");
+        let trials: Vec<f64> = (0..200)
+            .map(|_| {
+                let p = r.dirichlet(100.0, 10);
+                p.iter().cloned().fold(0.0, f64::max)
+            })
+            .collect();
+        let mean_max = trials.iter().sum::<f64>() / trials.len() as f64;
+        assert!(mean_max < 0.2, "alpha=100 should be flat: {mean_max}");
+    }
+
+    #[test]
+    fn choose_distinct_in_range() {
+        let mut r = Xoshiro256::seed_from(7);
+        for _ in 0..100 {
+            let picks = r.choose(20, 8);
+            assert_eq!(picks.len(), 8);
+            let mut sorted = picks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8, "duplicates in {picks:?}");
+            assert!(picks.iter().all(|&p| p < 20));
+        }
+    }
+
+    #[test]
+    fn rademacher_stream_is_pm_tau_and_balanced() {
+        let mut s = PerturbStream::new(9, 0.75, Distribution::Rademacher);
+        let mut z = vec![0.0f32; 100_000];
+        s.fill(&mut z);
+        assert!(z.iter().all(|&v| v == 0.75 || v == -0.75));
+        let mean: f64 = z.iter().map(|&v| v as f64).sum::<f64>() / z.len() as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_stream_scaled() {
+        let mut s = PerturbStream::new(10, 0.5, Distribution::Gaussian);
+        let mut z = vec![0.0f32; 100_000];
+        s.fill(&mut z);
+        let var: f64 = z.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / z.len() as f64;
+        assert!((var - 0.25).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn axpy_fast_path_matches_next_semantics() {
+        // the branchless path must consume the identical bit sequence as
+        // the scalar next() path — self-consistency of the seed protocol.
+        for d in [1usize, 63, 64, 65, 1000] {
+            let mut a = vec![0.0f32; d];
+            let mut b = vec![0.0f32; d];
+            PerturbStream::new(5, 0.75, Distribution::Rademacher).axpy(&mut a, 2.0);
+            let mut s = PerturbStream::new(5, 0.75, Distribution::Rademacher);
+            for x in b.iter_mut() {
+                *x += 2.0 * s.next();
+            }
+            assert_eq!(a, b, "d={d}");
+        }
+        // gaussian path too
+        let mut a = vec![0.0f32; 257];
+        let mut b = vec![0.0f32; 257];
+        PerturbStream::new(6, 0.5, Distribution::Gaussian).axpy(&mut a, 1.5);
+        let mut s = PerturbStream::new(6, 0.5, Distribution::Gaussian);
+        for x in b.iter_mut() {
+            *x += 1.5 * s.next();
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn perturb_stream_reproducible_across_instances() {
+        // the protocol invariant: seed fully determines z
+        let mut a = PerturbStream::new(42, 0.75, Distribution::Rademacher);
+        let mut b = PerturbStream::new(42, 0.75, Distribution::Rademacher);
+        for _ in 0..1000 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::seed_from(11);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,30 @@
+//! Graph-mode SPSA path: the AOT `zo_delta` artifact evaluates ΔL with the
+//! perturbation generated *inside* the HLO graph (threefry bits → fused
+//! Pallas Rademacher-axpy kernel).
+//!
+//! Its z differs from the host `PerturbStream` (different PRNG), so a
+//! graph-computed ΔL must pair with a graph-side update. This module is
+//! used by the §Perf graph-vs-host comparison benches; the default
+//! protocol stays host-side (DESIGN.md §6).
+
+use crate::model::backend::Batch;
+use crate::model::params::ParamVec;
+use crate::runtime::XlaBackend;
+
+/// ΔL over a chunked dataset via the fused artifact, normalized to mean
+/// loss difference (same convention as `zo::zoopt`).
+pub fn zo_delta_fused_chunked(
+    backend: &XlaBackend,
+    params: &ParamVec,
+    chunks: &[Batch],
+    seed: i32,
+    coeff: f32,
+) -> anyhow::Result<f64> {
+    let mut delta = 0.0f64;
+    let mut count = 0.0f64;
+    for b in chunks {
+        delta += backend.zo_delta_fused(params, b, seed, coeff)?;
+        count += b.real_count();
+    }
+    Ok(if count > 0.0 { delta / count } else { 0.0 })
+}
