@@ -4,11 +4,13 @@
 use std::sync::Arc;
 
 use zowarmup::baselines::heterofl::{heterofl_aggregate, SliceMap};
-use zowarmup::config::ServerOpt;
+use zowarmup::config::{FedConfig, ServerOpt};
 use zowarmup::data::dirichlet::dirichlet_split;
 use zowarmup::data::loader::{ClientData, Source};
-use zowarmup::data::synthetic::{generate, GenConfig, SynthKind};
+use zowarmup::data::synthetic::{generate, train_test, GenConfig, SynthKind};
 use zowarmup::fed::aggregate::{weighted_average, ServerOptState};
+use zowarmup::fed::server::{shards_from_partition, Federation};
+use zowarmup::model::backend::LinearBackend;
 use zowarmup::model::params::ParamVec;
 use zowarmup::util::bench::{black_box, Bench};
 
@@ -88,6 +90,48 @@ fn main() {
         b.iter_with_items("batch assembly 512 samples @B=64", 512.0, || {
             black_box(cd.chunks(64));
         });
+    }
+
+    // parallel vs sequential round execution: identical results for every
+    // worker count (fed::server threading model); on multi-core hosts the
+    // fan-out over sampled clients is the round's wall-clock win
+    {
+        let mut cfg = FedConfig::default().smoke_scale();
+        cfg.clients = 8;
+        cfg.sample_zo = 8;
+        cfg.sample_warm = 4;
+        cfg.hi_frac = 0.5;
+        cfg.pivot = 0;
+        cfg.lr_client_zo = 1.0;
+        cfg.lr_server_zo = 0.01;
+        let (train, test) = train_test(SynthKind::Synth10, 1600, 100, 0);
+        let part = dirichlet_split(&train, cfg.clients, 0.5, 0);
+        let src = Source::Image(Arc::new(train));
+        let test_src = Source::Image(Arc::new(test));
+        let be = LinearBackend::pooled(32 * 32 * 3, 2, 10, 32);
+        for threads in [1usize, 2, 4] {
+            let mut c = cfg.clone();
+            c.threads = threads;
+            let shards = shards_from_partition(&src, &part);
+            let init = ParamVec::zeros(be.dim());
+            let mut fed =
+                Federation::new(c, &be, shards, test_src.clone(), init).unwrap();
+            b.iter(&format!("zo_round Q=8 (linear probe) threads={threads}"), || {
+                black_box(fed.zo_round().unwrap());
+            });
+        }
+        for threads in [1usize, 4] {
+            let mut c = cfg.clone();
+            c.threads = threads;
+            c.pivot = c.rounds_total; // warm phase only
+            let shards = shards_from_partition(&src, &part);
+            let init = ParamVec::zeros(be.dim());
+            let mut fed =
+                Federation::new(c, &be, shards, test_src.clone(), init).unwrap();
+            b.iter(&format!("warm_round P=4 (linear probe) threads={threads}"), || {
+                black_box(fed.warm_round().unwrap());
+            });
+        }
     }
 
     b.report();

@@ -54,9 +54,23 @@ fn main() {
             })
             .collect();
         b.iter_with_items("apply_zo_update d=1M Q=10 S=3", (d * 30) as f64, || {
-            apply_zo_update(&mut global, &contribs, &cfg, 0.01);
+            apply_zo_update(&mut global, &contribs, &cfg, 1.0, 0.01);
             black_box(&global.0[0]);
         });
+        // sharded across workers (bit-identical results; see model::params)
+        for workers in [2usize, 4] {
+            let mut g = ParamVec(vec![0.1f32; d]);
+            b.iter_with_items(
+                &format!("apply_zo_update_sharded d=1M Q=10 S=3 w={workers}"),
+                (d * 30) as f64,
+                || {
+                    zowarmup::zo::apply_zo_update_sharded(
+                        &mut g, &contribs, &cfg, 1.0, 0.01, workers,
+                    );
+                    black_box(&g.0[0]);
+                },
+            );
+        }
     }
 
     // the fused single-pass variant actually used by apply_zo_update
@@ -73,6 +87,29 @@ fn main() {
                     &items,
                     0.75,
                     Distribution::Rademacher,
+                );
+                black_box(&w[0]);
+            },
+        );
+    }
+
+    // parallel vs sequential fused pass: the sharded variant splits the
+    // weight vector into 64-aligned chunks with bit-exact stream
+    // fast-forward (ZOUPDATE at ResNet scale is memory-bound single-core)
+    for workers in [1usize, 2, 4, 8] {
+        let d = 11_173_962;
+        let mut w = vec![0.1f32; d];
+        let items: Vec<(u64, f32)> = (0..30).map(|i| (i as u64, 1e-4)).collect();
+        b.iter_with_items(
+            &format!("perturb_axpy_many_sharded d=11M x30 w={workers}"),
+            (d * 30) as f64,
+            || {
+                zowarmup::model::params::perturb_axpy_many_sharded(
+                    &mut w,
+                    &items,
+                    0.75,
+                    Distribution::Rademacher,
+                    workers,
                 );
                 black_box(&w[0]);
             },

@@ -19,11 +19,12 @@ use crate::comm::CommLedger;
 use crate::config::FedConfig;
 use crate::data::loader::{eval_chunks, ClientData, Source};
 use crate::fed::aggregate::{weighted_average, ServerOptState};
-use crate::fed::client::{warm_local_train, ClientState};
+use crate::fed::client::{round_client_rng, warm_local_train, ClientState};
 use crate::fed::server::assign_resources;
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
 use crate::model::params::ParamVec;
+use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
 
 /// FedKSeed-specific knobs.
@@ -170,18 +171,26 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             .collect();
         let p = self.cfg.sample_warm.clamp(1, hi.len());
         let picked: Vec<usize> = self.rng.choose(hi.len(), p).into_iter().map(|i| hi[i]).collect();
+        // parallel fan-out with pre-derived per-client RNGs; fold back in
+        // sampled order (see fed::server's threading model)
+        let jobs: Vec<(usize, Xoshiro256)> = picked
+            .iter()
+            .map(|&cid| (cid, round_client_rng(self.cfg.seed, 0, round, cid)))
+            .collect();
+        let results = {
+            let backend = self.backend;
+            let global = &self.global;
+            let clients = &self.clients;
+            let cfg = &self.cfg;
+            parallel_map_n(resolve_workers(self.cfg.threads), jobs, move |(cid, mut crng)| {
+                warm_local_train(backend, global, &clients[cid].data, cfg, &mut crng)
+                    .map(|out| (cid, out))
+            })
+        };
         let mut updates = Vec::new();
         let mut train = LossSums::default();
-        for &cid in &picked {
-            let mut crng =
-                Xoshiro256::seed_from(self.cfg.seed ^ (round as u64) << 20 ^ cid as u64);
-            let (w, sums) = warm_local_train(
-                self.backend,
-                &self.global,
-                &self.clients[cid].data,
-                &self.cfg,
-                &mut crng,
-            )?;
+        for r in results {
+            let (cid, (w, sums)) = r?;
             train.add(sums);
             updates.push((w, self.clients[cid].n() as f64));
         }
@@ -198,23 +207,37 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
     fn kseed_round(&mut self, round: usize) -> anyhow::Result<f64> {
         let q = self.cfg.sample_zo.clamp(1, self.cfg.clients);
         let picked = self.rng.choose(self.cfg.clients, q);
+        // parallel fan-out, RNGs pre-derived, fold in sampled order
+        let jobs: Vec<(usize, Xoshiro256)> = picked
+            .iter()
+            .map(|&cid| (cid, round_client_rng(self.cfg.seed, 0x4B, round, cid)))
+            .collect();
+        let results = {
+            let backend = self.backend;
+            let global = &self.global;
+            let clients = &self.clients;
+            let pool = &self.pool;
+            let ks = &self.ks;
+            let cfg = &self.cfg;
+            parallel_map_n(resolve_workers(self.cfg.threads), jobs, move |(cid, mut crng)| {
+                kseed_local(
+                    backend,
+                    global,
+                    &clients[cid].data,
+                    pool,
+                    ks,
+                    &cfg.zo,
+                    cfg.lr_client_zo,
+                    &mut crng,
+                )
+                .map(|hist| (cid, hist))
+            })
+        };
         let mut histories: Vec<(Vec<SeedGrad>, f64)> = Vec::new();
         let mut mean_abs = 0.0f64;
         let mut count = 0usize;
-        for &cid in &picked {
-            let mut crng = Xoshiro256::seed_from(
-                self.cfg.seed ^ 0x4B ^ (round as u64) << 20 ^ cid as u64,
-            );
-            let hist = kseed_local(
-                self.backend,
-                &self.global,
-                &self.clients[cid].data,
-                &self.pool,
-                &self.ks,
-                &self.cfg.zo,
-                self.cfg.lr_client_zo,
-                &mut crng,
-            )?;
+        for r in results {
+            let (cid, hist) = r?;
             for h in &hist {
                 mean_abs += h.ghat.abs();
                 count += 1;

@@ -13,12 +13,13 @@
 use crate::comm::CommLedger;
 use crate::config::FedConfig;
 use crate::data::loader::{eval_chunks, ClientData, Source};
-use crate::fed::client::{warm_local_train, ClientState, Resource};
+use crate::fed::client::{round_client_rng, warm_local_train, ClientState, Resource};
 use crate::fed::server::assign_resources;
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
 use crate::model::manifest::ModelEntry;
 use crate::model::params::ParamVec;
+use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
 
 /// Index map from the half-width flat vector into the full flat vector.
@@ -188,42 +189,65 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
     }
 
     /// One round: sample from *all* clients; high-res train the full net,
-    /// low-res train the half slice; aggregate position-wise.
+    /// low-res train the half slice; aggregate position-wise. Clients run
+    /// in parallel with pre-derived RNGs and an order-canonical fold, so
+    /// results are bit-identical for every worker count (see
+    /// `fed::server`'s threading model).
     pub fn round(&mut self, round: usize) -> anyhow::Result<f64> {
         let q = self.cfg.sample_zo.clamp(1, self.cfg.clients);
         let picked = self.rng.choose(self.cfg.clients, q);
+
+        enum Out {
+            Full(ParamVec, f64, LossSums),
+            Half(ParamVec, f64, LossSums),
+        }
+        let jobs: Vec<(usize, Xoshiro256)> = picked
+            .iter()
+            .map(|&cid| (cid, round_client_rng(self.cfg.seed, 0, round, cid)))
+            .collect();
+        let results = {
+            let full = self.full;
+            let half = self.half;
+            let global = &self.global;
+            let map = &self.map;
+            let clients = &self.clients;
+            let cfg = &self.cfg;
+            parallel_map_n(
+                resolve_workers(self.cfg.threads),
+                jobs,
+                move |(cid, mut crng)| -> anyhow::Result<Out> {
+                    let client = &clients[cid];
+                    match client.resource {
+                        Resource::High => {
+                            let (w, sums) =
+                                warm_local_train(full, global, &client.data, cfg, &mut crng)?;
+                            Ok(Out::Full(w, client.n() as f64, sums))
+                        }
+                        Resource::Low => {
+                            let sub = map.slice(global);
+                            let (w, sums) =
+                                warm_local_train(half, &sub, &client.data, cfg, &mut crng)?;
+                            Ok(Out::Half(w, client.n() as f64, sums))
+                        }
+                    }
+                },
+            )
+        };
+
         let mut full_updates = Vec::new();
         let mut half_updates = Vec::new();
         let mut train = LossSums::default();
         let mut bytes = 0u64;
-        for &cid in &picked {
-            let client = &self.clients[cid];
-            let mut crng =
-                Xoshiro256::seed_from(self.cfg.seed ^ (round as u64) << 20 ^ cid as u64);
-            match client.resource {
-                Resource::High => {
-                    let (w, sums) = warm_local_train(
-                        self.full,
-                        &self.global,
-                        &client.data,
-                        &self.cfg,
-                        &mut crng,
-                    )?;
+        for r in results {
+            match r? {
+                Out::Full(w, n, sums) => {
                     train.add(sums);
-                    full_updates.push((w, client.n() as f64));
+                    full_updates.push((w, n));
                     bytes += (self.full.dim() * 4) as u64;
                 }
-                Resource::Low => {
-                    let sub = self.map.slice(&self.global);
-                    let (w, sums) = warm_local_train(
-                        self.half,
-                        &sub,
-                        &client.data,
-                        &self.cfg,
-                        &mut crng,
-                    )?;
+                Out::Half(w, n, sums) => {
                     train.add(sums);
-                    half_updates.push((w, client.n() as f64));
+                    half_updates.push((w, n));
                     bytes += (self.half.dim() * 4) as u64;
                 }
             }

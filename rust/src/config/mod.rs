@@ -88,6 +88,11 @@ pub struct FedConfig {
     /// let high-resource clients keep making first-order updates in step 2
     /// (§A.4 ablation; default false = all-ZO, which the paper finds better)
     pub mixed_step2: bool,
+    /// worker threads for the parallel round engine (0 = auto: the
+    /// `ZOWARMUP_THREADS` env override, else available parallelism).
+    /// Results are bit-identical for every value — see the threading
+    /// model docs in `fed::server`.
+    pub threads: usize,
 }
 
 impl Default for FedConfig {
@@ -110,6 +115,7 @@ impl Default for FedConfig {
             eval_every: 5,
             seed: 0,
             mixed_step2: false,
+            threads: 0,
         }
     }
 }
@@ -158,6 +164,30 @@ impl FedConfig {
             "tau must be in (0,1]"
         );
         anyhow::ensure!(self.batch > 0, "batch must be > 0");
+        // seed-derivation field widths: the SeedIssuer packs (round,
+        // client, s) into 24/24/16-bit fields and the per-client local
+        // RNG (`fed::client::round_client_rng`) gives the client id 20
+        // bits — exceeding a field silently aliases another stream. The
+        // client bound below is the tighter of the two.
+        anyhow::ensure!(
+            self.clients <= crate::fed::client::MAX_SIM_CLIENTS,
+            "clients {} exceeds the RNG-derivation limit {}",
+            self.clients,
+            crate::fed::client::MAX_SIM_CLIENTS
+        );
+        anyhow::ensure!(
+            self.rounds_total <= crate::zo::MAX_ROUNDS,
+            "rounds_total {} exceeds the seed-derivation limit {}",
+            self.rounds_total,
+            crate::zo::MAX_ROUNDS
+        );
+        anyhow::ensure!(
+            self.zo.s_seeds.saturating_mul(self.zo.grad_steps)
+                <= crate::zo::MAX_SEEDS_PER_ROUND,
+            "s_seeds * grad_steps = {} exceeds the per-round seed limit {}",
+            self.zo.s_seeds.saturating_mul(self.zo.grad_steps),
+            crate::zo::MAX_SEEDS_PER_ROUND
+        );
         Ok(())
     }
 
@@ -182,6 +212,7 @@ impl FedConfig {
         self.eval_every = a.usize_or("eval-every", self.eval_every)?;
         self.seed = a.usize_or("seed", self.seed as usize)? as u64;
         self.mixed_step2 = a.bool_or("mixed-step2", self.mixed_step2)?;
+        self.threads = a.usize_or("threads", self.threads)?;
         if let Some(d) = a.get("dist") {
             self.zo.dist =
                 Distribution::parse(d).ok_or_else(|| anyhow::anyhow!("bad --dist {d:?}"))?;
@@ -351,6 +382,32 @@ mod tests {
         let mut c = FedConfig::default();
         c.zo.tau = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn seed_derivation_limits_enforced() {
+        let mut c = FedConfig::default();
+        c.zo.s_seeds = 4096;
+        c.zo.grad_steps = 17; // 4096 * 17 > 2^16
+        assert!(c.validate().is_err());
+        c.zo.grad_steps = 16; // exactly 2^16: still representable
+        assert!(c.validate().is_ok());
+        let mut c = FedConfig::default();
+        c.clients = crate::zo::MAX_CLIENTS + 1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn threads_override() {
+        let argv: Vec<String> = "--threads 4"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = FedConfig::default();
+        assert_eq!(c.threads, 0); // default: auto
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.threads, 4);
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! gradients) so 100+ runs fit a 1-core budget; the e2e example, fig3
 //! (`--backend xla`), fig5 and table5 exercise the full XLA/PJRT path
 //! (DESIGN.md §4).
+//!
+//! Every run here inherits the parallel round engine through
+//! `FedConfig::threads` (0 = auto, overridable per-sweep via
+//! `ZOWARMUP_THREADS` / `zowarmup exp --threads N`). Worker count never
+//! changes results — table cells are bit-identical across thread counts
+//! (`fed::server`'s threading model) — so sweeps can use every core
+//! without invalidating paper-comparison numbers.
 
 use std::sync::Arc;
 

@@ -56,6 +56,38 @@ pub fn warm_local_train<B: ModelBackend>(
     Ok((w, first_epoch))
 }
 
+/// Hard cap on simulated clients: the per-(round, client) RNG packing
+/// below gives the client id the low 20 bits (enforced by
+/// `FedConfig::validate`; the SeedIssuer's 24-bit field is looser).
+pub const MAX_SIM_CLIENTS: usize = 1 << 20;
+
+/// Per-(round, client) local RNG shared by every round engine (warm /
+/// FO local SGD, FedKSeed minibatch + pool draws): a pure function of
+/// immutable inputs, so it can be derived before a parallel fan-out.
+/// `salt` decorrelates engines that need independent streams for the
+/// same (round, client) pair. The packing `round << 20 | cid` means a
+/// `cid >= 2^20` would alias another (round, client) stream — the same
+/// silent-collision class the SeedIssuer guards against.
+pub fn round_client_rng(master: u64, salt: u64, round: usize, cid: usize) -> Xoshiro256 {
+    debug_assert!(
+        cid < MAX_SIM_CLIENTS,
+        "client id {cid} overflows the 20-bit RNG field"
+    );
+    Xoshiro256::seed_from(master ^ salt ^ ((round as u64) << 20) ^ cid as u64)
+}
+
+/// Number of seed blocks a client with `n` samples actually runs — the
+/// server derives `s_seeds * zo_step_count(..)` seeds per client *before*
+/// the parallel fan-out, so this must stay the single source of truth for
+/// [`zo_step_chunks`]'s group count.
+pub fn zo_step_count(n: usize, grad_steps: usize) -> usize {
+    if n == 0 {
+        grad_steps
+    } else {
+        grad_steps.min(n).max(1)
+    }
+}
+
 /// ZO-phase data staging: split the client's full dataset into
 /// `grad_steps` groups of chunked batches (grad_steps = 1 → one group =
 /// the whole dataset, the paper's single full-batch step).
@@ -64,7 +96,7 @@ pub fn zo_step_chunks(data: &ClientData, batch: usize, grad_steps: usize) -> Vec
     if n == 0 {
         return vec![Vec::new(); grad_steps];
     }
-    let steps = grad_steps.min(n).max(1);
+    let steps = zo_step_count(n, grad_steps);
     let per = n.div_ceil(steps);
     let mut out = Vec::with_capacity(steps);
     for s in 0..steps {
@@ -127,6 +159,7 @@ mod tests {
         for steps in [1, 2, 4, 6] {
             let groups = zo_step_chunks(&data, 8, steps);
             assert_eq!(groups.len(), steps);
+            assert_eq!(groups.len(), zo_step_count(data.n(), steps));
             let total: f64 = groups
                 .iter()
                 .flatten()

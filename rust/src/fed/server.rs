@@ -5,6 +5,28 @@
 //! Phase 2 (rounds pivot..total): the seed-based SPSA protocol over *all*
 //! clients (optionally mixed with continued FO updates for the §A.4
 //! ablation).
+//!
+//! ## Threading model
+//!
+//! Client-local work inside a round is embarrassingly parallel, so both
+//! round kinds fan the sampled clients out over a scoped thread pool
+//! ([`crate::util::pool::parallel_map_n`]). The engine guarantees results
+//! **bit-identical to the sequential path for every worker count**:
+//!
+//! 1. every per-client random input (local-SGD RNG, issued seed block) is
+//!    derived *before* the fan-out from `(master seed, round, client id)`
+//!    or the stateless [`SeedIssuer`], never from shared mutable RNG state
+//!    inside a job;
+//! 2. jobs are pure `Send` functions of `(global weights, shard, inputs)`
+//!    — all mutation of the federation (ledger, server optimizer, log)
+//!    happens after the join;
+//! 3. contributions fold back in sampled-client order, and the fused
+//!    ZOUPDATE applies them in one order-canonicalized pass
+//!    (`perturb_axpy_many_sharded`, itself sharded across the same worker
+//!    budget with bit-exact stream fast-forwarding).
+//!
+//! Worker count comes from `FedConfig::threads` (`0` = auto: the
+//! `ZOWARMUP_THREADS` env override, else available parallelism).
 
 use std::time::Instant;
 
@@ -12,12 +34,15 @@ use crate::comm::CommLedger;
 use crate::config::FedConfig;
 use crate::data::loader::{eval_chunks, ClientData, Source};
 use crate::fed::aggregate::{weighted_average, ServerOptState};
-use crate::fed::client::{warm_local_train, zo_step_chunks, ClientState, Resource};
+use crate::fed::client::{
+    round_client_rng, warm_local_train, zo_step_chunks, zo_step_count, ClientState, Resource,
+};
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
 use crate::model::params::ParamVec;
+use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
-use crate::zo::{apply_zo_update, zo_round_bytes, zoopt, SeedIssuer, ZoContribution};
+use crate::zo::{apply_zo_update_sharded, zo_round_ledger, zoopt, SeedIssuer, ZoContribution};
 
 /// Full federation state for one training run.
 pub struct Federation<'b, B: ModelBackend> {
@@ -103,7 +128,19 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         Ok(sums)
     }
 
-    /// One warm round (Algorithm 1 lines 2-8).
+    /// Per-(round, client) local RNG (see [`round_client_rng`]).
+    fn client_rng(&self, cid: usize) -> Xoshiro256 {
+        round_client_rng(self.cfg.seed, 0, self.round, cid)
+    }
+
+    /// Effective worker count for this run (see module docs).
+    pub fn workers(&self) -> usize {
+        resolve_workers(self.cfg.threads)
+    }
+
+    /// One warm round (Algorithm 1 lines 2-8). Sampled clients train in
+    /// parallel; see the module-level threading model for the
+    /// determinism argument.
     pub fn warm_round(&mut self) -> anyhow::Result<f64> {
         let hi = self.high_ids();
         anyhow::ensure!(!hi.is_empty(), "no high-resource clients to warm up");
@@ -115,19 +152,28 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             .map(|i| hi[i])
             .collect();
 
+        // derive each client's RNG before the fan-out (determinism rule 1)
+        let jobs: Vec<(usize, Xoshiro256)> = picked
+            .iter()
+            .map(|&cid| (cid, self.client_rng(cid)))
+            .collect();
+        let workers = self.workers();
+        let results = {
+            let backend = self.backend;
+            let global = &self.global;
+            let clients = &self.clients;
+            let cfg = &self.cfg;
+            parallel_map_n(workers, jobs, move |(cid, mut crng)| {
+                warm_local_train(backend, global, &clients[cid].data, cfg, &mut crng)
+                    .map(|out| (cid, out))
+            })
+        };
+
+        // fold in sampled order (determinism rule 3)
         let mut updates: Vec<(ParamVec, f64)> = Vec::with_capacity(p);
         let mut train = LossSums::default();
-        for &cid in &picked {
-            let mut crng = Xoshiro256::seed_from(
-                self.cfg.seed ^ (self.round as u64) << 20 ^ cid as u64,
-            );
-            let (w, sums) = warm_local_train(
-                self.backend,
-                &self.global,
-                &self.clients[cid].data,
-                &self.cfg,
-                &mut crng,
-            )?;
+        for r in results {
+            let (cid, (w, sums)) = r?;
             train.add(sums);
             updates.push((w, self.clients[cid].n() as f64));
         }
@@ -143,7 +189,11 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         Ok(train.mean_loss())
     }
 
-    /// One ZO round (Algorithm 1 lines 11-21).
+    /// One ZO round (Algorithm 1 lines 11-21). Sampled clients evaluate
+    /// their seed blocks (or, with `mixed_step2`, run FO locally) in
+    /// parallel; every random input is pre-derived and the fold-back is
+    /// order-canonical, so the round is bit-identical for any worker
+    /// count (see module docs).
     pub fn zo_round(&mut self) -> anyhow::Result<f64> {
         // Q ⊆ K — all resource classes participate in step 2. With
         // mixed_step2 (§A.4 ablation) the sampled high-res clients do FO
@@ -151,51 +201,107 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let q = self.cfg.sample_zo.clamp(1, self.cfg.clients);
         let picked = self.rng.choose(self.cfg.clients, q);
 
+        enum Job {
+            Fo { cid: usize, rng: Xoshiro256 },
+            Zo { cid: usize, seeds: Vec<u64> },
+        }
+        enum Out {
+            Fo { cid: usize, w: ParamVec, sums: LossSums },
+            Zo(ZoContribution),
+        }
+
+        // pre-derive every per-client random input (determinism rule 1):
+        // the FO local RNG and the issued seed block are both pure
+        // functions of (master seed, round, client id).
+        let jobs: Vec<Job> = picked
+            .iter()
+            .map(|&cid| {
+                let client = &self.clients[cid];
+                if self.cfg.mixed_step2 && client.is_high() {
+                    Job::Fo { cid, rng: self.client_rng(cid) }
+                } else {
+                    let steps = zo_step_count(client.n(), self.cfg.zo.grad_steps);
+                    let seeds = self
+                        .issuer
+                        .seeds_for(self.round, cid, self.cfg.zo.s_seeds * steps);
+                    Job::Zo { cid, seeds }
+                }
+            })
+            .collect();
+
+        let workers = self.workers();
+        let results = {
+            let backend = self.backend;
+            let global = &self.global;
+            let clients = &self.clients;
+            let cfg = &self.cfg;
+            parallel_map_n(workers, jobs, move |job| -> anyhow::Result<Out> {
+                match job {
+                    Job::Fo { cid, mut rng } => {
+                        let (w, sums) = warm_local_train(
+                            backend,
+                            global,
+                            &clients[cid].data,
+                            cfg,
+                            &mut rng,
+                        )?;
+                        Ok(Out::Fo { cid, w, sums })
+                    }
+                    Job::Zo { cid, seeds } => {
+                        let client = &clients[cid];
+                        let groups = zo_step_chunks(
+                            &client.data,
+                            backend.batch_size(),
+                            cfg.zo.grad_steps,
+                        );
+                        debug_assert_eq!(groups.len() * cfg.zo.s_seeds, seeds.len());
+                        let deltas = zoopt(
+                            backend,
+                            global,
+                            &groups,
+                            &seeds,
+                            &cfg.zo,
+                            cfg.lr_client_zo,
+                        )?;
+                        Ok(Out::Zo(ZoContribution {
+                            client: cid,
+                            seeds,
+                            delta_l: deltas,
+                            n_samples: client.n(),
+                        }))
+                    }
+                }
+            })
+        };
+
+        // fold in sampled order (determinism rule 3)
         let mut contributions: Vec<ZoContribution> = Vec::new();
         let mut fo_updates: Vec<(ParamVec, f64)> = Vec::new();
         let mut train = LossSums::default();
-        let mut fo_participants = 0usize;
-        for &cid in &picked {
-            let client = &self.clients[cid];
-            if self.cfg.mixed_step2 && client.is_high() {
-                let mut crng = Xoshiro256::seed_from(
-                    self.cfg.seed ^ (self.round as u64) << 20 ^ cid as u64,
-                );
-                let (w, sums) =
-                    warm_local_train(self.backend, &self.global, &client.data, &self.cfg, &mut crng)?;
-                train.add(sums);
-                fo_updates.push((w, client.n() as f64));
-                fo_participants += 1;
-                continue;
+        for r in results {
+            match r? {
+                Out::Fo { cid, w, sums } => {
+                    train.add(sums);
+                    fo_updates.push((w, self.clients[cid].n() as f64));
+                }
+                Out::Zo(c) => contributions.push(c),
             }
-            let groups = zo_step_chunks(
-                &client.data,
-                self.backend.batch_size(),
-                self.cfg.zo.grad_steps,
-            );
-            let steps = groups.len();
-            let seeds = self
-                .issuer
-                .seeds_for(self.round, cid, self.cfg.zo.s_seeds * steps);
-            let deltas = zoopt(
-                self.backend,
-                &self.global,
-                &groups,
-                &seeds,
-                &self.cfg.zo,
-                self.cfg.lr_client_zo,
-            )?;
-            contributions.push(ZoContribution {
-                client: cid,
-                seeds,
-                delta_l: deltas,
-                n_samples: client.n(),
-            });
         }
+        let fo_participants = fo_updates.len();
 
         // ZOUPDATE: reconstruct the aggregated step from (seed, ΔL) pairs.
-        let lr = self.cfg.lr_client_zo * self.cfg.lr_server_zo;
-        apply_zo_update(&mut self.global, &contributions, &self.cfg.zo, lr);
+        // Intermediate grad_steps blocks replay at lr_client (matching the
+        // client's local trajectory); the server lr scales only the final
+        // aggregated block. The weight-vector pass shards across the same
+        // worker budget.
+        apply_zo_update_sharded(
+            &mut self.global,
+            &contributions,
+            &self.cfg.zo,
+            self.cfg.lr_client_zo,
+            self.cfg.lr_server_zo,
+            workers,
+        );
 
         // mixed step-2: fold FO updates in afterwards (weighted FedAvg step)
         if !fo_updates.is_empty() {
@@ -208,31 +314,20 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 .apply(&mut self.global, &delta, self.cfg.lr_server_warm * share);
         }
 
-        // comm accounting
-        let zo_participants = contributions.len();
-        let (up_per, down_per) = zo_round_bytes(
-            self.cfg.zo.s_seeds * self.cfg.zo.grad_steps,
-            zo_participants,
+        // comm accounting: seed traffic is charged only to ZO
+        // participants (and only for the seeds actually issued — small
+        // clients run fewer grad_steps blocks); FO participants exchange
+        // full weights instead.
+        let total_seeds: usize = contributions.iter().map(|c| c.seeds.len()).sum();
+        let (up, down) = zo_round_ledger(
+            total_seeds,
+            contributions.len(),
+            fo_participants,
+            (self.backend.dim() * 4) as u64,
         );
-        let d4 = (self.backend.dim() * 4) as u64;
-        let up = up_per * zo_participants as u64 + d4 * fo_participants as u64;
-        let down = down_per * q as u64 + d4 * fo_participants as u64;
         self.ledger.record_round(up, down);
 
-        // training signal: mean |ΔL| is the ZO-phase progress proxy; report
-        // the mean loss at w via the contributions' side data when FO ran.
-        let mean_abs_dl = {
-            let all: Vec<f64> = contributions
-                .iter()
-                .flat_map(|c| c.delta_l.iter().cloned())
-                .collect();
-            if all.is_empty() {
-                train.mean_loss()
-            } else {
-                all.iter().map(|d| d.abs()).sum::<f64>() / all.len() as f64
-            }
-        };
-        Ok(mean_abs_dl)
+        Ok(zo_train_signal(&contributions, &train))
     }
 
     /// Run one round (phase chosen by the pivot), with eval + logging.
@@ -273,6 +368,30 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             self.step()?;
         }
         Ok(())
+    }
+}
+
+/// ZO-phase training signal for one round: mean |ΔL| over every
+/// contribution (the SPSA progress proxy); a mixed round with no ZO
+/// contributions falls back to the FO participants' mean loss; a fully
+/// empty round reports 0.0. Always finite — the signal is logged as the
+/// round's `train_loss` and must never poison the CSV with NaN.
+pub fn zo_train_signal(contributions: &[ZoContribution], fo_train: &LossSums) -> f64 {
+    let (sum, n) = contributions
+        .iter()
+        .flat_map(|c| c.delta_l.iter())
+        .fold((0.0f64, 0usize), |(s, k), d| (s + d.abs(), k + 1));
+    let v = if n > 0 {
+        sum / n as f64
+    } else if fo_train.count > 0.0 {
+        fo_train.mean_loss()
+    } else {
+        0.0
+    };
+    if v.is_finite() {
+        v
+    } else {
+        0.0
     }
 }
 
@@ -412,6 +531,73 @@ mod tests {
         let (g2, a2) = run(cfg);
         assert_eq!(g1, g2);
         assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        // the engine's core guarantee: worker count is invisible in the
+        // outputs — same final weights, same logs, bit for bit.
+        let run_with = |threads: usize, mixed: bool| {
+            let mut cfg = smoke_cfg();
+            cfg.threads = threads;
+            cfg.mixed_step2 = mixed;
+            let (be, shards, test) = build(cfg.clone());
+            let init = ParamVec::zeros(be.dim());
+            let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+            fed.run().unwrap();
+            (fed.global.clone(), fed.log)
+        };
+        for mixed in [false, true] {
+            let (g1, log1) = run_with(1, mixed);
+            let (g4, log4) = run_with(4, mixed);
+            assert_eq!(g1, g4, "weights must not depend on threads (mixed={mixed})");
+            assert_eq!(log1.rounds.len(), log4.rounds.len());
+            for (a, b) in log1.rounds.iter().zip(&log4.rounds) {
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+                assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+                assert_eq!(a.bytes_up, b.bytes_up);
+                assert_eq!(a.bytes_down, b.bytes_down);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_step_run_stays_finite_with_server_lr() {
+        // grad_steps=2 with lr_server_zo != 1 exercises the per-block
+        // replay path end-to-end (the protocol-level regression lives in
+        // zo::tests::multi_step_zoopt_consistency).
+        let mut cfg = smoke_cfg();
+        cfg.zo.grad_steps = 2;
+        cfg.threads = 2;
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+        fed.run().unwrap();
+        assert!(fed.global.is_finite());
+        assert!(fed.log.rounds.iter().all(|r| r.train_loss.is_finite()));
+    }
+
+    #[test]
+    fn empty_round_signal_is_zero_not_nan() {
+        // a ZO round with zero contributions and no FO updates must log a
+        // finite 0.0 train signal, never NaN
+        let s = zo_train_signal(&[], &LossSums::default());
+        assert_eq!(s, 0.0);
+        assert!(s.is_finite());
+        // FO-only mixed round falls back to the FO mean loss
+        let fo = LossSums {
+            loss_sum: 6.0,
+            correct: 1.0,
+            count: 3.0,
+        };
+        assert_eq!(zo_train_signal(&[], &fo), 2.0);
+        // non-finite inputs are clamped rather than logged
+        let bad = LossSums {
+            loss_sum: f64::NAN,
+            correct: 0.0,
+            count: 1.0,
+        };
+        assert_eq!(zo_train_signal(&[], &bad), 0.0);
     }
 
     #[test]

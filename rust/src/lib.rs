@@ -16,6 +16,26 @@
 //! * [`comm`] — measured byte accounting + the eq. 4/5 analytic cost model.
 //! * [`exp`] — runners that regenerate every paper table and figure.
 //! * [`util`] — offline substrates (RNG, JSON, CLI, bench, property tests).
+//!
+//! ## Threading model
+//!
+//! Federated rounds execute sampled clients in parallel on a scoped
+//! thread pool (`util::pool::parallel_map_n`), and the fused ZOUPDATE
+//! shards the weight vector across the same workers
+//! (`model::params::perturb_axpy_many_sharded`). The worker count comes
+//! from `FedConfig::threads`: `0` (the default) resolves to the
+//! `ZOWARMUP_THREADS` env var, else the machine's available parallelism.
+//!
+//! **Determinism guarantee:** results are bit-identical for every worker
+//! count. Per-client randomness is derived *before* each fan-out from
+//! `(master seed, round, client id)`, jobs are pure functions of the
+//! broadcast weights and the client shard, results fold back in sampled
+//! order, and the sharded weight pass fast-forwards each perturbation
+//! stream to its 64-aligned chunk offset (one u64 per 64-element block,
+//! LSB-first) so every weight element sees the identical f32 operations
+//! in the identical order. See `fed::server` for the full argument and
+//! `fed::server::tests::thread_count_does_not_change_results` for the
+//! enforcement.
 
 pub mod baselines;
 pub mod comm;

@@ -31,8 +31,12 @@ SUBCOMMANDS
             --clients K --hi-frac F --rounds R --pivot P
             --seeds-s S --tau T --eps E --dist rademacher|gaussian
             --server-opt sgd|adam --config file.json --out runs/train.csv
+            --threads N                (parallel round engine; 0 = auto,
+                                        results identical for every N)
   exp     regenerate a paper table/figure
             zowarmup exp <table1..table7|fig3..fig7|all> [--scale smoke|default|paper]
+            [--threads N]              (worker threads for every run in
+                                        the sweep; 0 = auto)
   comm    print the Table 1 communication/memory cost model
   check   validate the artifact manifest and compile all artifacts
 ";
@@ -170,6 +174,13 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     let scale = Scale::parse(&args.str_or("scale", "smoke"))
         .ok_or_else(|| anyhow::anyhow!("bad --scale"))?;
     let artifacts = args.str_or("artifacts", "artifacts");
+    // exp runners build their configs internally with threads = 0 (auto),
+    // which resolves through ZOWARMUP_THREADS — so the flag plumbs through
+    // the env. Determinism is unaffected (see fed::server docs).
+    let threads = args.usize_or("threads", 0)?;
+    if threads > 0 {
+        std::env::set_var("ZOWARMUP_THREADS", threads.to_string());
+    }
     args.reject_unknown()?;
     let report = exp::run(&id, scale, &artifacts)?;
     println!("{report}");

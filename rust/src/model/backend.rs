@@ -85,7 +85,14 @@ impl LossSums {
 }
 
 /// The uniform compute interface (see module docs).
-pub trait ModelBackend {
+///
+/// `Sync` is a supertrait: the federated round engines share one backend
+/// reference across the worker threads of a round fan-out
+/// (`fed::server`'s threading model), so every backend must be safe to
+/// call concurrently through `&self`. Both implementations qualify —
+/// [`LinearBackend`] is plain data, and the PJRT executables behind
+/// `XlaBackend` are compiled once and reentrant at execute time.
+pub trait ModelBackend: Sync {
     /// Flat parameter dimension.
     fn dim(&self) -> usize;
 

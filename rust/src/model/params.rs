@@ -109,15 +109,35 @@ pub fn perturb_axpy_many(w: &mut [f32], items: &[(u64, f32)], tau: f32, dist: Di
         }
         return;
     }
-    let mut streams: Vec<(crate::util::rng::Xoshiro256, u32)> = items
+    let mut streams = rademacher_streams(items, tau, 0);
+    fused_rademacher_axpy(w, &mut streams);
+}
+
+/// Build the interleaved stream set for the fused Rademacher pass, with
+/// each stream fast-forwarded by `skip_blocks` u64 draws (= `skip_blocks`
+/// 64-element weight blocks — the shard-offset contract of
+/// [`Xoshiro256::discard`]).
+fn rademacher_streams(
+    items: &[(u64, f32)],
+    tau: f32,
+    skip_blocks: u64,
+) -> Vec<(Xoshiro256, u32)> {
+    items
         .iter()
         .map(|&(seed, coeff)| {
-            (
-                crate::util::rng::Xoshiro256::seed_from(seed),
-                (coeff * tau).to_bits(),
-            )
+            let mut rng = Xoshiro256::seed_from(seed);
+            rng.discard(skip_blocks);
+            (rng, (coeff * tau).to_bits())
         })
-        .collect();
+        .collect()
+}
+
+/// The fused inner kernel: per 64-element block, draw one u64 from every
+/// stream and apply the signed constant branchlessly. Consumes bits
+/// LSB-first, one u64 per stream per block — identical bit consumption to
+/// [`PerturbStream::axpy`], which is what makes block-aligned sharding
+/// ([`perturb_axpy_many_sharded`]) bit-exact.
+fn fused_rademacher_axpy(w: &mut [f32], streams: &mut [(Xoshiro256, u32)]) {
     for chunk in w.chunks_mut(64) {
         for (rng, ct_bits) in streams.iter_mut() {
             let mut bits = rng.next_u64();
@@ -128,6 +148,55 @@ pub fn perturb_axpy_many(w: &mut [f32], items: &[(u64, f32)], tau: f32, dist: Di
             }
         }
     }
+}
+
+/// Below this many weights the per-thread setup (spawn + stream
+/// fast-forward) outweighs the memory-bandwidth win; fall back to the
+/// single-threaded fused pass.
+const SHARD_MIN_DIM: usize = 1 << 14;
+
+/// Sharded variant of [`perturb_axpy_many`]: split `w` into `workers`
+/// disjoint 64-aligned chunks and apply the fused pass to each on its own
+/// scoped thread. Each worker rebuilds every perturbation stream from its
+/// seed and fast-forwards it by `chunk_offset / 64` u64 draws, preserving
+/// the LSB-first one-u64-per-64-block consumption contract — so the
+/// result is **bit-identical** to the unsharded fused pass (each weight
+/// element sees the same additions in the same order) for every worker
+/// count. At ResNet scale this takes ZOUPDATE from single-core
+/// memory-bound to parallel across the weight vector.
+///
+/// Gaussian streams consume a data-dependent number of draws per value
+/// (Box-Muller rejection), so they cannot be fast-forwarded by counting;
+/// that distribution falls back to the sequential path unchanged.
+pub fn perturb_axpy_many_sharded(
+    w: &mut [f32],
+    items: &[(u64, f32)],
+    tau: f32,
+    dist: Distribution,
+    workers: usize,
+) {
+    if workers <= 1
+        || items.len() <= 1
+        || dist != Distribution::Rademacher
+        || w.len() < SHARD_MIN_DIM
+    {
+        return perturb_axpy_many(w, items, tau, dist);
+    }
+    let blocks = w.len().div_ceil(64);
+    let shards = workers.min(blocks);
+    // ceil so every worker gets a whole number of 64-blocks and the chunk
+    // boundaries stay 64-aligned (the last chunk absorbs the remainder).
+    let blocks_per = blocks.div_ceil(shards);
+    let chunk_len = blocks_per * 64;
+    std::thread::scope(|scope| {
+        for (i, chunk) in w.chunks_mut(chunk_len).enumerate() {
+            scope.spawn(move || {
+                let skip = (i * blocks_per) as u64;
+                let mut streams = rademacher_streams(items, tau, skip);
+                fused_rademacher_axpy(chunk, &mut streams);
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -265,6 +334,49 @@ mod tests {
             s.axpy(&mut seq, coeff);
         }
         assert_eq!(fused, seq);
+    }
+
+    #[test]
+    fn sharded_matches_fused_across_boundaries() {
+        // property: for dims straddling shard boundaries and any worker
+        // count, the sharded pass is bit-identical to the unsharded fused
+        // pass. Dims below SHARD_MIN_DIM exercise the fallback; dims above
+        // exercise real sharding with non-aligned remainders.
+        let items: Vec<(u64, f32)> =
+            (0..9).map(|i| (777 + i, 2e-3 * (i as f32 - 4.0))).collect();
+        let dims = [
+            1usize,
+            63,
+            64,
+            65,
+            SHARD_MIN_DIM - 1,
+            SHARD_MIN_DIM,
+            SHARD_MIN_DIM + 1,
+            SHARD_MIN_DIM + 63,
+            SHARD_MIN_DIM + 64,
+            3 * SHARD_MIN_DIM + 17,
+        ];
+        for &d in &dims {
+            let mut base = vec![0.25f32; d];
+            perturb_axpy_many(&mut base, &items, 0.75, Distribution::Rademacher);
+            for workers in [1usize, 2, 3, 4, 7, 64] {
+                let mut sharded = vec![0.25f32; d];
+                perturb_axpy_many_sharded(
+                    &mut sharded,
+                    &items,
+                    0.75,
+                    Distribution::Rademacher,
+                    workers,
+                );
+                assert_eq!(sharded, base, "d={d} workers={workers}");
+            }
+        }
+        // gaussian falls back to the sequential path bit-exactly
+        let mut a = vec![0.1f32; SHARD_MIN_DIM + 5];
+        let mut b = a.clone();
+        perturb_axpy_many(&mut a, &items, 0.5, Distribution::Gaussian);
+        perturb_axpy_many_sharded(&mut b, &items, 0.5, Distribution::Gaussian, 4);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -22,6 +22,16 @@ pub struct Engine {
     cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+// SAFETY: the PJRT CPU client and its loaded executables are internally
+// thread-safe — compilation is memoized behind the `cache` mutex and PJRT
+// `Execute` is reentrant (the runtime takes no exclusive state per call;
+// see the Engine docs above). The xla FFI wrappers only lack the auto
+// markers because they hold opaque C++ pointers.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl<'e> Send for XlaBackend<'e> {}
+unsafe impl<'e> Sync for XlaBackend<'e> {}
+
 impl Engine {
     pub fn cpu() -> anyhow::Result<Self> {
         Ok(Self {

@@ -1,8 +1,18 @@
 //! Scoped parallel-map substrate (tokio/rayon unavailable offline).
 //!
 //! Client-local computations inside a federated round are independent, so
-//! the server fans them out with `parallel_map`. On a 1-core testbed this
-//! degrades gracefully to the sequential path (thread overhead avoided).
+//! the server fans them out with [`parallel_map_n`]. On a 1-core testbed
+//! this degrades gracefully to the sequential path (thread overhead
+//! avoided).
+//!
+//! ## Determinism contract
+//!
+//! `parallel_map_n` preserves item order in its output regardless of the
+//! worker count or scheduling, so any caller that (a) derives all
+//! per-item randomness *before* the fan-out and (b) folds results back in
+//! item order produces bit-identical state for every worker count. The
+//! federated round engines (`fed::server`, `baselines::*`) are built on
+//! exactly this contract — see the crate-level "Threading model" docs.
 
 /// Number of worker threads to use (respects `ZOWARMUP_THREADS`).
 pub fn worker_count() -> usize {
@@ -16,15 +26,24 @@ pub fn worker_count() -> usize {
         .unwrap_or(1)
 }
 
-/// Map `f` over `items` preserving order, using scoped threads when more
-/// than one worker is available and the job count warrants it.
-pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+/// Resolve a config-level thread count: `0` means "auto" (the
+/// `ZOWARMUP_THREADS` env override, else the machine's parallelism).
+pub fn resolve_workers(threads: usize) -> usize {
+    if threads == 0 {
+        worker_count()
+    } else {
+        threads
+    }
+}
+
+/// Map `f` over `items` preserving order with an explicit worker count.
+/// `workers <= 1` (or a single item) runs inline on the calling thread.
+pub fn parallel_map_n<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
-    let workers = worker_count();
     if workers <= 1 || items.len() <= 1 {
         return items.into_iter().map(f).collect();
     }
@@ -50,6 +69,17 @@ where
     slots.into_iter().map(|s| s.expect("worker died")).collect()
 }
 
+/// Map `f` over `items` preserving order, using scoped threads when more
+/// than one worker is available and the job count warrants it.
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    parallel_map_n(worker_count(), items, f)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,14 +91,38 @@ mod tests {
     }
 
     #[test]
+    fn explicit_worker_counts_agree() {
+        let items: Vec<i32> = (0..57).collect();
+        let seq = parallel_map_n(1, items.clone(), |x| x * x - 3);
+        for w in [2, 3, 8] {
+            assert_eq!(parallel_map_n(w, items.clone(), |x| x * x - 3), seq);
+        }
+    }
+
+    #[test]
     fn empty_and_single() {
         assert_eq!(parallel_map(Vec::<i32>::new(), |x| x), Vec::<i32>::new());
         assert_eq!(parallel_map(vec![7], |x| x + 1), vec![8]);
+        assert_eq!(parallel_map_n(4, Vec::<i32>::new(), |x| x), Vec::<i32>::new());
     }
 
     #[test]
     fn respects_env_override() {
         // worker_count is advisory; just exercise the parse path
         assert!(worker_count() >= 1);
+        assert_eq!(resolve_workers(3), 3);
+        assert!(resolve_workers(0) >= 1);
+    }
+
+    #[test]
+    fn fallible_jobs_surface_errors_in_order() {
+        let out: Vec<Result<i32, String>> = parallel_map_n(
+            4,
+            (0..20).collect::<Vec<i32>>(),
+            |x| if x == 13 { Err(format!("bad {x}")) } else { Ok(x) },
+        );
+        assert_eq!(out.len(), 20);
+        assert_eq!(out[13], Err("bad 13".to_string()));
+        assert_eq!(out[12], Ok(12));
     }
 }
