@@ -18,12 +18,24 @@ use crate::model::backend::{Batch, ModelBackend};
 use crate::model::params::ParamVec;
 use crate::util::rng::SplitMix64;
 
-/// Deterministic per-(round, client, s) seed derivation. Collision-free in
-/// practice: SplitMix64 over a unique packed index.
+/// Deterministic per-(round, client, s) seed derivation: SplitMix64 over a
+/// unique packed index.
+///
+/// The packing is `round << 40 | client << 16 | s`, which gives each field
+/// a hard width: `round < 2^24`, `client < 2^24`, `s < 2^16`. Exceeding a
+/// field would silently alias a *different* (round, client, s) triple —
+/// e.g. `s = 2^16` collides with `(round, client + 1, 0)` — so the bounds
+/// are asserted here and mirrored in `FedConfig::validate` (which caps
+/// `clients` and `s_seeds * grad_steps`, the per-round `s` range).
 #[derive(Debug, Clone)]
 pub struct SeedIssuer {
     pub root: u64,
 }
+
+/// Field widths of the packed seed index (documented protocol limits).
+pub const MAX_ROUNDS: usize = 1 << 24;
+pub const MAX_CLIENTS: usize = 1 << 24;
+pub const MAX_SEEDS_PER_ROUND: usize = 1 << 16;
 
 impl SeedIssuer {
     pub fn new(root: u64) -> Self {
@@ -31,6 +43,9 @@ impl SeedIssuer {
     }
 
     pub fn seed(&self, round: usize, client: usize, s: usize) -> u64 {
+        debug_assert!(round < MAX_ROUNDS, "round {round} overflows the 24-bit field");
+        debug_assert!(client < MAX_CLIENTS, "client {client} overflows the 24-bit field");
+        debug_assert!(s < MAX_SEEDS_PER_ROUND, "seed index {s} overflows the 16-bit field");
         let packed = (round as u64) << 40 | (client as u64) << 16 | s as u64;
         let mut sm = SplitMix64(self.root ^ packed.wrapping_mul(0xA24B_AED4_963E_E407));
         sm.next_u64()
@@ -123,31 +138,78 @@ fn apply_seed_block(w: &mut ParamVec, seeds: &[u64], deltas: &[f64], cfg: &ZoCon
 /// Server/participant-side ZOUPDATE: fold every contribution into the
 /// global parameters, weighting client j by n_j / n_Q (eq. 1's weighting
 /// carried into the ZO phase; Algorithm 1 line 31-32 with the evident
-/// descent sign). `lr` is the effective ZO learning rate
-/// (η_zo^c · η_zo^s).
+/// descent sign).
+///
+/// ## Multi-step replay consistency (`grad_steps > 1`)
+///
+/// A client running `grad_steps` local steps applies every *intermediate*
+/// seed block to its own weights at `lr_client` ([`zoopt`]), then measures
+/// the next block's ΔL at that updated point. The server's replay must
+/// honor the same per-block learning rates or it reconstructs a
+/// trajectory the client never followed: replaying *every* block at
+/// `lr_client · lr_server` (the pre-fix behavior) lands the global far
+/// from the points where the later blocks' ΔLs were actually measured
+/// whenever `lr_server != 1`. The fix: intermediate blocks replay at
+/// exactly `lr_client` (matching the client's local trajectory), and the
+/// server learning rate scales only the final aggregated gradient block.
+/// With `grad_steps = 1` (the paper's method) there is a single final
+/// block and this reduces bit-exactly to the old `lr_client · lr_server`
+/// behavior.
 pub fn apply_zo_update(
     global: &mut ParamVec,
     contributions: &[ZoContribution],
     cfg: &ZoConfig,
-    lr: f32,
+    lr_client: f32,
+    lr_server: f32,
+) {
+    apply_zo_update_sharded(global, contributions, cfg, lr_client, lr_server, 1)
+}
+
+/// [`apply_zo_update`] with the weight vector sharded across `workers`
+/// threads (`model::params::perturb_axpy_many_sharded`). Bit-identical to
+/// the single-threaded path for every worker count.
+pub fn apply_zo_update_sharded(
+    global: &mut ParamVec,
+    contributions: &[ZoContribution],
+    cfg: &ZoConfig,
+    lr_client: f32,
+    lr_server: f32,
+    workers: usize,
 ) {
     let n_total: f64 = contributions.iter().map(|c| c.n_samples as f64).sum();
     if n_total == 0.0 {
         return;
     }
+    // The f32 product preserves bit-compatibility with the historical
+    // single-lr API for grad_steps = 1 runs.
+    let lr_final = lr_client * lr_server;
     // Gather every (seed, coeff) pair, then apply in ONE fused pass over
     // the weights (perturb_axpy_many) — the updates are linear in w, so
     // order is immaterial up to f32 rounding (§Perf L3).
     let mut items: Vec<(u64, f32)> = Vec::new();
     for c in contributions {
         let weight = c.n_samples as f64 / n_total;
+        debug_assert_eq!(
+            c.seeds.len() % cfg.s_seeds,
+            0,
+            "seed count must be a whole number of S-blocks"
+        );
+        let blocks = (c.seeds.len() / cfg.s_seeds).max(1);
         for (i, &seed) in c.seeds.iter().enumerate() {
+            let block = i / cfg.s_seeds;
+            let lr = if block + 1 == blocks { lr_final } else { lr_client };
             let ghat = c.delta_l[i] / (2.0 * cfg.eps as f64);
             let coeff = -(lr as f64) * weight * ghat / cfg.s_seeds as f64;
             items.push((seed, coeff as f32));
         }
     }
-    crate::model::params::perturb_axpy_many(&mut global.0, &items, cfg.tau, cfg.dist);
+    crate::model::params::perturb_axpy_many_sharded(
+        &mut global.0,
+        &items,
+        cfg.tau,
+        cfg.dist,
+        workers,
+    );
 }
 
 /// Bytes on the wire for one ZO round, per participating client (measured
@@ -156,6 +218,33 @@ pub fn zo_round_bytes(s_seeds: usize, participants: usize) -> (u64, u64) {
     let up = (s_seeds * 4) as u64; // S f32 ΔL values
     // down: S issued seeds (8B) + the broadcast of all (seed, ΔL) pairs
     let down = (s_seeds * 8 + participants * s_seeds * (8 + 4)) as u64;
+    (up, down)
+}
+
+/// Round-total bytes for a (possibly mixed §A.4) ZO round: `zo_n` clients
+/// run the seed protocol with `total_seeds` seeds issued across them
+/// (heterogeneous per-client counts are fine — a client with fewer
+/// samples than `grad_steps` runs fewer blocks and is charged only for
+/// the seeds it was actually issued), and `fo_n` high-resource clients
+/// exchange full weight vectors (`dim_bytes` = 4·d).
+///
+/// Seed traffic is charged **only** to the ZO participants — FO
+/// participants never receive the seed broadcast, they download/upload
+/// full weights instead. This makes the accounting additive:
+/// `ledger(z, f) = ledger(z, 0) + ledger(0, f)` componentwise, which the
+/// pre-fix `down_per · q` formula violated by charging the seed downlink
+/// to FO participants too.
+pub fn zo_round_ledger(
+    total_seeds: usize,
+    zo_n: usize,
+    fo_n: usize,
+    dim_bytes: u64,
+) -> (u64, u64) {
+    // up: one f32 ΔL per issued seed; down: each issued seed (8B) plus
+    // the (seed, ΔL) broadcast of everything to every ZO participant.
+    let up = (total_seeds * 4) as u64 + dim_bytes * fo_n as u64;
+    let down = (total_seeds * 8 + zo_n * total_seeds * (8 + 4)) as u64
+        + dim_bytes * fo_n as u64;
     (up, down)
 }
 
@@ -230,7 +319,7 @@ mod tests {
                 delta_l: deltas,
                 n_samples: 16,
             };
-            apply_zo_update(&mut global, &[contrib], &cfg, 0.3);
+            apply_zo_update(&mut global, &[contrib], &cfg, 1.0, 0.3);
         }
         let l1 = be.fwd_loss(&global, &batch).unwrap().mean_loss();
         assert!(l1 < 0.8 * l0, "ZO rounds must learn: {l0} -> {l1}");
@@ -248,9 +337,9 @@ mod tests {
             n_samples: n,
         };
         let mut a = ParamVec::zeros(1000);
-        apply_zo_update(&mut a, &[mk(1, 0.5, 100), mk(9, 0.5, 0)], &cfg, 0.1);
+        apply_zo_update(&mut a, &[mk(1, 0.5, 100), mk(9, 0.5, 0)], &cfg, 1.0, 0.1);
         let mut b = ParamVec::zeros(1000);
-        apply_zo_update(&mut b, &[mk(1, 0.5, 77)], &cfg, 0.1);
+        apply_zo_update(&mut b, &[mk(1, 0.5, 77)], &cfg, 1.0, 0.1);
         for (x, y) in a.0.iter().zip(&b.0) {
             assert!((x - y).abs() < 1e-7);
         }
@@ -258,8 +347,13 @@ mod tests {
 
     #[test]
     fn multi_step_zoopt_consistency() {
-        // grad_steps=2: server replay (apply_zo_update) must land on the
-        // same weights the client reached locally.
+        // grad_steps=2 with DISTINCT client/server lrs — the regression
+        // the old single-lr replay missed. The client locally applied the
+        // intermediate block at lr_client before measuring block 2's ΔLs,
+        // so the server's replay must use lr_client for that block and
+        // scale only the final gradient block by lr_server. The pre-fix
+        // code replayed every block at lr_client·lr_server, diverging from
+        // the client's trajectory whenever lr_server != 1.
         let be = LinearBackend::new(6, 2, 8);
         let global = ParamVec::zeros(be.dim());
         let cfg = ZoConfig {
@@ -272,21 +366,25 @@ mod tests {
         let b1 = sep_batch(8, 6, 1);
         let b2 = sep_batch(8, 6, 2);
         let seeds: Vec<u64> = (10..14).collect();
-        let lr = 0.2f32;
+        let lr_client = 0.2f32;
+        let lr_server = 0.25f32; // != 1: the case the old test never covered
         let deltas = zoopt(
             &be,
             &global,
             &[vec![b1.clone()], vec![b2.clone()]],
             &seeds,
             &cfg,
-            lr,
+            lr_client,
         )
         .unwrap();
         assert_eq!(deltas.len(), 4);
-        // local trajectory replayed by hand
+        // the client's local trajectory, replayed by hand: intermediate
+        // block at lr_client (exactly as zoopt applied it), final gradient
+        // block scaled by the server lr.
         let mut w = global.clone();
-        apply_seed_block(&mut w, &seeds[0..2], &deltas[0..2], &cfg, lr);
-        apply_seed_block(&mut w, &seeds[2..4], &deltas[2..4], &cfg, lr);
+        apply_seed_block(&mut w, &seeds[0..2], &deltas[0..2], &cfg, lr_client);
+        let intermediate = w.clone(); // where block 2's ΔLs were measured
+        apply_seed_block(&mut w, &seeds[2..4], &deltas[2..4], &cfg, lr_client * lr_server);
         // server replay via apply_zo_update with one client at weight 1
         let mut g = global.clone();
         apply_zo_update(
@@ -298,11 +396,56 @@ mod tests {
                 n_samples: 8,
             }],
             &cfg,
-            lr,
+            lr_client,
+            lr_server,
         );
         for (x, y) in w.0.iter().zip(&g.0) {
             assert!((x - y).abs() < 1e-6, "{x} vs {y}");
         }
+        // and the server's replay passes through the client's measurement
+        // point: subtracting the final block leaves the intermediate state.
+        let mut back = g.clone();
+        apply_seed_block(
+            &mut back,
+            &seeds[2..4],
+            &deltas[2..4],
+            &cfg,
+            -(lr_client * lr_server),
+        );
+        for (x, y) in back.0.iter().zip(&intermediate.0) {
+            assert!((x - y).abs() < 1e-6, "intermediate {x} vs {y}");
+        }
+        // regression guard: the old uniform-lr replay is NOT the fixed
+        // trajectory when lr_server != 1.
+        let mut old = global.clone();
+        apply_seed_block(&mut old, &seeds[0..2], &deltas[0..2], &cfg, lr_client * lr_server);
+        apply_seed_block(&mut old, &seeds[2..4], &deltas[2..4], &cfg, lr_client * lr_server);
+        let diff: f64 = old
+            .0
+            .iter()
+            .zip(&g.0)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum();
+        assert!(diff > 1e-7, "fixed replay must differ from the old uniform-lr replay");
+    }
+
+    #[test]
+    fn single_step_replay_matches_legacy_product_lr() {
+        // grad_steps=1 (the paper's method): the two-lr API must reduce
+        // bit-exactly to the historical lr_client·lr_server behavior.
+        let cfg = ZoConfig::default(); // S = 3, one block
+        let contrib = ZoContribution {
+            client: 0,
+            seeds: vec![5, 6, 7],
+            delta_l: vec![0.4, -0.2, 0.1],
+            n_samples: 10,
+        };
+        let mut a = ParamVec::zeros(2048);
+        apply_zo_update(&mut a, &[contrib.clone()], &cfg, 0.7, 0.3);
+        let mut b = ParamVec::zeros(2048);
+        // legacy behavior: every block at the f32 product
+        apply_zo_update(&mut b, &[contrib], &cfg, 0.7 * 0.3, 1.0);
+        assert_eq!(a.0, b.0);
     }
 
     #[test]
@@ -348,10 +491,83 @@ mod tests {
                     n_samples: 16,
                 }],
                 &cfg,
+                1.0,
                 0.2,
             );
         }
         let l1 = be.fwd_loss(&global, &batch).unwrap().mean_loss();
         assert!(l1 < l0, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn seed_issuer_boundary_values_do_not_collide() {
+        // every field at its documented limit must still derive distinct
+        // seeds — the packed index stays unique at the field boundaries.
+        let iss = SeedIssuer::new(3);
+        let rounds = [0usize, 1, MAX_ROUNDS - 1];
+        let clients = [0usize, 1, MAX_CLIENTS - 1];
+        let ss = [0usize, 1, MAX_SEEDS_PER_ROUND - 1];
+        let mut all = std::collections::BTreeSet::new();
+        for &r in &rounds {
+            for &c in &clients {
+                for &s in &ss {
+                    assert!(
+                        all.insert(iss.seed(r, c, s)),
+                        "collision at ({r}, {c}, {s})"
+                    );
+                }
+            }
+        }
+        // the aliasing the guard exists to catch: s = 2^16 would pack
+        // identically to (client + 1, s = 0)
+        assert_eq!(
+            (0u64) << 40 | 1 << 16 | 0,
+            (0u64) << 40 | 0 << 16 | MAX_SEEDS_PER_ROUND as u64
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the 16-bit field")]
+    fn seed_issuer_rejects_s_overflow() {
+        SeedIssuer::new(0).seed(0, 0, MAX_SEEDS_PER_ROUND);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the 24-bit field")]
+    fn seed_issuer_rejects_client_overflow() {
+        SeedIssuer::new(0).seed(0, MAX_CLIENTS, 0);
+    }
+
+    #[test]
+    fn mixed_round_ledger_is_additive() {
+        // mixed-step2 bytes must equal the sum of the two pure models —
+        // the pre-fix formula charged the seed downlink to FO
+        // participants (down_per · q) and broke this.
+        let d4 = 175_258u64 * 4;
+        for s in [1usize, 3, 12] {
+            for zo_n in [0usize, 1, 4, 9] {
+                for fo_n in [0usize, 1, 3] {
+                    let total = s * zo_n; // uniform per-client seed count
+                    let mixed = zo_round_ledger(total, zo_n, fo_n, d4);
+                    let pure_zo = zo_round_ledger(total, zo_n, 0, d4);
+                    let pure_fo = zo_round_ledger(0, 0, fo_n, d4);
+                    assert_eq!(
+                        mixed,
+                        (pure_zo.0 + pure_fo.0, pure_zo.1 + pure_fo.1),
+                        "s={s} zo={zo_n} fo={fo_n}"
+                    );
+                }
+            }
+        }
+        // FO participants exchange exactly full weights, both directions
+        assert_eq!(zo_round_ledger(0, 0, 2, d4), (2 * d4, 2 * d4));
+        // uniform pure ZO matches the per-participant Table 1 model
+        let (up_per, down_per) = zo_round_bytes(3, 5);
+        assert_eq!(zo_round_ledger(3 * 5, 5, 0, d4), (up_per * 5, down_per * 5));
+        // heterogeneous seed counts (grad_steps > n for a small client):
+        // only issued seeds are charged — 2 clients with 6 and 3 seeds
+        let (up, down) = zo_round_ledger(9, 2, 0, d4);
+        assert_eq!(up, 9 * 4);
+        assert_eq!(down, (9 * 8 + 2 * 9 * 12) as u64);
     }
 }
