@@ -132,6 +132,25 @@ fn main() {
                 black_box(fed.warm_round().unwrap());
             });
         }
+
+        // the scenario engine's overhead: capability sampling at fleet
+        // scale, and a dropout/straggler ZO round vs the binary row above
+        let cost = zowarmup::comm::CostModel::generic(175_258, 64);
+        let spectrum = zowarmup::sim::Scenario::preset("edge-spectrum").unwrap();
+        b.iter("sample_profiles K=1000 (edge-spectrum)", || {
+            black_box(spectrum.sample_profiles(1000, 0, 7, &cost));
+        });
+        {
+            let mut c = cfg.clone();
+            c.scenario = zowarmup::sim::Scenario::preset("stragglers").unwrap();
+            let shards = shards_from_partition(&src, &part);
+            let init = ParamVec::zeros(be.dim());
+            let mut fed =
+                Federation::new(c, &be, shards, test_src.clone(), init).unwrap();
+            b.iter("zo_round Q=8 stragglers (drops mid-round)", || {
+                black_box(fed.zo_round().unwrap());
+            });
+        }
     }
 
     b.report();

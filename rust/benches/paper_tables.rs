@@ -8,6 +8,7 @@
 
 use zowarmup::config::Scale;
 use zowarmup::exp;
+use zowarmup::sim::Scenario;
 use zowarmup::util::bench::Bench;
 
 fn main() {
@@ -23,7 +24,7 @@ fn main() {
         }
         let mut report = String::new();
         b.iter(&format!("exp {id} (smoke)"), || {
-            report = exp::run(id, Scale::Smoke, "artifacts").unwrap_or_else(|e| {
+            report = exp::run(id, Scale::Smoke, "artifacts", &Scenario::default()).unwrap_or_else(|e| {
                 panic!("exp {id} failed: {e:#}");
             });
         });

@@ -15,15 +15,16 @@
 
 use std::time::Instant;
 
-use crate::comm::CommLedger;
+use crate::comm::{CommLedger, CostModel};
 use crate::config::FedConfig;
 use crate::data::loader::{eval_chunks, ClientData, Source};
 use crate::fed::aggregate::{weighted_average, ServerOptState};
-use crate::fed::client::{round_client_rng, warm_local_train, ClientState};
-use crate::fed::server::assign_resources;
+use crate::fed::client::{clients_from_profiles, round_client_rng, warm_local_train, ClientState};
+use crate::fed::server::{finite_signal, RoundSummary};
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
 use crate::model::params::ParamVec;
+use crate::sim;
 use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
 
@@ -113,6 +114,8 @@ pub struct FedKSeedRun<'a, B: ModelBackend> {
     pub pool: Vec<u64>,
     pub log: RunLog,
     pub ledger: CommLedger,
+    /// capability thresholds / timing profile (sim scenario engine)
+    pub cost: CostModel,
     server_opt: ServerOptState,
     rng: Xoshiro256,
 }
@@ -128,13 +131,11 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
     ) -> anyhow::Result<Self> {
         cfg.validate()?;
         anyhow::ensure!(ks.pool_size > 0 && ks.local_steps > 0, "bad KSeedConfig");
-        let classes = assign_resources(cfg.clients, cfg.hi_count(), cfg.seed);
-        let clients = shards
-            .into_iter()
-            .zip(classes)
-            .enumerate()
-            .map(|(id, (data, resource))| ClientState { id, data, resource })
-            .collect();
+        let cost = backend.cost_model();
+        let profiles = cfg
+            .scenario
+            .sample_profiles(cfg.clients, cfg.hi_count(), cfg.seed, &cost);
+        let clients = clients_from_profiles(shards, profiles, &cost);
         let mut pool_rng = Xoshiro256::seed_from(cfg.seed ^ 0x4B_5EED);
         let pool: Vec<u64> = (0..ks.pool_size).map(|_| pool_rng.next_u64()).collect();
         let server_opt = ServerOptState::new(cfg.server_opt, backend.dim());
@@ -149,6 +150,7 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             pool,
             log: RunLog::default(),
             ledger: CommLedger::default(),
+            cost,
             server_opt,
             rng,
         })
@@ -162,21 +164,41 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
         Ok(sums)
     }
 
-    fn warm_round(&mut self, round: usize) -> anyhow::Result<f64> {
+    fn warm_round(&mut self, round: usize) -> anyhow::Result<RoundSummary> {
         let hi: Vec<usize> = self
             .clients
             .iter()
             .filter(|c| c.is_high())
             .map(|c| c.id)
             .collect();
+        anyhow::ensure!(!hi.is_empty(), "no FO-capable clients to warm up");
         let p = self.cfg.sample_warm.clamp(1, hi.len());
         let picked: Vec<usize> = self.rng.choose(hi.len(), p).into_iter().map(|i| hi[i]).collect();
-        // parallel fan-out with pre-derived per-client RNGs; fold back in
-        // sampled order (see fed::server's threading model)
-        let jobs: Vec<(usize, Xoshiro256)> = picked
-            .iter()
-            .map(|&cid| (cid, round_client_rng(self.cfg.seed, 0, round, cid)))
-            .collect();
+        // simulate capability timelines, then fan survivors out with
+        // pre-derived RNGs; fold back in sampled order (see fed::server's
+        // threading model)
+        let deadline = self.cfg.scenario.deadline_ms();
+        let d4 = (self.backend.dim() * 4) as u64;
+        let mut jobs: Vec<(usize, Xoshiro256)> = Vec::with_capacity(p);
+        let (mut up, mut down) = (0u64, 0u64);
+        let mut dropped = 0usize;
+        for &cid in &picked {
+            let client = &self.clients[cid];
+            let plan = sim::RoundPlan {
+                down_bytes: d4,
+                passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
+                up_bytes: d4,
+            };
+            let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, round, cid);
+            let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+            up += o.up_bytes;
+            down += o.down_bytes;
+            if o.survives {
+                jobs.push((cid, round_client_rng(self.cfg.seed, 0, round, cid)));
+            } else {
+                dropped += 1;
+            }
+        }
         let results = {
             let backend = self.backend;
             let global = &self.global;
@@ -194,24 +216,56 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             train.add(sums);
             updates.push((w, self.clients[cid].n() as f64));
         }
+        self.ledger.record_round(up, down);
+        if updates.is_empty() {
+            // every sampled client dropped: no aggregate step this round
+            return Ok(RoundSummary {
+                train_signal: 0.0,
+                dropped,
+            });
+        }
         let avg = weighted_average(&updates);
         let mut delta = avg;
         delta.axpy(-1.0, &self.global);
         self.server_opt
             .apply(&mut self.global, &delta, self.cfg.lr_server_warm);
-        let d4 = (self.backend.dim() * 4) as u64;
-        self.ledger.record_round(d4 * p as u64, d4 * p as u64);
-        Ok(train.mean_loss())
+        Ok(RoundSummary {
+            train_signal: finite_signal(train.mean_loss()),
+            dropped,
+        })
     }
 
-    fn kseed_round(&mut self, round: usize) -> anyhow::Result<f64> {
+    fn kseed_round(&mut self, round: usize) -> anyhow::Result<RoundSummary> {
         let q = self.cfg.sample_zo.clamp(1, self.cfg.clients);
         let picked = self.rng.choose(self.cfg.clients, q);
-        // parallel fan-out, RNGs pre-derived, fold in sampled order
-        let jobs: Vec<(usize, Xoshiro256)> = picked
-            .iter()
-            .map(|&cid| (cid, round_client_rng(self.cfg.seed, 0x4B, round, cid)))
-            .collect();
+        // simulate capability timelines (clients below even the ZO
+        // footprint never participate), then parallel fan-out over
+        // survivors, RNGs pre-derived, fold in sampled order
+        let deadline = self.cfg.scenario.deadline_ms();
+        let per_client_up = (self.ks.local_steps * (4 + 4)) as u64;
+        let mut jobs: Vec<(usize, Xoshiro256)> = Vec::with_capacity(q);
+        let mut up = 0u64;
+        let mut dropped = 0usize;
+        for &cid in &picked {
+            let client = &self.clients[cid];
+            if !client.profile.zo_capable(&self.cost) {
+                dropped += 1;
+                continue;
+            }
+            let plan = sim::RoundPlan {
+                down_bytes: 0, // histories are broadcast at round end
+                passes: sim::kseed_passes(self.ks.local_steps, self.ks.step_batch),
+                up_bytes: per_client_up,
+            };
+            let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, round, cid);
+            let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+            up += o.up_bytes;
+            if o.survives {
+                jobs.push((cid, round_client_rng(self.cfg.seed, 0x4B, round, cid)));
+            } else {
+                dropped += 1;
+            }
+        }
         let results = {
             let backend = self.backend;
             let global = &self.global;
@@ -256,22 +310,27 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 n / n_total.max(1.0),
             );
         }
-        // bytes: up = steps × (idx u32 + ghat f32); down = everyone's history
-        let per_client_up = (self.ks.local_steps * (4 + 4)) as u64;
-        let up = per_client_up * q as u64;
-        let down = up * q as u64;
+        // bytes: up = each participant's (idx u32 + ghat f32) history,
+        // partial for dropouts; down = the round-end broadcast of the
+        // *surviving* histories to each survivor (dropped histories were
+        // never folded, so they are never broadcast)
+        let survivors = histories.len() as u64;
+        let down = survivors * survivors * per_client_up;
         self.ledger.record_round(up, down);
-        Ok(if count > 0 {
-            mean_abs / count as f64
-        } else {
-            0.0
+        Ok(RoundSummary {
+            train_signal: finite_signal(if count > 0 {
+                mean_abs / count as f64
+            } else {
+                0.0
+            }),
+            dropped,
         })
     }
 
     pub fn run(&mut self) -> anyhow::Result<()> {
         for round in 0..self.cfg.rounds_total {
             let t0 = Instant::now();
-            let (phase, train_loss) = if round < self.cfg.pivot {
+            let (phase, summary) = if round < self.cfg.pivot {
                 (Phase::Warm, self.warm_round(round)?)
             } else {
                 (Phase::Zo, self.kseed_round(round)?)
@@ -289,11 +348,12 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             self.log.push(RoundRecord {
                 round,
                 phase,
-                train_loss,
+                train_loss: summary.train_signal,
                 test_acc,
                 test_loss,
                 bytes_up: up,
                 bytes_down: down,
+                dropped: summary.dropped,
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
         }

@@ -10,15 +10,15 @@
 //! manifests (`cnn10` / `cnn10_half` share tensor names; every half dim ≤
 //! full dim), so it works unchanged for any architecture pair.
 
-use crate::comm::CommLedger;
+use crate::comm::{CommLedger, CostModel};
 use crate::config::FedConfig;
 use crate::data::loader::{eval_chunks, ClientData, Source};
-use crate::fed::client::{round_client_rng, warm_local_train, ClientState, Resource};
-use crate::fed::server::assign_resources;
+use crate::fed::client::{clients_from_profiles, round_client_rng, warm_local_train, ClientState, Resource};
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
 use crate::model::manifest::ModelEntry;
 use crate::model::params::ParamVec;
+use crate::sim;
 use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
 
@@ -142,6 +142,10 @@ pub struct HeteroFlRun<'a, BF: ModelBackend, BH: ModelBackend> {
     pub global: ParamVec,
     pub log: RunLog,
     pub ledger: CommLedger,
+    /// the FULL model's cost profile: a client trains full-width iff its
+    /// capability profile covers the full model's backprop footprint
+    /// (HeteroFL's premise is that the half net fits everyone else)
+    pub cost: CostModel,
     rng: Xoshiro256,
 }
 
@@ -158,13 +162,11 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
         cfg.validate()?;
         anyhow::ensure!(map.full_dim == full.dim(), "map/full dim");
         anyhow::ensure!(map.half_dim() == half.dim(), "map/half dim");
-        let classes = assign_resources(cfg.clients, cfg.hi_count(), cfg.seed);
-        let clients = shards
-            .into_iter()
-            .zip(classes)
-            .enumerate()
-            .map(|(id, (data, resource))| ClientState { id, data, resource })
-            .collect();
+        let cost = full.cost_model();
+        let profiles = cfg
+            .scenario
+            .sample_profiles(cfg.clients, cfg.hi_count(), cfg.seed, &cost);
+        let clients = clients_from_profiles(shards, profiles, &cost);
         let rng = Xoshiro256::seed_from(cfg.seed ^ 0x8E7E_0F1);
         Ok(Self {
             cfg,
@@ -176,6 +178,7 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
             global: init,
             log: RunLog::default(),
             ledger: CommLedger::default(),
+            cost,
             rng,
         })
     }
@@ -188,12 +191,15 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
         Ok(sums)
     }
 
-    /// One round: sample from *all* clients; high-res train the full net,
-    /// low-res train the half slice; aggregate position-wise. Clients run
-    /// in parallel with pre-derived RNGs and an order-canonical fold, so
-    /// results are bit-identical for every worker count (see
-    /// `fed::server`'s threading model).
-    pub fn round(&mut self, round: usize) -> anyhow::Result<f64> {
+    /// One round: sample from *all* clients; clients whose capability
+    /// profile covers the full model's backprop footprint train the full
+    /// net, the rest train the half slice; aggregate position-wise.
+    /// Clients run in parallel with pre-derived RNGs and an
+    /// order-canonical fold, so results are bit-identical for every
+    /// worker count (see `fed::server`'s threading model). Capability
+    /// timelines are simulated first: deadline misses and availability
+    /// failures drop out mid-round with partial byte charges.
+    pub fn round(&mut self, round: usize) -> anyhow::Result<crate::fed::server::RoundSummary> {
         let q = self.cfg.sample_zo.clamp(1, self.cfg.clients);
         let picked = self.rng.choose(self.cfg.clients, q);
 
@@ -201,10 +207,32 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
             Full(ParamVec, f64, LossSums),
             Half(ParamVec, f64, LossSums),
         }
-        let jobs: Vec<(usize, Xoshiro256)> = picked
-            .iter()
-            .map(|&cid| (cid, round_client_rng(self.cfg.seed, 0, round, cid)))
-            .collect();
+        let deadline = self.cfg.scenario.deadline_ms();
+        let mut jobs: Vec<(usize, Xoshiro256)> = Vec::with_capacity(q);
+        let (mut up, mut down) = (0u64, 0u64);
+        let mut dropped = 0usize;
+        for &cid in &picked {
+            let client = &self.clients[cid];
+            let (dim, params) = match client.resource {
+                Resource::High => (self.full.dim(), self.cost.params),
+                Resource::Low => (self.half.dim(), self.half.cost_model().params),
+            };
+            let d4 = (dim * 4) as u64;
+            let plan = sim::RoundPlan {
+                down_bytes: d4,
+                passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
+                up_bytes: d4,
+            };
+            let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, round, cid);
+            let o = sim::simulate_round(&client.profile, &plan, params, deadline, &mut trace);
+            up += o.up_bytes;
+            down += o.down_bytes;
+            if o.survives {
+                jobs.push((cid, round_client_rng(self.cfg.seed, 0, round, cid)));
+            } else {
+                dropped += 1;
+            }
+        }
         let results = {
             let full = self.full;
             let half = self.half;
@@ -237,30 +265,32 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
         let mut full_updates = Vec::new();
         let mut half_updates = Vec::new();
         let mut train = LossSums::default();
-        let mut bytes = 0u64;
         for r in results {
             match r? {
                 Out::Full(w, n, sums) => {
                     train.add(sums);
                     full_updates.push((w, n));
-                    bytes += (self.full.dim() * 4) as u64;
                 }
                 Out::Half(w, n, sums) => {
                     train.add(sums);
                     half_updates.push((w, n));
-                    bytes += (self.half.dim() * 4) as u64;
                 }
             }
         }
+        // position-wise aggregation over survivors only; an all-drop
+        // round leaves every coordinate's weight at zero → global intact
         heterofl_aggregate(&mut self.global, &full_updates, &half_updates, &self.map);
-        self.ledger.record_round(bytes, bytes);
-        Ok(train.mean_loss())
+        self.ledger.record_round(up, down);
+        Ok(crate::fed::server::RoundSummary {
+            train_signal: crate::fed::server::finite_signal(train.mean_loss()),
+            dropped,
+        })
     }
 
     pub fn run(&mut self) -> anyhow::Result<()> {
         for round in 0..self.cfg.rounds_total {
             let t0 = std::time::Instant::now();
-            let train_loss = self.round(round)?;
+            let summary = self.round(round)?;
             let do_eval =
                 round % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds_total;
             let (test_acc, test_loss) = if do_eval {
@@ -273,11 +303,12 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
             self.log.push(RoundRecord {
                 round,
                 phase: Phase::Warm,
-                train_loss,
+                train_loss: summary.train_signal,
                 test_acc,
                 test_loss,
                 bytes_up: up,
                 bytes_down: down,
+                dropped: summary.dropped,
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
         }
@@ -288,7 +319,10 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
     /// communication budget: rounds = budget / per_round).
     pub fn per_round_bytes(&self) -> u64 {
         let q = self.cfg.sample_zo.clamp(1, self.cfg.clients) as u64;
-        let hi_share = self.cfg.hi_count() as f64 / self.cfg.clients as f64;
+        // the full-width share is profile-derived (not cfg.hi_count():
+        // custom scenarios draw their own fleet mix)
+        let hi = self.clients.iter().filter(|c| c.is_high()).count();
+        let hi_share = hi as f64 / self.cfg.clients as f64;
         let per_client = hi_share * (self.full.dim() * 4) as f64
             + (1.0 - hi_share) * (self.half.dim() * 4) as f64;
         (q as f64 * per_client * 2.0) as u64

@@ -95,6 +95,29 @@ impl CostModel {
         (2 * self.params + self.batch * self.act_max) * F32
     }
 
+    /// Memory a device needs before it can run backprop-based training —
+    /// the FO-eligibility threshold of the `sim` scenario engine. Eq. 4
+    /// strictly dominates eq. 5 for any multi-layer model; the `max`
+    /// keeps the threshold strictly above the ZO footprint even for
+    /// degenerate single-activation models, so the FO/ZO class split is
+    /// always well-defined.
+    pub fn fo_threshold_bytes(&self) -> u64 {
+        self.backprop_mem_bytes().max(self.zo_mem_bytes() + 1)
+    }
+
+    /// Synthetic cost profile for backends without a compiled-model
+    /// manifest (the linear probe): activations are modeled as fixed
+    /// fractions of the parameter count, keeping eq. 4 > eq. 5 strictly
+    /// at every dim so capability thresholds stay ordered.
+    pub fn generic(params: u64, batch: u64) -> Self {
+        Self {
+            params,
+            act_sum: (params / 4).max(2),
+            act_max: (params / 16).max(1),
+            batch: batch.max(1),
+        }
+    }
+
     /// The paper's own Table 1 ZO figure, 89.4 MB = 2P·4: the activation
     /// term is dropped (it is <20% of 2P for ResNet18 and the table tracks
     /// the parameter-dominated footprint).
@@ -172,6 +195,26 @@ mod tests {
         let m = CostModel::paper_resnet18();
         let r = m.backprop_mem_bytes() as f64 / m.zo_mem_bytes_paper() as f64;
         assert!((5.0..7.0).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn generic_cost_model_orders_thresholds() {
+        // the scenario engine's contract: ZO footprint strictly below the
+        // FO threshold at every dim, including tiny test models
+        for params in [1u64, 6, 15, 16, 17, 7690, 175_258, 11_173_962] {
+            for batch in [1u64, 16, 64] {
+                let m = CostModel::generic(params, batch);
+                assert!(
+                    m.zo_mem_bytes() < m.fo_threshold_bytes(),
+                    "params={params} batch={batch}"
+                );
+                assert!(m.fo_threshold_bytes() >= m.backprop_mem_bytes());
+            }
+        }
+        // the real ResNet18 numbers: eq. 4 already dominates, so the
+        // threshold IS the backprop footprint
+        let m = CostModel::paper_resnet18();
+        assert_eq!(m.fo_threshold_bytes(), m.backprop_mem_bytes());
     }
 
     #[test]

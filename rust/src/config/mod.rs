@@ -2,6 +2,7 @@
 //! simulation scales. Configs are plain structs with JSON file / CLI
 //! override support (`--config file.json --clients 50 ...`).
 
+use crate::sim::Scenario;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Distribution;
@@ -93,6 +94,13 @@ pub struct FedConfig {
     /// Results are bit-identical for every value — see the threading
     /// model docs in `fed::server`.
     pub threads: usize,
+    /// device-capability scenario: per-client memory/bandwidth/compute
+    /// profiles, availability traces, and the round deadline (`sim`
+    /// module). The default `Binary` reproduces the seed's High/Low
+    /// `assign_resources` split bit for bit from `hi_frac`; custom
+    /// scenarios ignore `hi_frac` and draw tiers from their own
+    /// fractions. CLI: `--scenario <preset|file.json|{inline json}>`.
+    pub scenario: Scenario,
 }
 
 impl Default for FedConfig {
@@ -116,6 +124,7 @@ impl Default for FedConfig {
             seed: 0,
             mixed_step2: false,
             threads: 0,
+            scenario: Scenario::Binary,
         }
     }
 }
@@ -188,6 +197,7 @@ impl FedConfig {
             self.zo.s_seeds.saturating_mul(self.zo.grad_steps),
             crate::zo::MAX_SEEDS_PER_ROUND
         );
+        self.scenario.validate()?;
         Ok(())
     }
 
@@ -213,6 +223,9 @@ impl FedConfig {
         self.seed = a.usize_or("seed", self.seed as usize)? as u64;
         self.mixed_step2 = a.bool_or("mixed-step2", self.mixed_step2)?;
         self.threads = a.usize_or("threads", self.threads)?;
+        if let Some(s) = a.get("scenario") {
+            self.scenario = Scenario::load(s)?;
+        }
         if let Some(d) = a.get("dist") {
             self.zo.dist =
                 Distribution::parse(d).ok_or_else(|| anyhow::anyhow!("bad --dist {d:?}"))?;
@@ -417,6 +430,49 @@ mod tests {
         c.apply_json(&j).unwrap();
         assert_eq!(c.clients, 30);
         assert_eq!(c.zo.tau, 0.25);
+    }
+
+    #[test]
+    fn scenario_preset_override() {
+        let argv: Vec<String> = "--scenario stragglers"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = FedConfig::default();
+        assert_eq!(c.scenario, Scenario::Binary);
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.scenario.name(), "stragglers");
+        assert!(c.scenario.deadline_ms() > 0.0);
+
+        let bad: Vec<String> = vec!["--scenario".into(), "no-such-thing".into()];
+        let a = Args::parse(&bad).unwrap();
+        assert!(FedConfig::default().apply_args(&a).is_err());
+    }
+
+    #[test]
+    fn scenario_embedded_in_json_config() {
+        // a scenario object inside a config file flows through apply_json
+        // (the Obj value is re-serialized and re-parsed by Scenario::load)
+        let j = Json::parse(
+            r#"{"clients": 12, "scenario": {
+                  "name": "cfg-fleet", "deadline_ms": 3.0,
+                  "tiers": [
+                    {"frac": 0.25, "mem": "backprop", "up_mbps": 50, "down_mbps": 50},
+                    {"frac": 0.75, "mem": "zo", "up_mbps": 2, "down_mbps": 4, "drop_rate": 0.1}
+                  ]}}"#,
+        )
+        .unwrap();
+        let mut c = FedConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.clients, 12);
+        assert_eq!(c.scenario.name(), "cfg-fleet");
+        assert_eq!(c.scenario.deadline_ms(), 3.0);
+        // a preset by name also works in config files
+        let j = Json::parse(r#"{"scenario": "flaky"}"#).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.scenario.name(), "flaky");
     }
 
     #[test]

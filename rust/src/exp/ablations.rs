@@ -6,13 +6,14 @@ use crate::config::Scale;
 use crate::data::synthetic::SynthKind;
 use crate::exp::common::{run_method, run_path, Method};
 use crate::metrics::{summarize_accuracies, MdTable};
+use crate::sim::Scenario;
 use crate::util::csv::CsvWriter;
 use crate::util::rng::Distribution;
 use crate::util::stats;
 
 /// Table 3: more local ZO steps per round hurts; τ must shrink with steps
 /// (paper pairs steps {1,2,4,6} with τ {0.75, 0.25, 0.1, 0.01}).
-pub fn table3(scale: Scale) -> anyhow::Result<String> {
+pub fn table3(scale: Scale, scenario: &Scenario) -> anyhow::Result<String> {
     let pairs: [(usize, f32); 4] = [(1, 0.75), (2, 0.25), (4, 0.1), (6, 0.01)];
     let splits: [(f64, &str); 3] = [(0.1, "10/90"), (0.5, "50/50"), (0.9, "90/10")];
     let seeds = scale.seeds();
@@ -31,6 +32,7 @@ pub fn table3(scale: Scale) -> anyhow::Result<String> {
                 let mut cfg = scale.fed();
                 cfg.hi_frac = hi_frac;
                 cfg.seed = seed as u64;
+                cfg.scenario = scenario.clone();
                 cfg.zo.grad_steps = steps;
                 cfg.zo.tau = tau;
                 let data = scale.data();
@@ -56,7 +58,7 @@ pub fn table3(scale: Scale) -> anyhow::Result<String> {
 
 /// Table 6 (§A.1): Rademacher vs Gaussian — mean/std of final accuracy and
 /// of δ_lo = acc(after ZO) − acc(at pivot), over many seeds.
-pub fn table6(scale: Scale) -> anyhow::Result<String> {
+pub fn table6(scale: Scale, scenario: &Scenario) -> anyhow::Result<String> {
     let n_seeds = match scale {
         Scale::Smoke => 4,
         Scale::Default => 8,
@@ -78,6 +80,7 @@ pub fn table6(scale: Scale) -> anyhow::Result<String> {
             let mut cfg = scale.fed();
             cfg.hi_frac = 0.1;
             cfg.seed = seed as u64;
+            cfg.scenario = scenario.clone();
             cfg.zo.dist = dist;
             let data = scale.data();
             let log = run_method(Method::ZoWarmup, SynthKind::Synth10, &data, &cfg)?;
@@ -114,7 +117,7 @@ pub fn table6(scale: Scale) -> anyhow::Result<String> {
 }
 
 /// Table 7 (§A.4): all-ZO step 2 vs letting high-res clients continue FO.
-pub fn table7(scale: Scale) -> anyhow::Result<String> {
+pub fn table7(scale: Scale, scenario: &Scenario) -> anyhow::Result<String> {
     let splits: [(f64, &str); 3] = [(0.1, "10/90"), (0.5, "50/50"), (0.9, "90/10")];
     let seeds = scale.seeds();
     let mut out = String::from("## Table 7 — combining high & low resource updates (§A.4)\n\n");
@@ -130,6 +133,7 @@ pub fn table7(scale: Scale) -> anyhow::Result<String> {
                 let mut cfg = scale.fed();
                 cfg.hi_frac = hi_frac;
                 cfg.seed = seed as u64;
+                cfg.scenario = scenario.clone();
                 let data = scale.data();
                 let log = run_method(method, SynthKind::Synth10, &data, &cfg)?;
                 accs.push(log.final_accuracy());
@@ -145,7 +149,7 @@ pub fn table7(scale: Scale) -> anyhow::Result<String> {
 
 /// Figure 6 (§A.2): final accuracy as a function of τ for both
 /// distributions.
-pub fn fig6(scale: Scale) -> anyhow::Result<String> {
+pub fn fig6(scale: Scale, scenario: &Scenario) -> anyhow::Result<String> {
     let taus = [0.75f32, 0.5, 0.25, 0.1];
     let seeds = scale.seeds();
     let mut out = String::from("## Figure 6 — accuracy vs τ (§A.2)\n\n");
@@ -162,6 +166,7 @@ pub fn fig6(scale: Scale) -> anyhow::Result<String> {
                 let mut cfg = scale.fed();
                 cfg.hi_frac = 0.1;
                 cfg.seed = seed as u64;
+                cfg.scenario = scenario.clone();
                 cfg.zo.tau = tau;
                 cfg.zo.dist = dist;
                 let data = scale.data();
@@ -184,7 +189,7 @@ pub fn fig6(scale: Scale) -> anyhow::Result<String> {
 }
 
 /// Figure 7 (§A.2): variance across seeds shrinks as S grows.
-pub fn fig7(scale: Scale) -> anyhow::Result<String> {
+pub fn fig7(scale: Scale, scenario: &Scenario) -> anyhow::Result<String> {
     let s_values = [1usize, 3, 9];
     let n_seeds = scale.seeds().max(3);
     let mut out = String::from("## Figure 7 — variance vs S (§A.2)\n\n");
@@ -195,6 +200,7 @@ pub fn fig7(scale: Scale) -> anyhow::Result<String> {
             let mut cfg = scale.fed();
             cfg.hi_frac = 0.1;
             cfg.seed = seed as u64;
+            cfg.scenario = scenario.clone();
             cfg.zo.s_seeds = s;
             let data = scale.data();
             let log = run_method(Method::ZoWarmup, SynthKind::Synth10, &data, &cfg)?;
@@ -218,28 +224,28 @@ mod tests {
 
     #[test]
     fn table3_smoke() {
-        let md = table3(Scale::Smoke).unwrap();
+        let md = table3(Scale::Smoke, &Scenario::default()).unwrap();
         assert!(md.contains("1 (0.75)"));
         assert!(md.contains("6 (0.01)"));
     }
 
     #[test]
     fn table6_smoke() {
-        let md = table6(Scale::Smoke).unwrap();
+        let md = table6(Scale::Smoke, &Scenario::default()).unwrap();
         assert!(md.contains("Rademacher"));
         assert!(md.contains("N(0,1)"));
     }
 
     #[test]
     fn table7_smoke() {
-        let md = table7(Scale::Smoke).unwrap();
+        let md = table7(Scale::Smoke, &Scenario::default()).unwrap();
         assert!(md.contains("hi+lo"));
         assert!(md.contains("lo only"));
     }
 
     #[test]
     fn fig7_smoke() {
-        let md = fig7(Scale::Smoke).unwrap();
+        let md = fig7(Scale::Smoke, &Scenario::default()).unwrap();
         assert!(md.contains("| 1 |"));
         assert!(md.contains("| 9 |"));
     }

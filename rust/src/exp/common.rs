@@ -300,6 +300,26 @@ mod tests {
     }
 
     #[test]
+    fn methods_run_under_straggler_scenario() {
+        // every comparator handles a dropout/straggler fleet: finite
+        // accuracy, and the run is reproducible
+        let mut cfg = Scale::Smoke.fed();
+        cfg.scenario = crate::sim::Scenario::preset("stragglers").unwrap();
+        let data = Scale::Smoke.data();
+        for m in [Method::ZoWarmup, Method::HeteroFl, Method::ZoWarmupFedKSeed] {
+            let a = run_method(m, SynthKind::Synth10, &data, &cfg)
+                .unwrap_or_else(|e| panic!("{m:?}: {e}"));
+            assert!(a.final_accuracy().is_finite(), "{m:?}");
+            let b = run_method(m, SynthKind::Synth10, &data, &cfg).unwrap();
+            assert_eq!(
+                a.final_accuracy().to_bits(),
+                b.final_accuracy().to_bits(),
+                "{m:?} must be deterministic under drops"
+            );
+        }
+    }
+
+    #[test]
     fn budget_shrinks_heterofl_rounds_at_high_hi_frac() {
         let mut lo = Scale::Smoke.fed();
         lo.hi_frac = 0.1;

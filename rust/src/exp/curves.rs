@@ -5,12 +5,13 @@ use crate::config::Scale;
 use crate::data::synthetic::SynthKind;
 use crate::exp::common::{run_method, run_path, Method};
 use crate::metrics::MdTable;
+use crate::sim::Scenario;
 use crate::util::csv::CsvWriter;
 
 /// Figure 3: per-round accuracy curves for the 10/90 and 90/10 splits.
 /// The signature phenomenon: a visible accuracy jump right after the pivot
 /// when low-resource client data enters training — even at 90/10.
-pub fn fig3(scale: Scale) -> anyhow::Result<String> {
+pub fn fig3(scale: Scale, scenario: &Scenario) -> anyhow::Result<String> {
     let mut out = String::from("## Figure 3 — training curves (accuracy vs round)\n\n");
     let mut csv = CsvWriter::create(
         run_path("fig3.csv"),
@@ -26,6 +27,7 @@ pub fn fig3(scale: Scale) -> anyhow::Result<String> {
     for (hi_frac, label) in [(0.1, "10/90"), (0.9, "90/10")] {
         let mut cfg = scale.fed();
         cfg.hi_frac = hi_frac;
+        cfg.scenario = scenario.clone();
         cfg.eval_every = 1; // dense curve
         let data = scale.data();
         let log = run_method(Method::ZoWarmup, SynthKind::Synth10, &data, &cfg)?;
@@ -73,7 +75,7 @@ pub fn fig3(scale: Scale) -> anyhow::Result<String> {
 
 /// Figure 4: sweep the pivot at fixed total rounds; accuracy should rise,
 /// peak at an interior pivot, then fall (critical learning periods).
-pub fn fig4(scale: Scale) -> anyhow::Result<String> {
+pub fn fig4(scale: Scale, scenario: &Scenario) -> anyhow::Result<String> {
     let total = scale.fed().rounds_total;
     // pivot grid: 0%, 20%, 40%, 60%, 80%, 100% of the budget
     let pivots: Vec<usize> = (0..=5).map(|i| i * total / 5).collect();
@@ -92,6 +94,7 @@ pub fn fig4(scale: Scale) -> anyhow::Result<String> {
                 let mut cfg = scale.fed();
                 cfg.hi_frac = hi_frac;
                 cfg.seed = seed as u64;
+                cfg.scenario = scenario.clone();
                 cfg.pivot = pivot;
                 let data = scale.data();
                 let log = run_method(Method::ZoWarmup, SynthKind::Synth10, &data, &cfg)?;
@@ -122,7 +125,7 @@ mod tests {
 
     #[test]
     fn fig3_smoke() {
-        let md = fig3(Scale::Smoke).unwrap();
+        let md = fig3(Scale::Smoke, &Scenario::default()).unwrap();
         assert!(md.contains("10/90"));
         assert!(md.contains("90/10"));
         assert!(std::path::Path::new("runs/fig3.csv").exists());
@@ -130,7 +133,7 @@ mod tests {
 
     #[test]
     fn fig4_smoke() {
-        let md = fig4(Scale::Smoke).unwrap();
+        let md = fig4(Scale::Smoke, &Scenario::default()).unwrap();
         assert!(md.contains("pivot"));
         assert!(md.contains("50/50"));
     }

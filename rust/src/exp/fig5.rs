@@ -20,6 +20,7 @@ use crate::model::backend::ModelBackend;
 use crate::model::manifest::Manifest;
 use crate::model::params::ParamVec;
 use crate::runtime::Engine;
+use crate::sim::Scenario;
 use crate::util::csv::CsvWriter;
 
 struct LmScale {
@@ -60,7 +61,7 @@ fn lm_scale(scale: Scale) -> LmScale {
     }
 }
 
-pub fn run(scale: Scale, artifacts_dir: &str) -> anyhow::Result<String> {
+pub fn run(scale: Scale, artifacts_dir: &str, scenario: &Scenario) -> anyhow::Result<String> {
     let sc = lm_scale(scale);
     let manifest = Manifest::load(artifacts_dir)?;
     let engine = Engine::cpu()?;
@@ -81,6 +82,7 @@ pub fn run(scale: Scale, artifacts_dir: &str) -> anyhow::Result<String> {
 
     // "pretrained model": a short warm federation over all clients
     let mut cfg = Scale::Smoke.fed();
+    cfg.scenario = scenario.clone();
     cfg.clients = sc.clients;
     cfg.hi_frac = 1.0;
     cfg.rounds_total = sc.pretrain_rounds;

@@ -14,35 +14,44 @@ pub mod table5;
 
 use crate::config::Scale;
 use crate::data::synthetic::SynthKind;
+use crate::sim::Scenario;
 
 pub const ALL_IDS: [&str; 12] = [
     "table1", "table2", "table3", "table4", "table5", "table6", "table7", "fig3", "fig4",
     "fig5", "fig6", "fig7",
 ];
 
-/// Run one experiment by id; returns the Markdown report.
-pub fn run(id: &str, scale: Scale, artifacts_dir: &str) -> anyhow::Result<String> {
+/// Run one experiment by id; returns the Markdown report. `scenario`
+/// selects the device-capability fleet every federated run in the sweep
+/// draws its profiles from (`Scenario::default()` = the paper's binary
+/// High/Low split from `hi_frac`).
+pub fn run(
+    id: &str,
+    scale: Scale,
+    artifacts_dir: &str,
+    scenario: &Scenario,
+) -> anyhow::Result<String> {
     let both = [SynthKind::Synth10, SynthKind::Synth100];
     let one = [SynthKind::Synth10];
     let datasets: &[SynthKind] = if scale == Scale::Smoke { &one } else { &both };
     match id {
-        "table1" => table1::run(scale, artifacts_dir),
-        "table2" => table2::run(scale, datasets),
-        "table3" => ablations::table3(scale),
-        "table4" => table2::run_table4(scale, datasets),
-        "table5" => table5::run(scale, artifacts_dir),
-        "table6" => ablations::table6(scale),
-        "table7" => ablations::table7(scale),
-        "fig3" => curves::fig3(scale),
-        "fig4" => curves::fig4(scale),
-        "fig5" => fig5::run(scale, artifacts_dir),
-        "fig6" => ablations::fig6(scale),
-        "fig7" => ablations::fig7(scale),
+        "table1" => table1::run(scale, artifacts_dir, scenario),
+        "table2" => table2::run(scale, datasets, scenario),
+        "table3" => ablations::table3(scale, scenario),
+        "table4" => table2::run_table4(scale, datasets, scenario),
+        "table5" => table5::run(scale, artifacts_dir, scenario),
+        "table6" => ablations::table6(scale, scenario),
+        "table7" => ablations::table7(scale, scenario),
+        "fig3" => curves::fig3(scale, scenario),
+        "fig4" => curves::fig4(scale, scenario),
+        "fig5" => fig5::run(scale, artifacts_dir, scenario),
+        "fig6" => ablations::fig6(scale, scenario),
+        "fig7" => ablations::fig7(scale, scenario),
         "all" => {
             let mut out = String::new();
             for id in ALL_IDS {
                 eprintln!("[exp] running {id} at {scale:?} scale...");
-                out.push_str(&run(id, scale, artifacts_dir)?);
+                out.push_str(&run(id, scale, artifacts_dir, scenario)?);
                 out.push('\n');
             }
             Ok(out)
@@ -60,6 +69,6 @@ mod tests {
 
     #[test]
     fn unknown_id_errors() {
-        assert!(run("table99", Scale::Smoke, "artifacts").is_err());
+        assert!(run("table99", Scale::Smoke, "artifacts", &Scenario::default()).is_err());
     }
 }

@@ -11,8 +11,9 @@ use crate::data::synthetic::SynthKind;
 use crate::exp::common::{run_method, Method};
 use crate::metrics::{MdTable, Phase};
 use crate::model::manifest::Manifest;
+use crate::sim::Scenario;
 
-pub fn run(scale: Scale, artifacts_dir: &str) -> anyhow::Result<String> {
+pub fn run(scale: Scale, artifacts_dir: &str, scenario: &Scenario) -> anyhow::Result<String> {
     let mut out = String::from("## Table 1 — communication & memory per client per round\n\n");
 
     // (a) the paper's setting: ResNet18, S=3, K=10 sampled clients
@@ -70,7 +71,8 @@ pub fn run(scale: Scale, artifacts_dir: &str) -> anyhow::Result<String> {
     }
 
     // (c) measured: a live federation's ledger
-    let cfg = scale.fed();
+    let mut cfg = scale.fed();
+    cfg.scenario = scenario.clone();
     let data = scale.data();
     let log = run_method(Method::ZoWarmup, SynthKind::Synth10, &data, &cfg)?;
     let warm_up_max = log
@@ -103,7 +105,7 @@ mod tests {
 
     #[test]
     fn table1_renders_with_and_without_artifacts() {
-        let md = run(Scale::Smoke, "/nonexistent").unwrap();
+        let md = run(Scale::Smoke, "/nonexistent", &Scenario::default()).unwrap();
         assert!(md.contains("FedAvg"));
         assert!(md.contains("Zeroth-order FL"));
         assert!(md.contains("44.7"));

@@ -5,6 +5,7 @@ use crate::config::{DataConfig, FedConfig, Scale, ServerOpt};
 use crate::data::synthetic::SynthKind;
 use crate::exp::common::{nc_cell, run_method, run_path, Method, SPLITS};
 use crate::metrics::{summarize_accuracies, MdTable};
+use crate::sim::Scenario;
 use crate::util::csv::CsvWriter;
 
 /// One full sweep: every (dataset, method, split) cell, `seeds` repeats.
@@ -14,10 +15,21 @@ pub fn sweep(
     datasets: &[SynthKind],
     methods: &[Method],
     scale: Scale,
+    scenario: &Scenario,
     cfg_mod: impl Fn(&mut FedConfig),
 ) -> anyhow::Result<String> {
     let seeds = scale.seeds();
     let mut out = format!("## {title}\n\n");
+    if *scenario != Scenario::Binary {
+        // custom scenarios draw their own fleet mix, so the split columns
+        // (which only set hi_frac) all run the identical fleet — say so
+        // rather than printing identical numbers under different labels
+        out.push_str(&format!(
+            "NOTE: scenario {:?} fixes the fleet composition; the split \
+             labels below do not vary the High/Low mix.\n\n",
+            scenario.name()
+        ));
+    }
     let mut csv = CsvWriter::create(
         run_path(csv_name),
         &["dataset", "method", "split", "seed", "final_acc"],
@@ -32,6 +44,7 @@ pub fn sweep(
                     let mut cfg = scale.fed();
                     cfg.hi_frac = hi_frac;
                     cfg.seed = seed as u64;
+                    cfg.scenario = scenario.clone();
                     cfg_mod(&mut cfg);
                     let data = DataConfig {
                         dataset: match kind {
@@ -74,7 +87,7 @@ pub fn sweep(
 }
 
 /// Table 2: the five-method main comparison.
-pub fn run(scale: Scale, datasets: &[SynthKind]) -> anyhow::Result<String> {
+pub fn run(scale: Scale, datasets: &[SynthKind], scenario: &Scenario) -> anyhow::Result<String> {
     sweep(
         "Table 2 — main comparison (final test accuracy %, mean(std))",
         "table2.csv",
@@ -87,18 +100,20 @@ pub fn run(scale: Scale, datasets: &[SynthKind]) -> anyhow::Result<String> {
             Method::ZoWarmup,
         ],
         scale,
+        scenario,
         |_| {},
     )
 }
 
 /// Table 4: FedAdam as the server optimizer in both phases.
-pub fn run_table4(scale: Scale, datasets: &[SynthKind]) -> anyhow::Result<String> {
+pub fn run_table4(scale: Scale, datasets: &[SynthKind], scenario: &Scenario) -> anyhow::Result<String> {
     sweep(
         "Table 4 — FedAdam server optimizer (both phases)",
         "table4.csv",
         datasets,
         &[Method::HighResOnly, Method::ZoWarmup],
         scale,
+        scenario,
         |cfg| {
             cfg.server_opt = ServerOpt::adam();
             // Adam server steps need a smaller lr (paper §A.5: Adam grids
@@ -115,7 +130,7 @@ mod tests {
 
     #[test]
     fn table2_smoke_has_expected_shape() {
-        let md = run(Scale::Smoke, &[SynthKind::Synth10]).unwrap();
+        let md = run(Scale::Smoke, &[SynthKind::Synth10], &Scenario::default()).unwrap();
         assert!(md.contains("ZOWarmUp (ours)"));
         assert!(md.contains("High Res Only"));
         assert!(md.contains("HeteroFL"));
@@ -126,7 +141,7 @@ mod tests {
 
     #[test]
     fn table4_smoke_runs_with_adam() {
-        let md = run_table4(Scale::Smoke, &[SynthKind::Synth10]).unwrap();
+        let md = run_table4(Scale::Smoke, &[SynthKind::Synth10], &Scenario::default()).unwrap();
         assert!(md.contains("FedAdam"));
     }
 }

@@ -13,6 +13,7 @@ use crate::metrics::MdTable;
 use crate::model::manifest::Manifest;
 use crate::model::params::ParamVec;
 use crate::runtime::Engine;
+use crate::sim::Scenario;
 
 struct VitScale {
     n_train: usize,
@@ -44,7 +45,7 @@ fn vit_scale(scale: Scale) -> VitScale {
     }
 }
 
-pub fn run(scale: Scale, artifacts_dir: &str) -> anyhow::Result<String> {
+pub fn run(scale: Scale, artifacts_dir: &str, scenario: &Scenario) -> anyhow::Result<String> {
     let vs = vit_scale(scale);
     let manifest = Manifest::load(artifacts_dir)?;
     let engine = Engine::cpu()?;
@@ -68,6 +69,7 @@ pub fn run(scale: Scale, artifacts_dir: &str) -> anyhow::Result<String> {
                 cfg.clients = 8;
                 cfg.hi_frac = hi_frac;
                 cfg.seed = seed as u64;
+                cfg.scenario = scenario.clone();
                 cfg.rounds_total = match scale {
                     Scale::Smoke => 8,
                     Scale::Default => 16,

@@ -2,14 +2,18 @@
 //! staging. Clients never see each other's data; everything they export is
 //! either a weight vector (warm, high-resource only) or `S` scalars (ZO).
 
+use crate::comm::CostModel;
 use crate::config::FedConfig;
 use crate::data::loader::ClientData;
 use crate::model::backend::{Batch, LossSums, ModelBackend};
 use crate::model::params::ParamVec;
+use crate::sim::CapabilityProfile;
 use crate::util::rng::Xoshiro256;
 
 /// Resource class of an edge device (§3: a low-resource client cannot run
-/// backprop-based training at all).
+/// backprop-based training at all). Since the `sim` capability engine
+/// this is a *derived* view: High ⇔ the client's [`CapabilityProfile`]
+/// covers the eq. 4 backprop footprint of the run's cost model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Resource {
     High,
@@ -20,7 +24,10 @@ pub enum Resource {
 pub struct ClientState {
     pub id: usize,
     pub data: ClientData,
+    /// derived FO-eligibility class (see [`clients_from_profiles`])
     pub resource: Resource,
+    /// sampled device capabilities (memory, bandwidth, compute, drops)
+    pub profile: CapabilityProfile,
 }
 
 impl ClientState {
@@ -31,6 +38,36 @@ impl ClientState {
     pub fn is_high(&self) -> bool {
         self.resource == Resource::High
     }
+}
+
+/// Build the client list from shards and sampled capability profiles.
+/// The legacy `Resource` class is derived here — the single place FO
+/// eligibility is decided — by thresholding the profile's memory budget
+/// against the cost model (`CostModel::fo_threshold_bytes`).
+pub fn clients_from_profiles(
+    shards: Vec<ClientData>,
+    profiles: Vec<CapabilityProfile>,
+    cost: &CostModel,
+) -> Vec<ClientState> {
+    debug_assert_eq!(shards.len(), profiles.len());
+    shards
+        .into_iter()
+        .zip(profiles)
+        .enumerate()
+        .map(|(id, (data, profile))| {
+            let resource = if profile.fo_capable(cost) {
+                Resource::High
+            } else {
+                Resource::Low
+            };
+            ClientState {
+                id,
+                data,
+                resource,
+                profile,
+            }
+        })
+        .collect()
 }
 
 /// WARMUP (Algorithm 1 line 5): local_epochs of minibatch SGD starting

@@ -5,5 +5,5 @@ pub mod aggregate;
 pub mod client;
 pub mod server;
 
-pub use client::{ClientState, Resource};
-pub use server::{assign_resources, shards_from_partition, Federation};
+pub use client::{clients_from_profiles, ClientState, Resource};
+pub use server::{assign_resources, shards_from_partition, Federation, RoundSummary};

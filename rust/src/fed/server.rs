@@ -13,7 +13,8 @@
 //! ([`crate::util::pool::parallel_map_n`]). The engine guarantees results
 //! **bit-identical to the sequential path for every worker count**:
 //!
-//! 1. every per-client random input (local-SGD RNG, issued seed block) is
+//! 1. every per-client random input (local-SGD RNG, issued seed block,
+//!    and the `sim` capability timeline deciding who drops mid-round) is
 //!    derived *before* the fan-out from `(master seed, round, client id)`
 //!    or the stateless [`SeedIssuer`], never from shared mutable RNG state
 //!    inside a job;
@@ -30,19 +31,24 @@
 
 use std::time::Instant;
 
-use crate::comm::CommLedger;
+use crate::comm::{CommLedger, CostModel};
 use crate::config::FedConfig;
 use crate::data::loader::{eval_chunks, ClientData, Source};
 use crate::fed::aggregate::{weighted_average, ServerOptState};
 use crate::fed::client::{
-    round_client_rng, warm_local_train, zo_step_chunks, zo_step_count, ClientState, Resource,
+    clients_from_profiles, round_client_rng, warm_local_train, zo_step_chunks, zo_step_count,
+    ClientState, Resource,
 };
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
 use crate::model::params::ParamVec;
+use crate::sim::{self, Scenario};
 use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
-use crate::zo::{apply_zo_update_sharded, zo_round_ledger, zoopt, SeedIssuer, ZoContribution};
+use crate::zo::{
+    apply_zo_update_sharded, zo_round_ledger_outcomes, zoopt, SeedIssuer, ZoClientCharge,
+    ZoContribution,
+};
 
 /// Full federation state for one training run.
 pub struct Federation<'b, B: ModelBackend> {
@@ -54,22 +60,55 @@ pub struct Federation<'b, B: ModelBackend> {
     pub round: usize,
     pub log: RunLog,
     pub ledger: CommLedger,
+    /// the backend's eq. 4/5 cost profile — the capability thresholds
+    /// and simulated timing of the `sim` scenario engine
+    pub cost: CostModel,
     server_opt: ServerOptState,
     issuer: SeedIssuer,
     rng: Xoshiro256,
 }
 
-/// Assign resource classes: the first `hi_count` of a seed-shuffled client
-/// order are high-resource ("clients are randomly assigned", §4).
-pub fn assign_resources(k: usize, hi_count: usize, seed: u64) -> Vec<Resource> {
-    let mut rng = Xoshiro256::seed_from(seed ^ 0x4E50_11);
-    let mut order: Vec<usize> = (0..k).collect();
-    rng.shuffle(&mut order);
-    let mut out = vec![Resource::Low; k];
-    for &i in order.iter().take(hi_count.min(k)) {
-        out[i] = Resource::High;
+/// One round's outcome as seen by the logger.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundSummary {
+    /// the round's training signal (always finite; see [`zo_train_signal`])
+    pub train_signal: f64,
+    /// sampled clients that missed the deadline, failed mid-round, or
+    /// could not fit even the ZO footprint
+    pub dropped: usize,
+}
+
+/// Clamp a training signal to the finite domain the CSV log expects
+/// (shared by every round engine, including the baselines).
+pub(crate) fn finite_signal(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
     }
-    out
+}
+
+/// Assign resource classes ("clients are randomly assigned", §4).
+///
+/// Compatibility shim over `sim` profile sampling: the Binary scenario
+/// consumes the identical RNG stream the seed repo's implementation did
+/// (one shuffle of `0..k` seeded from `seed ^ 0x4E50_11`, first
+/// `hi_count` of the order high-resource), so seed-equivalent configs
+/// reproduce the exact same High/Low assignment. Symbolic tier budgets
+/// make the split independent of the cost model used to resolve them.
+pub fn assign_resources(k: usize, hi_count: usize, seed: u64) -> Vec<Resource> {
+    let cost = CostModel::generic(1 << 20, 1);
+    Scenario::Binary
+        .sample_profiles(k, hi_count.min(k), seed, &cost)
+        .iter()
+        .map(|p| {
+            if p.fo_capable(&cost) {
+                Resource::High
+            } else {
+                Resource::Low
+            }
+        })
+        .collect()
 }
 
 impl<'b, B: ModelBackend> Federation<'b, B> {
@@ -86,13 +125,18 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         cfg.validate()?;
         anyhow::ensure!(shards.len() == cfg.clients, "shard count != clients");
         anyhow::ensure!(init.dim() == backend.dim(), "init dim mismatch");
-        let classes = assign_resources(cfg.clients, cfg.hi_count(), cfg.seed);
-        let clients = shards
-            .into_iter()
-            .zip(classes)
-            .enumerate()
-            .map(|(id, (data, resource))| ClientState { id, data, resource })
-            .collect();
+        let cost = backend.cost_model();
+        let profiles = cfg
+            .scenario
+            .sample_profiles(cfg.clients, cfg.hi_count(), cfg.seed, &cost);
+        let clients = clients_from_profiles(shards, profiles, &cost);
+        if cfg.pivot > 0 {
+            anyhow::ensure!(
+                clients.iter().any(|c: &ClientState| c.is_high()),
+                "scenario {:?} yields no FO-capable clients but pivot > 0",
+                cfg.scenario.name()
+            );
+        }
         let server_opt = ServerOptState::new(cfg.server_opt, backend.dim());
         let issuer = SeedIssuer::new(cfg.seed ^ 0x5EED_1557);
         let rng = Xoshiro256::seed_from(cfg.seed ^ 0xFED_0_FED);
@@ -105,6 +149,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             round: 0,
             log: RunLog::default(),
             ledger: CommLedger::default(),
+            cost,
             server_opt,
             issuer,
             rng,
@@ -141,9 +186,17 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     /// One warm round (Algorithm 1 lines 2-8). Sampled clients train in
     /// parallel; see the module-level threading model for the
     /// determinism argument.
-    pub fn warm_round(&mut self) -> anyhow::Result<f64> {
+    ///
+    /// Every picked client first runs its simulated capability timeline
+    /// ([`sim::simulate_round`]): clients that miss the scenario deadline
+    /// or fail on their availability trace drop out mid-round — the
+    /// server aggregates only survivors and the ledger charges only the
+    /// bytes on the wire before each drop. The simulation is evaluated
+    /// *before* the fan-out from pure per-(round, client) inputs, so it
+    /// cannot perturb the worker-count invariance.
+    pub fn warm_round(&mut self) -> anyhow::Result<RoundSummary> {
         let hi = self.high_ids();
-        anyhow::ensure!(!hi.is_empty(), "no high-resource clients to warm up");
+        anyhow::ensure!(!hi.is_empty(), "no FO-capable clients to warm up");
         let p = self.cfg.sample_warm.clamp(1, hi.len());
         let picked: Vec<usize> = self
             .rng
@@ -152,11 +205,30 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             .map(|i| hi[i])
             .collect();
 
-        // derive each client's RNG before the fan-out (determinism rule 1)
-        let jobs: Vec<(usize, Xoshiro256)> = picked
-            .iter()
-            .map(|&cid| (cid, self.client_rng(cid)))
-            .collect();
+        // simulate each picked client's timeline, then derive survivor
+        // RNGs, all before the fan-out (determinism rule 1)
+        let deadline = self.cfg.scenario.deadline_ms();
+        let d4 = (self.backend.dim() * 4) as u64;
+        let mut jobs: Vec<(usize, Xoshiro256)> = Vec::with_capacity(p);
+        let (mut up, mut down) = (0u64, 0u64);
+        let mut dropped = 0usize;
+        for &cid in &picked {
+            let client = &self.clients[cid];
+            let plan = sim::RoundPlan {
+                down_bytes: d4,
+                passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
+                up_bytes: d4,
+            };
+            let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
+            let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+            up += o.up_bytes;
+            down += o.down_bytes;
+            if o.survives {
+                jobs.push((cid, self.client_rng(cid)));
+            } else {
+                dropped += 1;
+            }
+        }
         let workers = self.workers();
         let results = {
             let backend = self.backend;
@@ -177,16 +249,24 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             train.add(sums);
             updates.push((w, self.clients[cid].n() as f64));
         }
+        // partial/zero transmissions are already folded into up/down
+        self.ledger.record_round(up, down);
+        if updates.is_empty() {
+            // every sampled client dropped: no aggregate step this round
+            return Ok(RoundSummary {
+                train_signal: 0.0,
+                dropped,
+            });
+        }
         let avg = weighted_average(&updates);
         let mut delta = avg;
         delta.axpy(-1.0, &self.global);
         self.server_opt
             .apply(&mut self.global, &delta, self.cfg.lr_server_warm);
-
-        // full weights both ways, per participating client
-        let d4 = (self.backend.dim() * 4) as u64;
-        self.ledger.record_round(d4 * p as u64, d4 * p as u64);
-        Ok(train.mean_loss())
+        Ok(RoundSummary {
+            train_signal: finite_signal(train.mean_loss()),
+            dropped,
+        })
     }
 
     /// One ZO round (Algorithm 1 lines 11-21). Sampled clients evaluate
@@ -194,7 +274,16 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     /// parallel; every random input is pre-derived and the fold-back is
     /// order-canonical, so the round is bit-identical for any worker
     /// count (see module docs).
-    pub fn zo_round(&mut self) -> anyhow::Result<f64> {
+    ///
+    /// Deadline semantics: every sampled client runs its simulated
+    /// capability timeline first. Dropouts contribute nothing — the
+    /// server folds only surviving contributions (the finite-signal path
+    /// of [`zo_train_signal`] covers the all-drop edge) — and the ledger
+    /// charges each dropout only the bytes transmitted before its cut
+    /// ([`zo_round_ledger_outcomes`]). Clients whose memory budget is
+    /// below even the eq. 5 ZO footprint never participate and transmit
+    /// nothing.
+    pub fn zo_round(&mut self) -> anyhow::Result<RoundSummary> {
         // Q ⊆ K — all resource classes participate in step 2. With
         // mixed_step2 (§A.4 ablation) the sampled high-res clients do FO
         // updates instead.
@@ -211,23 +300,60 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         }
 
         // pre-derive every per-client random input (determinism rule 1):
-        // the FO local RNG and the issued seed block are both pure
-        // functions of (master seed, round, client id).
-        let jobs: Vec<Job> = picked
-            .iter()
-            .map(|&cid| {
-                let client = &self.clients[cid];
-                if self.cfg.mixed_step2 && client.is_high() {
-                    Job::Fo { cid, rng: self.client_rng(cid) }
+        // the FO local RNG, the issued seed block, and the capability
+        // timeline are all pure functions of (master seed, round, client
+        // id) and the sampled profile.
+        let deadline = self.cfg.scenario.deadline_ms();
+        let d4 = (self.backend.dim() * 4) as u64;
+        let mut jobs: Vec<Job> = Vec::with_capacity(q);
+        let mut zo_charges: Vec<ZoClientCharge> = Vec::with_capacity(q);
+        let (mut fo_up, mut fo_down) = (0u64, 0u64);
+        let mut dropped = 0usize;
+        for &cid in &picked {
+            let client = &self.clients[cid];
+            let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
+            if self.cfg.mixed_step2 && client.is_high() {
+                let plan = sim::RoundPlan {
+                    down_bytes: d4,
+                    passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
+                    up_bytes: d4,
+                };
+                let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+                fo_up += o.up_bytes;
+                fo_down += o.down_bytes;
+                if o.survives {
+                    jobs.push(Job::Fo { cid, rng: self.client_rng(cid) });
                 } else {
-                    let steps = zo_step_count(client.n(), self.cfg.zo.grad_steps);
-                    let seeds = self
-                        .issuer
-                        .seeds_for(self.round, cid, self.cfg.zo.s_seeds * steps);
-                    Job::Zo { cid, seeds }
+                    dropped += 1;
                 }
-            })
-            .collect();
+            } else if client.profile.zo_capable(&self.cost) {
+                let steps = zo_step_count(client.n(), self.cfg.zo.grad_steps);
+                let n_seeds = self.cfg.zo.s_seeds * steps;
+                let plan = sim::RoundPlan {
+                    down_bytes: (n_seeds * 8) as u64,
+                    passes: sim::zo_passes(client.n(), self.cfg.zo.s_seeds),
+                    up_bytes: (n_seeds * 4) as u64,
+                };
+                let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+                zo_charges.push(ZoClientCharge {
+                    issued_seeds: n_seeds,
+                    up_bytes: o.up_bytes,
+                    seed_down_bytes: o.down_bytes,
+                    survives: o.survives,
+                });
+                if o.survives {
+                    jobs.push(Job::Zo {
+                        cid,
+                        seeds: self.issuer.seeds_for(self.round, cid, n_seeds),
+                    });
+                } else {
+                    dropped += 1;
+                }
+            } else {
+                // below even the eq. 5 ZO footprint: cannot participate
+                dropped += 1;
+            }
+        }
 
         let workers = self.workers();
         let results = {
@@ -315,25 +441,22 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         }
 
         // comm accounting: seed traffic is charged only to ZO
-        // participants (and only for the seeds actually issued — small
-        // clients run fewer grad_steps blocks); FO participants exchange
-        // full weights instead.
-        let total_seeds: usize = contributions.iter().map(|c| c.seeds.len()).sum();
-        let (up, down) = zo_round_ledger(
-            total_seeds,
-            contributions.len(),
-            fo_participants,
-            (self.backend.dim() * 4) as u64,
-        );
+        // participants (partial transmissions for dropouts, the end-of-
+        // round broadcast of surviving (seed, ΔL) pairs only to
+        // survivors); FO participants exchange full weights instead.
+        let (up, down) = zo_round_ledger_outcomes(&zo_charges, fo_up, fo_down);
         self.ledger.record_round(up, down);
 
-        Ok(zo_train_signal(&contributions, &train))
+        Ok(RoundSummary {
+            train_signal: zo_train_signal(&contributions, &train),
+            dropped,
+        })
     }
 
     /// Run one round (phase chosen by the pivot), with eval + logging.
     pub fn step(&mut self) -> anyhow::Result<()> {
         let t0 = Instant::now();
-        let (phase, train_signal) = if self.round < self.cfg.pivot {
+        let (phase, summary) = if self.round < self.cfg.pivot {
             (Phase::Warm, self.warm_round()?)
         } else {
             (Phase::Zo, self.zo_round()?)
@@ -351,11 +474,12 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         self.log.push(RoundRecord {
             round: self.round,
             phase,
-            train_loss: train_signal,
+            train_loss: summary.train_signal,
             test_acc,
             test_loss,
             bytes_up: up,
             bytes_down: down,
+            dropped: summary.dropped,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         });
         self.round += 1;
@@ -598,6 +722,111 @@ mod tests {
             count: 1.0,
         };
         assert_eq!(zo_train_signal(&[], &bad), 0.0);
+    }
+
+    #[test]
+    fn binary_scenario_reproduces_legacy_resource_classes() {
+        // the acceptance contract: a default (assign_resources-compatible)
+        // config derives the exact same High/Low split through profile
+        // sampling + cost-model thresholds.
+        let cfg = smoke_cfg();
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let fed = Federation::new(cfg.clone(), &be, shards, test, init).unwrap();
+        let legacy = assign_resources(cfg.clients, cfg.hi_count(), cfg.seed);
+        for (c, l) in fed.clients.iter().zip(&legacy) {
+            assert_eq!(c.resource, *l, "client {}", c.id);
+        }
+        // every low client can still afford the ZO footprint
+        for c in &fed.clients {
+            assert!(c.profile.zo_capable(&fed.cost));
+        }
+    }
+
+    #[test]
+    fn straggler_scenario_drops_and_stays_thread_invariant() {
+        // the tentpole guarantee: a dropout/straggler fleet still yields
+        // bit-identical weights, logs, AND ledgers for every worker count,
+        // and actually drops someone.
+        let run_with = |threads: usize| {
+            let mut cfg = smoke_cfg();
+            cfg.threads = threads;
+            cfg.scenario = crate::sim::Scenario::preset("stragglers").unwrap();
+            let (be, shards, test) = build(cfg.clone());
+            let init = ParamVec::zeros(be.dim());
+            let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+            fed.run().unwrap();
+            (fed.global.clone(), fed.log, fed.ledger)
+        };
+        let (g1, log1, led1) = run_with(1);
+        let (g4, log4, led4) = run_with(4);
+        assert_eq!(g1, g4, "weights must not depend on threads under drops");
+        assert_eq!(led1.up_total, led4.up_total);
+        assert_eq!(led1.down_total, led4.down_total);
+        assert_eq!(log1.rounds.len(), log4.rounds.len());
+        for (a, b) in log1.rounds.iter().zip(&log4.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.bytes_up, b.bytes_up);
+            assert_eq!(a.bytes_down, b.bytes_down);
+            assert_eq!(a.dropped, b.dropped);
+        }
+        let total_dropped: usize = log1.rounds.iter().map(|r| r.dropped).sum();
+        assert!(total_dropped > 0, "straggler preset should drop someone");
+        assert!(g1.is_finite());
+    }
+
+    #[test]
+    fn dropouts_shrink_the_ledger_not_the_determinism() {
+        // with drops, total bytes must be <= the binary (no-drop) run of
+        // the same config — partial transmissions only ever remove bytes
+        let base = {
+            let cfg = smoke_cfg();
+            let (be, shards, test) = build(cfg.clone());
+            let mut fed =
+                Federation::new(cfg, &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+            fed.run().unwrap();
+            fed.ledger
+        };
+        let dropped = {
+            let mut cfg = smoke_cfg();
+            // binary fleet with a universal failure rate: same tiers, so
+            // per-round plans match the binary run's
+            cfg.scenario = crate::sim::Scenario::preset("flaky").unwrap();
+            let (be, shards, test) = build(cfg.clone());
+            let mut fed =
+                Federation::new(cfg, &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+            fed.run().unwrap();
+            fed.ledger
+        };
+        assert!(dropped.up_total <= base.up_total);
+        assert!(dropped.down_total <= base.down_total);
+        assert!(
+            dropped.up_total < base.up_total,
+            "a 25% drop rate over a full run should lose at least one upload"
+        );
+    }
+
+    #[test]
+    fn all_drop_warm_round_leaves_params_untouched() {
+        // a warm round where every picked client misses the deadline must
+        // log a finite 0.0 signal, skip the server step, and charge only
+        // the partial downloads
+        let mut cfg = smoke_cfg();
+        cfg.scenario = crate::sim::Scenario::load(
+            r#"{"name": "warm-all-drop", "deadline_ms": 0.0001,
+                "tiers": [{"frac": 1.0, "mem": "backprop",
+                           "up_mbps": 0.001, "down_mbps": 0.001, "compute": 0.001}]}"#,
+        )
+        .unwrap();
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg, &be, shards, test, init.clone()).unwrap();
+        let summary = fed.warm_round().unwrap();
+        assert_eq!(summary.train_signal, 0.0);
+        assert!(summary.dropped > 0);
+        assert_eq!(fed.global, init, "no survivors => no server step");
+        let (up, _down) = *fed.ledger.per_round.last().unwrap();
+        assert_eq!(up, 0, "cut during download charges zero uplink");
     }
 
     #[test]

@@ -14,8 +14,27 @@
 //! * [`baselines`] — HeteroFL, FedKSeed, High-Res-Only comparators.
 //! * [`data`] — procedural datasets + Dirichlet partitioner.
 //! * [`comm`] — measured byte accounting + the eq. 4/5 analytic cost model.
+//! * [`sim`] — the device-capability scenario engine: per-client
+//!   memory/bandwidth/compute profiles sampled from the federation seed,
+//!   deterministic availability/straggler traces, and round deadline
+//!   simulation with byte-accurate partial-transmission accounting.
 //! * [`exp`] — runners that regenerate every paper table and figure.
 //! * [`util`] — offline substrates (RNG, JSON, CLI, bench, property tests).
+//!
+//! ## Capability scenarios
+//!
+//! Fleets are described by [`sim::Scenario`]s — named presets
+//! (`binary`, `uniform-high`, `edge-spectrum`, `stragglers`, `flaky`) or
+//! JSON specs (`train --scenario <name|file>`; schema in
+//! `rust/src/exp/README.md`). Each client draws a
+//! [`sim::CapabilityProfile`] reproducibly from the master seed; the
+//! eq. 4/5 cost model decides FO-vs-ZO eligibility (replacing the old
+//! hardcoded binary flag — `fed::server::assign_resources` survives as a
+//! bit-compatible shim), and rounds gain deadline semantics: clients
+//! whose simulated wall-time exceeds the deadline drop out mid-round,
+//! the server folds only surviving contributions, and the ledger charges
+//! only bytes actually transmitted before the drop. The default
+//! scenario reproduces the seed repo's behavior bit for bit.
 //!
 //! ## Threading model
 //!
@@ -46,5 +65,6 @@ pub mod fed;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod sim;
 pub mod util;
 pub mod zo;

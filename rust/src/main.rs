@@ -15,6 +15,7 @@ use zowarmup::model::backend::ModelBackend;
 use zowarmup::model::manifest::Manifest;
 use zowarmup::model::params::ParamVec;
 use zowarmup::runtime::Engine;
+use zowarmup::sim::Scenario;
 use zowarmup::util::cli::Args;
 use zowarmup::util::json::Json;
 
@@ -33,10 +34,17 @@ SUBCOMMANDS
             --server-opt sgd|adam --config file.json --out runs/train.csv
             --threads N                (parallel round engine; 0 = auto,
                                         results identical for every N)
+            --scenario NAME|FILE       (device-capability fleet: binary|
+                                        uniform-high|edge-spectrum|
+                                        stragglers|flaky, a JSON spec file,
+                                        or an inline {...} spec — schema in
+                                        rust/src/exp/README.md)
   exp     regenerate a paper table/figure
             zowarmup exp <table1..table7|fig3..fig7|all> [--scale smoke|default|paper]
             [--threads N]              (worker threads for every run in
                                         the sweep; 0 = auto)
+            [--scenario NAME|FILE]     (capability fleet for every run in
+                                        the sweep; default binary)
   comm    print the Table 1 communication/memory cost model
   check   validate the artifact manifest and compile all artifacts
 ";
@@ -181,8 +189,12 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     if threads > 0 {
         std::env::set_var("ZOWARMUP_THREADS", threads.to_string());
     }
+    let scenario = match args.get("scenario") {
+        Some(s) => Scenario::load(s)?,
+        None => Scenario::default(),
+    };
     args.reject_unknown()?;
-    let report = exp::run(&id, scale, &artifacts)?;
+    let report = exp::run(&id, scale, &artifacts, &scenario)?;
     println!("{report}");
     let path = run_path(&format!("report_{id}.md"));
     std::fs::write(&path, &report)?;
@@ -193,7 +205,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 fn cmd_comm(args: &Args) -> anyhow::Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     args.reject_unknown()?;
-    let report = exp::table1::run(Scale::Smoke, &artifacts)?;
+    let report = exp::table1::run(Scale::Smoke, &artifacts, &Scenario::default())?;
     println!("{report}");
     Ok(())
 }

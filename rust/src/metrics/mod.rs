@@ -31,6 +31,8 @@ pub struct RoundRecord {
     pub test_loss: f64,
     pub bytes_up: u64,
     pub bytes_down: u64,
+    /// sampled clients that dropped mid-round (deadline / availability)
+    pub dropped: usize,
     pub wall_ms: f64,
 }
 
@@ -64,6 +66,11 @@ impl RunLog {
             .fold(f64::NAN, f64::max)
     }
 
+    /// Total mid-round dropouts over the run (scenario-engine view).
+    pub fn total_dropped(&self) -> usize {
+        self.rounds.iter().map(|r| r.dropped).sum()
+    }
+
     pub fn total_bytes(&self) -> (u64, u64) {
         (
             self.rounds.iter().map(|r| r.bytes_up).sum(),
@@ -85,7 +92,7 @@ impl RunLog {
             path,
             &[
                 "round", "phase", "train_loss", "test_acc", "test_loss", "bytes_up",
-                "bytes_down", "wall_ms",
+                "bytes_down", "dropped", "wall_ms",
             ],
         )?;
         for r in &self.rounds {
@@ -97,6 +104,7 @@ impl RunLog {
                 format!("{:.6}", r.test_loss),
                 r.bytes_up.to_string(),
                 r.bytes_down.to_string(),
+                r.dropped.to_string(),
                 format!("{:.3}", r.wall_ms),
             ])?;
         }
@@ -156,6 +164,7 @@ mod tests {
             test_loss: 1.0,
             bytes_up: 10,
             bytes_down: 20,
+            dropped: 0,
             wall_ms: 1.0,
         }
     }

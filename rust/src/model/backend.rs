@@ -110,6 +110,15 @@ pub trait ModelBackend: Sync {
         lr: f32,
     ) -> anyhow::Result<LossSums>;
 
+    /// Analytic per-client cost profile (eq. 4/5) consulted by the `sim`
+    /// capability engine to decide FO-vs-ZO eligibility and simulated
+    /// round timing. Backends with a manifest override this with measured
+    /// activation sizes; the default models activations as fixed
+    /// fractions of the parameter count.
+    fn cost_model(&self) -> crate::comm::CostModel {
+        crate::comm::CostModel::generic(self.dim() as u64, self.batch_size() as u64)
+    }
+
     /// SPSA numerator ΔL = L(w+cz) − L(w−cz) for z = dist(seed) (z carries
     /// τ via `tau`; `c = eps`). Default: host-side perturbation + two
     /// forward passes — the genuinely low-memory path (only one perturbed

@@ -185,6 +185,10 @@ impl<'e> ModelBackend for XlaBackend<'e> {
         self.entry.batch
     }
 
+    fn cost_model(&self) -> crate::comm::CostModel {
+        crate::comm::CostModel::from_manifest(&self.entry)
+    }
+
     fn fwd_loss(&self, params: &ParamVec, batch: &Batch) -> anyhow::Result<LossSums> {
         let (y, mask) = self.literal_y_mask(batch)?;
         let outs = self.exec(

@@ -1,0 +1,811 @@
+//! Device-capability scenario engine: per-client capability profiles,
+//! deterministic availability/straggler traces, and round deadline
+//! simulation.
+//!
+//! The paper's premise is that edge devices fall on a *spectrum* of memory
+//! and communication capability, with eq. 4/5 ([`CostModel`]) deciding who
+//! can afford first-order updates. The seed repo collapsed that spectrum
+//! into a binary `Resource::{High,Low}` flag; this module replaces the
+//! flag with [`CapabilityProfile`]s — a memory budget, up/down bandwidth,
+//! a relative compute speed, and a per-round failure rate — sampled
+//! reproducibly from the federation seed via a [`Scenario`].
+//!
+//! ## Eligibility
+//!
+//! A client is **FO-capable** when its memory budget covers the eq. 4
+//! backprop footprint ([`CostModel::fo_threshold_bytes`]) and
+//! **ZO-capable** when it covers the eq. 5 inference footprint
+//! ([`CostModel::zo_mem_bytes`]). The federated engines derive the legacy
+//! `Resource` class from these thresholds instead of a hardcoded flag; the
+//! default [`Scenario::Binary`] uses symbolic budgets
+//! ([`MemBudget::FitsBackprop`] / [`MemBudget::FitsZoOnly`]) so the class
+//! split reproduces the seed's `assign_resources` exactly, bit for bit,
+//! for any model.
+//!
+//! ## Deadlines and stragglers
+//!
+//! Every round, each sampled client runs a simulated timeline
+//! ([`simulate_round`]): download its round payload, compute, upload.
+//! Clients whose timeline exceeds the scenario deadline — or who hit a
+//! failure drawn from their deterministic per-(round, client) trace —
+//! drop out mid-round. The server folds in only surviving contributions,
+//! and the `CommLedger` charges only the bytes actually on the wire
+//! before the cut. All of this is derived *before* the parallel fan-out
+//! from pure functions of `(master seed, round, client id)`, so results
+//! stay bit-identical for every worker count (the `fed::server`
+//! threading-model contract).
+//!
+//! ## Timing model
+//!
+//! Simulated milliseconds, with fixed documented constants:
+//! * link time = bytes / (mbps · 125) — megabits/s to bytes/ms;
+//! * compute time = sample-passes · (params / 10⁶) · [`MS_PER_MPARAM_PASS`]
+//!   / `compute`, where a backprop pass counts [`FO_PASS_FACTOR`] forward
+//!   passes and a ZO round costs `2 · S` forward passes per sample;
+//! * a failing client aborts at a uniform point of its own timeline.
+//!
+//! The absolute scale is synthetic (the probe is not a real phone); what
+//! matters is the *relative* ordering it induces between tiers, which is
+//! what the paper's ablations sweep.
+
+use crate::comm::CostModel;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+/// Salt for the per-(round, client) availability trace RNG
+/// (`fed::client::round_client_rng`) — decorrelated from the local-SGD
+/// (salt 0) and FedKSeed (salt 0x4B) streams.
+pub const SIM_SALT: u64 = 0x51D_7E57;
+
+/// ms per sample-pass per million parameters at `compute = 1.0`.
+pub const MS_PER_MPARAM_PASS: f64 = 0.1;
+
+/// Relative cost of one backprop sample-pass vs one forward pass
+/// (forward + backward + update).
+pub const FO_PASS_FACTOR: f64 = 3.0;
+
+/// Megabits/s → bytes per simulated millisecond.
+pub fn bytes_per_ms(mbps: f64) -> f64 {
+    mbps * 125.0
+}
+
+/// Sample-passes of one warm-phase local training job.
+pub fn fo_passes(n: usize, local_epochs: usize) -> f64 {
+    (n * local_epochs) as f64 * FO_PASS_FACTOR
+}
+
+/// Sample-passes of one ZO round: every sample is forwarded twice per
+/// seed (w ± εz), regardless of how `grad_steps` groups the data.
+pub fn zo_passes(n: usize, s_seeds: usize) -> f64 {
+    (2 * s_seeds * n) as f64
+}
+
+/// Sample-passes of one FedKSeed local job: two sides per step over a
+/// `step_batch`-sized minibatch.
+pub fn kseed_passes(local_steps: usize, step_batch: usize) -> f64 {
+    (2 * local_steps * step_batch) as f64
+}
+
+// ---------------------------------------------------------------------------
+// capability profiles
+// ---------------------------------------------------------------------------
+
+/// A tier's memory budget: absolute bytes, or symbolic — resolved against
+/// the run's [`CostModel`] so the same scenario works for any model size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemBudget {
+    Bytes(u64),
+    /// Exactly the eq. 4 backprop footprint: FO-capable by definition.
+    FitsBackprop,
+    /// Exactly the eq. 5 ZO footprint: ZO-capable but never FO-capable
+    /// (the threshold is strictly above it — see
+    /// [`CostModel::fo_threshold_bytes`]).
+    FitsZoOnly,
+}
+
+impl MemBudget {
+    pub fn resolve(self, cost: &CostModel) -> u64 {
+        match self {
+            MemBudget::Bytes(b) => b,
+            MemBudget::FitsBackprop => cost.fo_threshold_bytes(),
+            MemBudget::FitsZoOnly => cost.zo_mem_bytes(),
+        }
+    }
+}
+
+/// One device class in a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceTier {
+    pub name: String,
+    /// fraction of the fleet in this tier (fractions sum to 1)
+    pub frac: f64,
+    pub mem: MemBudget,
+    pub up_mbps: f64,
+    pub down_mbps: f64,
+    /// relative compute speed (1.0 = reference device)
+    pub compute: f64,
+    /// per-round probability of failing mid-round
+    pub drop_rate: f64,
+}
+
+impl DeviceTier {
+    fn new(name: &str, frac: f64, mem: MemBudget) -> Self {
+        Self {
+            name: name.to_string(),
+            frac,
+            mem,
+            up_mbps: 10.0,
+            down_mbps: 10.0,
+            compute: 1.0,
+            drop_rate: 0.0,
+        }
+    }
+
+    fn net(mut self, up_mbps: f64, down_mbps: f64) -> Self {
+        self.up_mbps = up_mbps;
+        self.down_mbps = down_mbps;
+        self
+    }
+
+    fn speed(mut self, compute: f64) -> Self {
+        self.compute = compute;
+        self
+    }
+
+    fn drops(mut self, rate: f64) -> Self {
+        self.drop_rate = rate;
+        self
+    }
+
+    fn from_json(i: usize, j: &Json) -> anyhow::Result<Self> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("tier{i}"));
+        let frac = j
+            .req("frac")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("tier {name}: frac must be a number"))?;
+        let mem = match (j.get("mem"), j.get("mem_bytes")) {
+            (Some(m), None) => match m.as_str() {
+                Some("backprop") => MemBudget::FitsBackprop,
+                Some("zo") => MemBudget::FitsZoOnly,
+                _ => anyhow::bail!("tier {name}: mem must be \"backprop\" or \"zo\""),
+            },
+            (None, Some(b)) => MemBudget::Bytes(
+                b.as_f64()
+                    .filter(|v| *v >= 0.0)
+                    .ok_or_else(|| anyhow::anyhow!("tier {name}: bad mem_bytes"))?
+                    as u64,
+            ),
+            _ => anyhow::bail!("tier {name}: exactly one of mem / mem_bytes required"),
+        };
+        let num = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("tier {name}: {key} must be a number")),
+            }
+        };
+        Ok(Self {
+            frac,
+            mem,
+            up_mbps: num("up_mbps", 10.0)?,
+            down_mbps: num("down_mbps", 10.0)?,
+            compute: num("compute", 1.0)?,
+            drop_rate: num("drop_rate", 0.0)?,
+            name,
+        })
+    }
+}
+
+/// One client's sampled capabilities, as used by the round engines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapabilityProfile {
+    pub tier: String,
+    pub mem_bytes: u64,
+    pub up_mbps: f64,
+    pub down_mbps: f64,
+    pub compute: f64,
+    pub drop_rate: f64,
+}
+
+impl CapabilityProfile {
+    /// Can run backprop-based local training (eq. 4).
+    pub fn fo_capable(&self, cost: &CostModel) -> bool {
+        self.mem_bytes >= cost.fo_threshold_bytes()
+    }
+
+    /// Can run forward-only SPSA evaluation (eq. 5).
+    pub fn zo_capable(&self, cost: &CostModel) -> bool {
+        self.mem_bytes >= cost.zo_mem_bytes()
+    }
+
+    fn from_tier(t: &DeviceTier, cost: &CostModel) -> Self {
+        Self {
+            tier: t.name.clone(),
+            mem_bytes: t.mem.resolve(cost),
+            up_mbps: t.up_mbps,
+            down_mbps: t.down_mbps,
+            compute: t.compute,
+            drop_rate: t.drop_rate,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenarios
+// ---------------------------------------------------------------------------
+
+/// A named fleet composition + deadline. JSON schema (see
+/// `rust/src/exp/README.md`):
+///
+/// ```json
+/// {
+///   "name": "my-fleet",
+///   "deadline_ms": 8.0,
+///   "tiers": [
+///     {"name": "server", "frac": 0.1, "mem": "backprop",
+///      "up_mbps": 100, "down_mbps": 100, "compute": 8.0, "drop_rate": 0.0},
+///     {"name": "phone", "frac": 0.9, "mem_bytes": 200000000,
+///      "up_mbps": 2, "down_mbps": 8, "compute": 0.5, "drop_rate": 0.1}
+///   ]
+/// }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub tiers: Vec<DeviceTier>,
+    /// round deadline in simulated ms; 0.0 = no deadline
+    pub deadline_ms: f64,
+}
+
+/// How the fleet's capabilities are drawn.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scenario {
+    /// The legacy binary High/Low fleet driven by `FedConfig::hi_frac`.
+    /// Profile sampling consumes the exact RNG stream of the seed repo's
+    /// `assign_resources`, so seed-equivalent configs stay bit-identical.
+    Binary,
+    Custom(ScenarioSpec),
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario::Binary
+    }
+}
+
+/// Preset names accepted by `--scenario` (besides a JSON file path or an
+/// inline `{...}` spec).
+pub const PRESETS: [&str; 5] = [
+    "binary",
+    "uniform-high",
+    "edge-spectrum",
+    "stragglers",
+    "flaky",
+];
+
+fn binary_tiers() -> Vec<DeviceTier> {
+    vec![
+        DeviceTier::new("high", 0.5, MemBudget::FitsBackprop)
+            .net(100.0, 100.0)
+            .speed(4.0),
+        DeviceTier::new("low", 0.5, MemBudget::FitsZoOnly).net(8.0, 8.0),
+    ]
+}
+
+impl Scenario {
+    pub fn preset(name: &str) -> Option<Scenario> {
+        let spec = match name {
+            "binary" => return Some(Scenario::Binary),
+            "uniform-high" => ScenarioSpec {
+                name: name.into(),
+                tiers: vec![DeviceTier::new("server", 1.0, MemBudget::FitsBackprop)
+                    .net(100.0, 100.0)
+                    .speed(4.0)],
+                deadline_ms: 0.0,
+            },
+            "edge-spectrum" => ScenarioSpec {
+                name: name.into(),
+                tiers: vec![
+                    DeviceTier::new("server", 0.05, MemBudget::FitsBackprop)
+                        .net(50.0, 100.0)
+                        .speed(8.0)
+                        .drops(0.01),
+                    DeviceTier::new("desktop", 0.15, MemBudget::FitsBackprop)
+                        .net(20.0, 80.0)
+                        .speed(4.0)
+                        .drops(0.02),
+                    DeviceTier::new("mobile", 0.5, MemBudget::FitsZoOnly)
+                        .net(5.0, 20.0)
+                        .drops(0.05),
+                    DeviceTier::new("iot", 0.3, MemBudget::FitsZoOnly)
+                        .net(1.0, 4.0)
+                        .speed(0.25)
+                        .drops(0.1),
+                ],
+                deadline_ms: 0.0,
+            },
+            // tuned for the linear-probe scale (d ≈ 10⁴): stragglers with
+            // medium/large shards blow the 8 ms deadline mid-compute,
+            // tiny-shard stragglers squeak through — the mixed
+            // survive/drop fleet the related systems papers study
+            "stragglers" => ScenarioSpec {
+                name: name.into(),
+                tiers: vec![
+                    DeviceTier::new("high", 0.3, MemBudget::FitsBackprop)
+                        .net(100.0, 100.0)
+                        .speed(8.0),
+                    DeviceTier::new("straggler", 0.7, MemBudget::FitsZoOnly)
+                        .net(0.5, 0.5)
+                        .speed(0.01)
+                        .drops(0.05),
+                ],
+                deadline_ms: 8.0,
+            },
+            "flaky" => ScenarioSpec {
+                name: name.into(),
+                tiers: binary_tiers()
+                    .into_iter()
+                    .map(|t| t.drops(0.25))
+                    .collect(),
+                deadline_ms: 0.0,
+            },
+            _ => return None,
+        };
+        Some(Scenario::Custom(spec))
+    }
+
+    /// Resolve `--scenario <value>`: an inline `{...}` JSON spec, a preset
+    /// name, or a path to a JSON file.
+    pub fn load(spec: &str) -> anyhow::Result<Scenario> {
+        let t = spec.trim();
+        if t.starts_with('{') {
+            let j = Json::parse(t).map_err(|e| anyhow::anyhow!("inline scenario: {e}"))?;
+            return Scenario::from_json(&j);
+        }
+        if let Some(s) = Scenario::preset(t) {
+            return Ok(s);
+        }
+        let text = std::fs::read_to_string(t).map_err(|e| {
+            anyhow::anyhow!("--scenario {t:?}: not a preset (one of {PRESETS:?}) and not a readable file: {e}")
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{t}: {e}"))?;
+        Scenario::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Scenario> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("custom")
+            .to_string();
+        let deadline_ms = match j.get("deadline_ms") {
+            None => 0.0,
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("deadline_ms must be a number"))?,
+        };
+        let tiers_json = j
+            .req("tiers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tiers must be an array"))?;
+        let tiers = tiers_json
+            .iter()
+            .enumerate()
+            .map(|(i, t)| DeviceTier::from_json(i, t))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let sc = Scenario::Custom(ScenarioSpec {
+            name,
+            tiers,
+            deadline_ms,
+        });
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            Scenario::Binary => "binary",
+            Scenario::Custom(s) => &s.name,
+        }
+    }
+
+    pub fn deadline_ms(&self) -> f64 {
+        match self {
+            Scenario::Binary => 0.0,
+            Scenario::Custom(s) => s.deadline_ms,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let spec = match self {
+            Scenario::Binary => return Ok(()),
+            Scenario::Custom(s) => s,
+        };
+        anyhow::ensure!(!spec.tiers.is_empty(), "scenario has no tiers");
+        anyhow::ensure!(spec.deadline_ms >= 0.0, "deadline_ms must be >= 0");
+        let mut sum = 0.0;
+        for t in &spec.tiers {
+            anyhow::ensure!(t.frac >= 0.0, "tier {}: frac must be >= 0", t.name);
+            anyhow::ensure!(
+                t.up_mbps > 0.0 && t.down_mbps > 0.0,
+                "tier {}: bandwidth must be > 0",
+                t.name
+            );
+            anyhow::ensure!(t.compute > 0.0, "tier {}: compute must be > 0", t.name);
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&t.drop_rate),
+                "tier {}: drop_rate must be in [0,1]",
+                t.name
+            );
+            sum += t.frac;
+        }
+        anyhow::ensure!(
+            (sum - 1.0).abs() < 1e-6,
+            "tier fractions sum to {sum}, expected 1"
+        );
+        Ok(())
+    }
+
+    /// Per-tier client counts for a fleet of `k`. `hi_count` drives the
+    /// Binary split (so the legacy `hi_frac` rounding is reproduced
+    /// exactly); custom tiers use largest-remainder allocation of their
+    /// fractions.
+    pub fn tier_counts(&self, k: usize, hi_count: usize) -> Vec<usize> {
+        match self {
+            Scenario::Binary => {
+                let hi = hi_count.min(k);
+                vec![hi, k - hi]
+            }
+            Scenario::Custom(spec) => {
+                let mut counts: Vec<usize> = spec
+                    .tiers
+                    .iter()
+                    .map(|t| (t.frac * k as f64).floor() as usize)
+                    .collect();
+                let mut rem: Vec<(usize, f64)> = spec
+                    .tiers
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| (i, t.frac * k as f64 - counts[i] as f64))
+                    .collect();
+                // largest fractional remainder first; ties → earlier tier
+                rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+                let assigned: usize = counts.iter().sum();
+                for (i, _) in rem.iter().cycle().take(k - assigned) {
+                    counts[*i] += 1;
+                }
+                counts
+            }
+        }
+    }
+
+    fn resolved_tiers(&self) -> Vec<DeviceTier> {
+        match self {
+            Scenario::Binary => binary_tiers(),
+            Scenario::Custom(s) => s.tiers.clone(),
+        }
+    }
+
+    /// Sample the fleet's capability profiles. Membership is drawn from a
+    /// seed-shuffled client order (the exact RNG stream of the legacy
+    /// `assign_resources`: one shuffle of `0..k` from `seed ^ 0x4E50_11`),
+    /// then tiers claim consecutive runs of that order — so the Binary
+    /// scenario reproduces the seed's High/Low assignment bit for bit.
+    pub fn sample_profiles(
+        &self,
+        k: usize,
+        hi_count: usize,
+        seed: u64,
+        cost: &CostModel,
+    ) -> Vec<CapabilityProfile> {
+        let tiers = self.resolved_tiers();
+        let counts = self.tier_counts(k, hi_count);
+        debug_assert_eq!(tiers.len(), counts.len());
+        debug_assert_eq!(counts.iter().sum::<usize>(), k);
+        let mut rng = Xoshiro256::seed_from(seed ^ 0x4E50_11);
+        let mut order: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut order);
+        let mut out: Vec<Option<CapabilityProfile>> = vec![None; k];
+        let mut next = order.iter();
+        for (tier, count) in tiers.iter().zip(&counts) {
+            for _ in 0..*count {
+                let cid = *next.next().expect("counts sum to k");
+                out[cid] = Some(CapabilityProfile::from_tier(tier, cost));
+            }
+        }
+        out.into_iter().map(|p| p.expect("all clients assigned")).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// round simulation
+// ---------------------------------------------------------------------------
+
+/// One client's planned round, in wire order: download, compute, upload.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundPlan {
+    /// payload the client must download before computing
+    pub down_bytes: u64,
+    /// sample-passes of compute
+    pub passes: f64,
+    /// payload uploaded after computing
+    pub up_bytes: u64,
+}
+
+/// What the wire actually saw.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundOutcome {
+    pub survives: bool,
+    /// bytes actually uploaded (full on survival, partial on a drop)
+    pub up_bytes: u64,
+    /// bytes actually downloaded
+    pub down_bytes: u64,
+    /// simulated ms until completion (or the cut)
+    pub sim_ms: f64,
+}
+
+/// Simulate one client's round against its profile, the scenario deadline
+/// (`0.0` = none) and its availability trace. `trace` must be the
+/// per-(round, client) RNG salted with [`SIM_SALT`]; exactly two draws are
+/// consumed per call, so the stream is stable across code paths. Pure —
+/// callers evaluate it before any parallel fan-out.
+pub fn simulate_round(
+    profile: &CapabilityProfile,
+    plan: &RoundPlan,
+    params: u64,
+    deadline_ms: f64,
+    trace: &mut Xoshiro256,
+) -> RoundOutcome {
+    let down_rate = bytes_per_ms(profile.down_mbps);
+    let up_rate = bytes_per_ms(profile.up_mbps);
+    let t_down = plan.down_bytes as f64 / down_rate;
+    let t_comp = plan.passes * (params as f64 / 1e6) * MS_PER_MPARAM_PASS / profile.compute;
+    let t_up = plan.up_bytes as f64 / up_rate;
+    let t_total = t_down + t_comp + t_up;
+
+    // availability trace: always two draws, whether or not they matter
+    let u_fail = trace.next_f64();
+    let u_when = trace.next_f64();
+    let mut cut = f64::INFINITY;
+    if u_fail < profile.drop_rate {
+        cut = u_when * t_total;
+    }
+    if deadline_ms > 0.0 {
+        cut = cut.min(deadline_ms);
+    }
+
+    if t_total <= cut {
+        return RoundOutcome {
+            survives: true,
+            up_bytes: plan.up_bytes,
+            down_bytes: plan.down_bytes,
+            sim_ms: t_total,
+        };
+    }
+    // dropped mid-round: charge only what was on the wire before the cut
+    let down_bytes = plan.down_bytes.min((cut * down_rate) as u64);
+    let up_bytes = if cut > t_down + t_comp {
+        plan.up_bytes.min(((cut - t_down - t_comp) * up_rate) as u64)
+    } else {
+        0
+    };
+    RoundOutcome {
+        survives: false,
+        up_bytes,
+        down_bytes,
+        sim_ms: cut,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe_cost() -> CostModel {
+        CostModel::generic(7690, 32)
+    }
+
+    fn profile(up: f64, down: f64, compute: f64, drop_rate: f64) -> CapabilityProfile {
+        CapabilityProfile {
+            tier: "t".into(),
+            mem_bytes: u64::MAX,
+            up_mbps: up,
+            down_mbps: down,
+            compute,
+            drop_rate,
+        }
+    }
+
+    #[test]
+    fn presets_validate() {
+        for name in PRESETS {
+            let s = Scenario::preset(name).unwrap();
+            s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(Scenario::load(name).unwrap(), s);
+        }
+        assert!(Scenario::preset("nope").is_none());
+        assert!(Scenario::load("no-such-preset-or-file").is_err());
+    }
+
+    #[test]
+    fn binary_profiles_match_legacy_resource_split() {
+        let cost = probe_cost();
+        for (k, hi, seed) in [(20, 6, 0u64), (20, 6, 1), (50, 5, 7), (8, 1, 3)] {
+            let profiles = Scenario::Binary.sample_profiles(k, hi, seed, &cost);
+            let classes: Vec<bool> = profiles.iter().map(|p| p.fo_capable(&cost)).collect();
+            let legacy = crate::fed::server::assign_resources(k, hi, seed);
+            for (c, l) in classes.iter().zip(&legacy) {
+                assert_eq!(*c, *l == crate::fed::client::Resource::High, "k={k} hi={hi} seed={seed}");
+            }
+            assert_eq!(classes.iter().filter(|&&c| c).count(), hi);
+            // low tier is ZO-capable but never FO-capable
+            for p in &profiles {
+                assert!(p.zo_capable(&cost));
+            }
+        }
+    }
+
+    #[test]
+    fn tier_counts_conserve_clients() {
+        let spec = Scenario::preset("edge-spectrum").unwrap();
+        for k in [1usize, 7, 8, 20, 50, 101] {
+            let counts = spec.tier_counts(k, 0);
+            assert_eq!(counts.iter().sum::<usize>(), k, "k={k}");
+        }
+        // binary honors the exact hi_count
+        assert_eq!(Scenario::Binary.tier_counts(10, 3), vec![3, 7]);
+        assert_eq!(Scenario::Binary.tier_counts(10, 12), vec![10, 0]);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let cost = probe_cost();
+        let s = Scenario::preset("edge-spectrum").unwrap();
+        let a = s.sample_profiles(30, 0, 5, &cost);
+        let b = s.sample_profiles(30, 0, 5, &cost);
+        let c = s.sample_profiles(30, 0, 6, &cost);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn survivor_is_charged_in_full() {
+        let p = profile(10.0, 10.0, 1.0, 0.0);
+        let plan = RoundPlan {
+            down_bytes: 1000,
+            passes: 10.0,
+            up_bytes: 500,
+        };
+        let mut trace = Xoshiro256::seed_from(0);
+        let o = simulate_round(&p, &plan, 1_000_000, 0.0, &mut trace);
+        assert!(o.survives);
+        assert_eq!(o.up_bytes, plan.up_bytes);
+        assert_eq!(o.down_bytes, plan.down_bytes);
+        // t = 1000/1250 + 10*0.1 + 500/1250 = 0.8 + 1.0 + 0.4
+        assert!((o.sim_ms - 2.2).abs() < 1e-9, "{}", o.sim_ms);
+    }
+
+    #[test]
+    fn deadline_cuts_during_download_charges_no_uplink() {
+        let p = profile(10.0, 1.0, 1.0, 0.0);
+        let plan = RoundPlan {
+            down_bytes: 10_000, // 80 ms at 1 mbps
+            passes: 100.0,
+            up_bytes: 400,
+        };
+        let mut trace = Xoshiro256::seed_from(0);
+        let o = simulate_round(&p, &plan, 1_000_000, 2.0, &mut trace);
+        assert!(!o.survives);
+        assert_eq!(o.up_bytes, 0);
+        assert_eq!(o.down_bytes, (2.0 * bytes_per_ms(1.0)) as u64);
+        assert!(o.down_bytes < plan.down_bytes);
+        assert_eq!(o.sim_ms, 2.0);
+    }
+
+    #[test]
+    fn deadline_cut_during_upload_charges_partial_uplink() {
+        let p = profile(1.0, 100.0, 100.0, 0.0);
+        let plan = RoundPlan {
+            down_bytes: 125, // 0.01 ms
+            passes: 0.0,
+            up_bytes: 12_500, // 100 ms at 1 mbps
+        };
+        let mut trace = Xoshiro256::seed_from(0);
+        let o = simulate_round(&p, &plan, 1_000_000, 50.0, &mut trace);
+        assert!(!o.survives);
+        assert_eq!(o.down_bytes, plan.down_bytes);
+        assert!(o.up_bytes > 0 && o.up_bytes < plan.up_bytes, "{}", o.up_bytes);
+    }
+
+    #[test]
+    fn drop_rate_one_always_fails_and_is_deterministic() {
+        let p = profile(10.0, 10.0, 1.0, 1.0);
+        let plan = RoundPlan {
+            down_bytes: 1000,
+            passes: 10.0,
+            up_bytes: 1000,
+        };
+        let mut t1 = Xoshiro256::seed_from(42);
+        let mut t2 = Xoshiro256::seed_from(42);
+        let a = simulate_round(&p, &plan, 1_000_000, 0.0, &mut t1);
+        let b = simulate_round(&p, &plan, 1_000_000, 0.0, &mut t2);
+        assert!(!a.survives);
+        assert_eq!(a, b);
+        assert!(a.sim_ms >= 0.0);
+    }
+
+    #[test]
+    fn empty_plan_survives_instantly() {
+        let p = profile(1.0, 1.0, 1.0, 0.0);
+        let plan = RoundPlan {
+            down_bytes: 0,
+            passes: 0.0,
+            up_bytes: 0,
+        };
+        let mut trace = Xoshiro256::seed_from(0);
+        let o = simulate_round(&p, &plan, 1_000_000, 0.001, &mut trace);
+        assert!(o.survives);
+        assert_eq!((o.up_bytes, o.down_bytes), (0, 0));
+    }
+
+    #[test]
+    fn json_spec_round_trips() {
+        let text = r#"{
+          "name": "two-tier",
+          "deadline_ms": 5.5,
+          "tiers": [
+            {"name": "fast", "frac": 0.25, "mem": "backprop",
+             "up_mbps": 40, "down_mbps": 80, "compute": 4.0},
+            {"name": "slow", "frac": 0.75, "mem_bytes": 123456,
+             "up_mbps": 1, "down_mbps": 2, "compute": 0.5, "drop_rate": 0.2}
+          ]
+        }"#;
+        let sc = Scenario::load(text).unwrap();
+        assert_eq!(sc.name(), "two-tier");
+        assert_eq!(sc.deadline_ms(), 5.5);
+        let Scenario::Custom(spec) = &sc else { panic!() };
+        assert_eq!(spec.tiers.len(), 2);
+        assert_eq!(spec.tiers[0].mem, MemBudget::FitsBackprop);
+        assert_eq!(spec.tiers[1].mem, MemBudget::Bytes(123456));
+        assert_eq!(spec.tiers[1].drop_rate, 0.2);
+        // re-serialize through the Json tree (the apply_json path) and reload
+        let j = Json::parse(text).unwrap();
+        let sc2 = Scenario::load(&j.to_string()).unwrap();
+        assert_eq!(sc, sc2);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        // fracs must sum to 1
+        assert!(Scenario::load(
+            r#"{"tiers": [{"frac": 0.5, "mem": "zo"}]}"#
+        )
+        .is_err());
+        // bandwidth must be positive
+        assert!(Scenario::load(
+            r#"{"tiers": [{"frac": 1.0, "mem": "zo", "up_mbps": 0}]}"#
+        )
+        .is_err());
+        // mem is required
+        assert!(Scenario::load(r#"{"tiers": [{"frac": 1.0}]}"#).is_err());
+        // tiers are required
+        assert!(Scenario::load(r#"{"name": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn mem_budget_resolution_orders_thresholds() {
+        let cost = probe_cost();
+        let hi = MemBudget::FitsBackprop.resolve(&cost);
+        let lo = MemBudget::FitsZoOnly.resolve(&cost);
+        assert!(hi > lo, "{hi} vs {lo}");
+        assert!(hi >= cost.fo_threshold_bytes());
+        assert!(lo >= cost.zo_mem_bytes());
+        assert!(lo < cost.fo_threshold_bytes());
+        assert_eq!(MemBudget::Bytes(7).resolve(&cost), 7);
+    }
+}

@@ -42,11 +42,26 @@ impl SeedIssuer {
         Self { root }
     }
 
-    pub fn seed(&self, round: usize, client: usize, s: usize) -> u64 {
+    /// Pack an in-bounds (round, client, s) triple into its unique 64-bit
+    /// index (24/24/16-bit fields).
+    pub fn pack(round: usize, client: usize, s: usize) -> u64 {
         debug_assert!(round < MAX_ROUNDS, "round {round} overflows the 24-bit field");
         debug_assert!(client < MAX_CLIENTS, "client {client} overflows the 24-bit field");
         debug_assert!(s < MAX_SEEDS_PER_ROUND, "seed index {s} overflows the 16-bit field");
-        let packed = (round as u64) << 40 | (client as u64) << 16 | s as u64;
+        (round as u64) << 40 | (client as u64) << 16 | s as u64
+    }
+
+    /// Inverse of [`Self::pack`] for in-bounds triples.
+    pub fn unpack(packed: u64) -> (usize, usize, usize) {
+        (
+            (packed >> 40) as usize,
+            ((packed >> 16) & 0xFF_FFFF) as usize,
+            (packed & 0xFFFF) as usize,
+        )
+    }
+
+    pub fn seed(&self, round: usize, client: usize, s: usize) -> u64 {
+        let packed = Self::pack(round, client, s);
         let mut sm = SplitMix64(self.root ^ packed.wrapping_mul(0xA24B_AED4_963E_E407));
         sm.next_u64()
     }
@@ -245,6 +260,54 @@ pub fn zo_round_ledger(
     let up = (total_seeds * 4) as u64 + dim_bytes * fo_n as u64;
     let down = (total_seeds * 8 + zo_n * total_seeds * (8 + 4)) as u64
         + dim_bytes * fo_n as u64;
+    (up, down)
+}
+
+/// One ZO participant's measured wire charges for a round under the `sim`
+/// capability engine: what its seed-issue downlink and ΔL uplink actually
+/// transmitted (full for survivors, the pre-cut prefix for dropouts), and
+/// whether it survived to the fold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ZoClientCharge {
+    /// seeds the server derived for this client (S · its step count)
+    pub issued_seeds: usize,
+    /// ΔL payload bytes actually uploaded (≤ issued_seeds · 4)
+    pub up_bytes: u64,
+    /// seed-issue bytes actually downloaded (≤ issued_seeds · 8)
+    pub seed_down_bytes: u64,
+    pub survives: bool,
+}
+
+/// Byte-accurate round totals under capability profiles and drop
+/// patterns, generalizing [`zo_round_ledger`]:
+///
+/// * per-client seed-issue downlink and ΔL uplink are charged as
+///   *measured* (partial transmissions included);
+/// * the end-of-round broadcast carries only the **surviving** (seed, ΔL)
+///   pairs (12 B each — the pairs actually folded into the update) and
+///   reaches only the surviving ZO participants;
+/// * FO traffic (`fo_up`/`fo_down`, mixed §A.4 rounds) is added as-is.
+///
+/// With every client surviving at full uniform charges this reduces
+/// bit-exactly to `zo_round_ledger`, and the FO/ZO decomposition stays
+/// additive: `ledger(zo, fo) = ledger(zo, 0) + ledger(0, fo)`
+/// componentwise — both properties are enforced by
+/// `prop_ledger_outcomes_additive_under_drops`.
+pub fn zo_round_ledger_outcomes(
+    zo: &[ZoClientCharge],
+    fo_up: u64,
+    fo_down: u64,
+) -> (u64, u64) {
+    let surviving_seeds: usize = zo
+        .iter()
+        .filter(|c| c.survives)
+        .map(|c| c.issued_seeds)
+        .sum();
+    let survivors = zo.iter().filter(|c| c.survives).count();
+    let up = zo.iter().map(|c| c.up_bytes).sum::<u64>() + fo_up;
+    let down = zo.iter().map(|c| c.seed_down_bytes).sum::<u64>()
+        + (survivors * surviving_seeds * (8 + 4)) as u64
+        + fo_down;
     (up, down)
 }
 
@@ -536,6 +599,150 @@ mod tests {
     #[should_panic(expected = "overflows the 24-bit field")]
     fn seed_issuer_rejects_client_overflow() {
         SeedIssuer::new(0).seed(0, MAX_CLIENTS, 0);
+    }
+
+    #[test]
+    fn prop_seed_issuer_pack_unpack_round_trips() {
+        // satellite: 24/24/16-bit pack/unpack round-trips for random
+        // in-bounds triples (and the issuer derives from the same index)
+        crate::util::prop::run_prop("seed_pack_unpack", 300, |g| {
+            let mut rng = g.rng();
+            let r = rng.below(MAX_ROUNDS);
+            let c = rng.below(MAX_CLIENTS);
+            let s = rng.below(MAX_SEEDS_PER_ROUND);
+            let (r2, c2, s2) = SeedIssuer::unpack(SeedIssuer::pack(r, c, s));
+            if (r, c, s) != (r2, c2, s2) {
+                return Err(format!("({r},{c},{s}) -> ({r2},{c2},{s2})"));
+            }
+            // the packed index is what the issuer hashes: same triple,
+            // same seed; a different in-bounds triple, a different index
+            let iss = SeedIssuer::new(rng.next_u64());
+            if iss.seed(r, c, s) != iss.seed(r, c, s) {
+                return Err("issuer not deterministic".into());
+            }
+            let s_alt = (s + 1) % MAX_SEEDS_PER_ROUND;
+            if SeedIssuer::pack(r, c, s) == SeedIssuer::pack(r, c, s_alt) {
+                return Err(format!("pack collision at ({r},{c},{s})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ledger_outcomes_additive_under_drops() {
+        // satellite: zo_round_ledger additivity holds under randomly
+        // generated capability profiles and drop patterns. Charges are
+        // produced by the real simulator, not hand-rolled numbers.
+        use crate::sim::{simulate_round, CapabilityProfile, RoundPlan};
+        crate::util::prop::run_prop("zo_ledger_additivity", 120, |g| {
+            let mut rng = g.rng();
+            let n_clients = 1 + rng.below(g.size.max(1).min(24));
+            let deadline = if rng.below(2) == 0 {
+                0.0
+            } else {
+                0.1 + rng.next_f64() * 5.0
+            };
+            let mut charges = Vec::with_capacity(n_clients);
+            for _ in 0..n_clients {
+                let profile = CapabilityProfile {
+                    tier: "rand".into(),
+                    mem_bytes: u64::MAX,
+                    up_mbps: 0.01 + rng.next_f64() * 20.0,
+                    down_mbps: 0.01 + rng.next_f64() * 20.0,
+                    compute: 0.05 + rng.next_f64() * 4.0,
+                    drop_rate: rng.next_f64(),
+                };
+                let issued_seeds = 1 + rng.below(48);
+                let plan = RoundPlan {
+                    down_bytes: (issued_seeds * 8) as u64,
+                    passes: rng.below(2000) as f64 * 2.0,
+                    up_bytes: (issued_seeds * 4) as u64,
+                };
+                let mut trace = rng.clone();
+                rng.next_u64(); // decorrelate successive traces
+                let o = simulate_round(&profile, &plan, 100_000, deadline, &mut trace);
+                if o.up_bytes > plan.up_bytes || o.down_bytes > plan.down_bytes {
+                    return Err("charged more than planned".into());
+                }
+                if o.survives && (o.up_bytes, o.down_bytes) != (plan.up_bytes, plan.down_bytes)
+                {
+                    return Err("survivor must be charged in full".into());
+                }
+                charges.push(ZoClientCharge {
+                    issued_seeds,
+                    up_bytes: o.up_bytes,
+                    seed_down_bytes: o.down_bytes,
+                    survives: o.survives,
+                });
+            }
+            let fo_up = rng.below(1 << 20) as u64;
+            let fo_down = rng.below(1 << 20) as u64;
+            // FO/ZO decomposition is additive
+            let mixed = zo_round_ledger_outcomes(&charges, fo_up, fo_down);
+            let zo_only = zo_round_ledger_outcomes(&charges, 0, 0);
+            let fo_only = zo_round_ledger_outcomes(&[], fo_up, fo_down);
+            if mixed != (zo_only.0 + fo_only.0, zo_only.1 + fo_only.1) {
+                return Err(format!("not additive: {mixed:?} vs {zo_only:?}+{fo_only:?}"));
+            }
+            // with every client surviving at full uniform charges, the
+            // per-client model reduces bit-exactly to the aggregate one
+            let all: Vec<ZoClientCharge> = charges
+                .iter()
+                .map(|c| ZoClientCharge {
+                    issued_seeds: c.issued_seeds,
+                    up_bytes: (c.issued_seeds * 4) as u64,
+                    seed_down_bytes: (c.issued_seeds * 8) as u64,
+                    survives: true,
+                })
+                .collect();
+            let total: usize = all.iter().map(|c| c.issued_seeds).sum();
+            if zo_round_ledger_outcomes(&all, 0, 0) != zo_round_ledger(total, all.len(), 0, 0)
+            {
+                return Err("no-drop case must reduce to zo_round_ledger".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ledger_outcomes_drop_edge_cases() {
+        // all-drop round: zero broadcast, only the partial seed downlink
+        let charges = [
+            ZoClientCharge {
+                issued_seeds: 3,
+                up_bytes: 0,
+                seed_down_bytes: 7,
+                survives: false,
+            },
+            ZoClientCharge {
+                issued_seeds: 6,
+                up_bytes: 0,
+                seed_down_bytes: 0,
+                survives: false,
+            },
+        ];
+        assert_eq!(zo_round_ledger_outcomes(&charges, 0, 0), (0, 7));
+        // one survivor: broadcast carries only the surviving seeds, and
+        // only the survivor receives it
+        let charges = [
+            ZoClientCharge {
+                issued_seeds: 3,
+                up_bytes: 12,
+                seed_down_bytes: 24,
+                survives: true,
+            },
+            ZoClientCharge {
+                issued_seeds: 6,
+                up_bytes: 4,
+                seed_down_bytes: 48,
+                survives: false,
+            },
+        ];
+        let (up, down) = zo_round_ledger_outcomes(&charges, 0, 0);
+        assert_eq!(up, 16);
+        assert_eq!(down, 24 + 48 + 3 * 12);
+        // empty round
+        assert_eq!(zo_round_ledger_outcomes(&[], 0, 0), (0, 0));
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Integration tests for the device-capability scenario engine: dropout /
+//! straggler fleets end-to-end through the public API, the all-drop edge,
+//! and compatibility of profile sampling with the legacy binary split.
+
+use std::sync::Arc;
+
+use zowarmup::config::{FedConfig, Scale};
+use zowarmup::data::dirichlet::dirichlet_split;
+use zowarmup::data::loader::Source;
+use zowarmup::data::synthetic::{train_test, SynthKind};
+use zowarmup::fed::server::{assign_resources, shards_from_partition, Federation};
+use zowarmup::model::backend::{LinearBackend, ModelBackend};
+use zowarmup::model::params::ParamVec;
+use zowarmup::sim::Scenario;
+
+fn probe() -> LinearBackend {
+    LinearBackend::pooled(32 * 32 * 3, 2, 10, 32)
+}
+
+fn setup(cfg: &FedConfig) -> (Vec<zowarmup::data::loader::ClientData>, Source) {
+    let (train, test) = train_test(SynthKind::Synth10, 400, 120, cfg.seed);
+    let part = dirichlet_split(&train, cfg.clients, 0.5, cfg.seed);
+    let src = Source::Image(Arc::new(train));
+    (
+        shards_from_partition(&src, &part),
+        Source::Image(Arc::new(test)),
+    )
+}
+
+#[test]
+fn all_drop_zo_round_logs_zero_signal_charges_no_uplink_keeps_params() {
+    // satellite: a ZO round where every sampled client misses the
+    // deadline must log the finite 0.0 train signal, charge zero uplink,
+    // and leave params untouched. The single tier is so slow that even
+    // the seed-issue download blows the deadline.
+    let mut cfg = Scale::Smoke.fed();
+    cfg.pivot = 0; // ZO from round 0
+    cfg.rounds_total = 1;
+    cfg.scenario = Scenario::load(
+        r#"{"name": "all-drop", "deadline_ms": 0.5,
+            "tiers": [{"frac": 1.0, "mem": "zo",
+                       "up_mbps": 0.001, "down_mbps": 0.001, "compute": 0.001}]}"#,
+    )
+    .unwrap();
+    let (shards, test) = setup(&cfg);
+    let be = probe();
+    let init = ParamVec::zeros(be.dim());
+    let mut fed = Federation::new(cfg.clone(), &be, shards, test, init.clone()).unwrap();
+    fed.run().unwrap();
+
+    let r = &fed.log.rounds[0];
+    assert_eq!(r.train_loss, 0.0, "all-drop round must log the finite 0.0 signal");
+    assert!(r.train_loss.is_finite());
+    assert_eq!(r.dropped, cfg.sample_zo, "every sampled client dropped");
+    assert_eq!(r.bytes_up, 0, "nothing survived to upload");
+    assert!(
+        r.bytes_down < (cfg.sample_zo * cfg.zo.s_seeds * 8) as u64,
+        "only partial seed-issue downloads may be charged"
+    );
+    assert_eq!(fed.global, init, "no surviving contribution may move params");
+}
+
+#[test]
+fn straggler_fleet_end_to_end_is_bit_identical_across_workers() {
+    // acceptance: `--scenario stragglers` runs a dropout/straggler fleet
+    // end-to-end with bit-identical results across worker counts and a
+    // byte-accurate ledger (partial transmissions included)
+    let run = |threads: usize| {
+        let mut cfg = Scale::Smoke.fed();
+        cfg.lr_client_warm = 0.06;
+        cfg.lr_client_zo = 1.0;
+        cfg.lr_server_zo = 0.01;
+        cfg.zo.eps = 1e-3;
+        cfg.threads = threads;
+        cfg.scenario = Scenario::preset("stragglers").unwrap();
+        let (shards, test) = setup(&cfg);
+        let be = probe();
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+        fed.run().unwrap();
+        (fed.global.clone(), fed.log.clone(), fed.ledger.clone())
+    };
+    let (g1, log1, led1) = run(1);
+    let (g2, _, led2) = run(2);
+    let (g4, log4, led4) = run(4);
+    assert_eq!(g1, g2);
+    assert_eq!(g1, g4);
+    assert_eq!((led1.up_total, led1.down_total), (led2.up_total, led2.down_total));
+    assert_eq!((led1.up_total, led1.down_total), (led4.up_total, led4.down_total));
+    for (a, b) in log1.rounds.iter().zip(&log4.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!((a.bytes_up, a.bytes_down, a.dropped), (b.bytes_up, b.bytes_down, b.dropped));
+    }
+    assert!(
+        log1.total_dropped() > 0,
+        "the straggler fleet should drop clients mid-round"
+    );
+    assert!(g1.is_finite());
+}
+
+#[test]
+fn scenario_loads_from_json_file_and_drives_a_run() {
+    // the `train --scenario file.json` path: write a spec, load by path,
+    // run a short federation under it
+    let path = std::env::temp_dir().join("zow_scenario_test.json");
+    std::fs::write(
+        &path,
+        r#"{"name": "file-fleet", "deadline_ms": 0,
+            "tiers": [
+              {"name": "fast", "frac": 0.5, "mem": "backprop",
+               "up_mbps": 100, "down_mbps": 100, "compute": 4.0},
+              {"name": "slow", "frac": 0.5, "mem": "zo",
+               "up_mbps": 4, "down_mbps": 8, "drop_rate": 0.3}
+            ]}"#,
+    )
+    .unwrap();
+    let mut cfg = Scale::Smoke.fed();
+    cfg.scenario = Scenario::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.scenario.name(), "file-fleet");
+    cfg.lr_client_warm = 0.06;
+    cfg.lr_client_zo = 1.0;
+    cfg.lr_server_zo = 0.01;
+    cfg.zo.eps = 1e-3;
+    let (shards, test) = setup(&cfg);
+    let be = probe();
+    let mut fed =
+        Federation::new(cfg, &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+    fed.run().unwrap();
+    assert!(fed.log.final_accuracy().is_finite());
+    assert!(fed.global.is_finite());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn default_scenario_reproduces_legacy_assignment_and_results() {
+    // acceptance: assign_resources-compatible configs reproduce the
+    // seed's exact High/Low assignment through profile sampling
+    for seed in [0u64, 1, 42] {
+        let mut cfg = Scale::Smoke.fed();
+        cfg.seed = seed;
+        let (shards, test) = setup(&cfg);
+        let be = probe();
+        let fed =
+            Federation::new(cfg.clone(), &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+        let legacy = assign_resources(cfg.clients, cfg.hi_count(), seed);
+        let derived: Vec<_> = fed.clients.iter().map(|c| c.resource).collect();
+        assert_eq!(derived, legacy, "seed {seed}");
+    }
+    // and a default-scenario run never drops anyone
+    let mut cfg = Scale::Smoke.fed();
+    cfg.lr_client_warm = 0.06;
+    cfg.lr_client_zo = 1.0;
+    cfg.lr_server_zo = 0.01;
+    cfg.zo.eps = 1e-3;
+    let (shards, test) = setup(&cfg);
+    let be = probe();
+    let mut fed =
+        Federation::new(cfg, &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+    fed.run().unwrap();
+    assert_eq!(fed.log.total_dropped(), 0, "binary scenario has no drop paths");
+}
