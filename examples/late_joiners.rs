@@ -1,0 +1,82 @@
+//! Scenario: late joiners and flaky rejoiners under seed-history
+//! checkpointing.
+//!
+//! The seed protocol's negligible downlink assumes every participant
+//! receives every round's (seed, ΔL) broadcast. A client that joins late
+//! or sits rounds out is *stale*: it must replay the seed history it
+//! missed before it can evaluate seeds against the current model. The
+//! `ckpt` subsystem bounds that catch-up — the server snapshots the
+//! parameters every `--ckpt-every` ZO rounds, compacts the seed log to
+//! the tail, and charges each stale client the cheaper of
+//! `snapshot + tail` vs pure tail replay (DESIGN.md §7).
+//!
+//! This example runs ZOWarmUp on identical data under the `churn` fleet
+//! (25% always-on anchors, 35% clients absent a third of their rounds,
+//! 40% joining only at round 8) while sweeping the checkpoint cadence,
+//! and reports accuracy, client-rounds missed, and where the downlink
+//! goes. The `off` row is the seed repo's implicit free-rejoin
+//! accounting.
+//!
+//!     cargo run --release --example late_joiners
+//!
+//! Expected shape: accuracy is cadence-independent (reconstruction is
+//! bit-exact; only accounting changes), total downlink grows with the
+//! honesty of the catch-up charge, and frequent snapshots trade longer
+//! tail replays for snapshot-sized downloads.
+
+use zowarmup::config::Scale;
+use zowarmup::data::synthetic::SynthKind;
+use zowarmup::exp::common::{image_setup, linear_lrs};
+use zowarmup::fed::server::Federation;
+use zowarmup::metrics::MdTable;
+use zowarmup::model::backend::ModelBackend;
+use zowarmup::model::params::ParamVec;
+use zowarmup::sim::Scenario;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::Default;
+    let data_cfg = scale.data();
+
+    let mut t = MdTable::new(&[
+        "ckpt-every",
+        "final acc %",
+        "missed (client-rounds)",
+        "catch-up MB",
+        "down-link MB",
+        "snapshots",
+        "max tail (rounds)",
+    ]);
+    for every in [0usize, 1, 5, 20] {
+        let mut cfg = scale.fed();
+        linear_lrs(&mut cfg);
+        cfg.scenario = Scenario::preset("churn").expect("bundled preset");
+        cfg.ckpt_every = every;
+        let s = image_setup(SynthKind::Synth10, &data_cfg, &cfg);
+        let init = ParamVec::zeros(s.backend.dim());
+        let mut fed = Federation::new(cfg, &s.backend, s.shards, s.test, init)?;
+        let t0 = std::time::Instant::now();
+        fed.run()?;
+        t.row(vec![
+            if every == 0 { "off".into() } else { every.to_string() },
+            format!("{:.1}", fed.log.final_accuracy() * 100.0),
+            fed.log.total_dropped().to_string(),
+            format!("{:.4}", fed.ledger.catch_up_down_total as f64 / 1e6),
+            format!("{:.4}", fed.ledger.down_total as f64 / 1e6),
+            fed.ckpt.snapshots_taken.to_string(),
+            fed.ckpt.max_tail_rounds.to_string(),
+        ]);
+        eprintln!(
+            "[ckpt-every {every}] done in {:.1}s ({} client-rounds missed)",
+            t0.elapsed().as_secs_f64(),
+            fed.log.total_dropped()
+        );
+    }
+    println!("{}", t.render());
+    println!(
+        "Churn fields are per-tier scenario JSON (`join_round`, `absent_rate`;\n\
+         schema: README.md / rust/src/exp/README.md). Try\n\
+         `zowarmup train --scenario churn --ckpt-every 5` or\n\
+         `zowarmup exp ckpt --scale smoke` for the full cadence ablation."
+    );
+    Ok(())
+}

@@ -3,6 +3,7 @@
 //! (seed, ΔL) pair per round on every participant, so its throughput caps
 //! feasible model size (§Perf L3).
 
+use zowarmup::ckpt::CheckpointStore;
 use zowarmup::config::ZoConfig;
 use zowarmup::model::params::ParamVec;
 use zowarmup::util::bench::{black_box, Bench};
@@ -114,6 +115,44 @@ fn main() {
                 black_box(&w[0]);
             },
         );
+    }
+
+    // checkpoint catch-up: a late joiner reconstructing the current model
+    // from snapshot + tail replay at ResNet18 scale. Each tail round
+    // carries Q·S = 30 (seed, coeff) items; the replay is the same
+    // sharded fused pass the live server uses, so throughput here is the
+    // rejoin latency bound (item-applications/s = d · items · rounds).
+    {
+        let d = 11_173_962;
+        let init = ParamVec(vec![0.1f32; d]);
+        for &rounds in &[4usize, 16] {
+            let mut store = CheckpointStore::new(rounds + 1, &init); // no compaction
+            let mut live = init.clone();
+            for r in 0..rounds {
+                let items: Vec<(u64, f32)> =
+                    (0..30).map(|i| ((r * 30 + i) as u64, 1e-4)).collect();
+                zowarmup::model::params::perturb_axpy_many_sharded(
+                    &mut live.0,
+                    &items,
+                    0.75,
+                    Distribution::Rademacher,
+                    1,
+                );
+                store.record_seed_round(r, items, &live);
+            }
+            for &workers in &[1usize, 4] {
+                b.iter_with_items(
+                    &format!("ckpt_tail_replay d=11M rounds={rounds} w={workers}"),
+                    (d * 30 * rounds) as f64,
+                    || {
+                        let p = store
+                            .reconstruct(rounds, 0.75, Distribution::Rademacher, workers)
+                            .unwrap();
+                        black_box(&p.0[0]);
+                    },
+                );
+            }
+        }
     }
 
     // xoshiro baseline for context

@@ -184,6 +184,10 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
         let mut dropped = 0usize;
         for &cid in &picked {
             let client = &self.clients[cid];
+            if !sim::is_available(&client.profile, self.cfg.seed, round, cid) {
+                dropped += 1;
+                continue;
+            }
             let plan = sim::RoundPlan {
                 down_bytes: d4,
                 passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
@@ -222,6 +226,7 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             return Ok(RoundSummary {
                 train_signal: 0.0,
                 dropped,
+                catch_up_down: 0,
             });
         }
         let avg = weighted_average(&updates);
@@ -232,6 +237,7 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
         Ok(RoundSummary {
             train_signal: finite_signal(train.mean_loss()),
             dropped,
+            catch_up_down: 0,
         })
     }
 
@@ -248,7 +254,9 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
         let mut dropped = 0usize;
         for &cid in &picked {
             let client = &self.clients[cid];
-            if !client.profile.zo_capable(&self.cost) {
+            if !sim::is_available(&client.profile, self.cfg.seed, round, cid)
+                || !client.profile.zo_capable(&self.cost)
+            {
                 dropped += 1;
                 continue;
             }
@@ -324,6 +332,7 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 0.0
             }),
             dropped,
+            catch_up_down: 0,
         })
     }
 
@@ -354,6 +363,7 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 bytes_up: up,
                 bytes_down: down,
                 dropped: summary.dropped,
+                catch_up_down: summary.catch_up_down,
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
         }

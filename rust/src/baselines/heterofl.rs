@@ -213,6 +213,10 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
         let mut dropped = 0usize;
         for &cid in &picked {
             let client = &self.clients[cid];
+            if !sim::is_available(&client.profile, self.cfg.seed, round, cid) {
+                dropped += 1;
+                continue;
+            }
             let (dim, params) = match client.resource {
                 Resource::High => (self.full.dim(), self.cost.params),
                 Resource::Low => (self.half.dim(), self.half.cost_model().params),
@@ -284,6 +288,7 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
         Ok(crate::fed::server::RoundSummary {
             train_signal: crate::fed::server::finite_signal(train.mean_loss()),
             dropped,
+            catch_up_down: 0,
         })
     }
 
@@ -309,6 +314,7 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
                 bytes_up: up,
                 bytes_down: down,
                 dropped: summary.dropped,
+                catch_up_down: summary.catch_up_down,
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
         }

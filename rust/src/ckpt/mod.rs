@@ -1,0 +1,497 @@
+//! Server-side checkpointing and seed-log compaction — bounded catch-up
+//! for late joiners and rejoining dropouts (DESIGN.md §7).
+//!
+//! The seed protocol's negligible downlink has a flip side inherited from
+//! FedKSeed: a client that misses rounds (dropped mid-round, sampled out,
+//! flaky availability, or joined late) can only reconstruct the current
+//! global model by replaying the *entire* seed history since its last
+//! sync. The [`CheckpointStore`] bounds that cost: the server
+//! periodically materializes a parameter **snapshot** (every
+//! `FedConfig::ckpt_every` seed-replayable rounds, CLI `--ckpt-every`)
+//! and truncates the live seed log to the **tail** since the snapshot. A
+//! stale client then reconstructs bit-identical state from whichever is
+//! cheaper on the wire:
+//!
+//! * **tail replay** — download the (seed, ΔL) pairs of the rounds it
+//!   missed ([`BYTES_PER_REPLAY_ITEM`] each) and replay them locally, or
+//! * **snapshot + tail** — download the full snapshot (`4·d` bytes, the
+//!   eq. 4/5 weight-transfer cost) plus the post-snapshot tail.
+//!
+//! [`CheckpointStore::catch_up_bytes`] charges `min` of the available
+//! paths; [`CheckpointStore::reconstruct`] performs the replay through the
+//! same sharded fused pass the live server uses
+//! ([`crate::model::params::perturb_axpy_many_sharded`]), so the rebuilt
+//! parameters are **bit-identical to never having left** — for every
+//! worker count (enforced by
+//! `tests/integration_scenarios.rs::rejoin_after_drop_reconstructs_bit_identical_to_continuous`).
+//!
+//! ## Round taxonomy
+//!
+//! A round is **seed-replayable** when its entire effect on the global
+//! weights is the fused (seed, coeff) pass — every pure ZO round,
+//! including empty (all-drop) rounds whose item list is empty. A round is
+//! **opaque** when the update involves full weight vectors (warm-phase
+//! FedAvg steps, mixed-§A.4 FO folds): no seed list can replay it, so the
+//! store snapshots right after it and restarts the tail. During the warm
+//! phase this is free in protocol terms — warm participants download full
+//! weights every round anyway.
+//!
+//! With `ckpt_every == 0` (the default) the subsystem is disabled and
+//! byte-inert: no snapshots, no log, `catch_up_bytes` is 0 — the seed
+//! repo's implicit free-rejoin accounting, preserved so default configs
+//! reproduce the existing golden trace unchanged.
+
+use crate::model::params::{perturb_axpy_many_sharded, ParamVec};
+use crate::util::rng::Distribution;
+
+/// Wire bytes per replayed (seed, ΔL) pair — 8-byte seed + 4-byte f32,
+/// matching the round-end broadcast accounting in
+/// [`crate::zo::zo_round_ledger_outcomes`].
+pub const BYTES_PER_REPLAY_ITEM: u64 = 12;
+
+/// One seed-replayable round's log entry: the order-canonical fused
+/// (seed, coeff) items exactly as the server applied them
+/// ([`crate::zo::zo_update_items`]).
+#[derive(Debug, Clone)]
+pub struct SeedRoundLog {
+    /// the federated round this entry replays
+    pub round: usize,
+    /// the fused items, in server application order
+    pub items: Vec<(u64, f32)>,
+}
+
+/// A materialized parameter snapshot: `params` is the global state
+/// *entering* round `at` (i.e. after rounds `0..at`).
+#[derive(Debug, Clone)]
+struct Snapshot {
+    at: usize,
+    params: ParamVec,
+}
+
+/// How a stale client catches up, and what it costs on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CatchUpPlan {
+    /// true: download the snapshot then replay the post-snapshot tail;
+    /// false: replay the tail from the client's own synced state
+    pub via_snapshot: bool,
+    /// seed-replayable rounds the client replays locally
+    pub replay_rounds: usize,
+    /// fused (seed, coeff) items replayed locally — the client-side
+    /// compute of the catch-up (one O(d) weight pass per item), charged
+    /// as simulated passes by the round engine (`sim::replay_passes`)
+    pub replay_items: usize,
+    /// downlink bytes charged (the `min` over available paths)
+    pub bytes: u64,
+}
+
+/// Server-side checkpoint + compacted seed log (see module docs).
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    /// snapshot cadence in seed-replayable rounds; 0 = disabled
+    every: usize,
+    /// `None` iff disabled; otherwise invariant `snapshot.at + tail.len()
+    /// == rounds recorded so far` (the tail is contiguous)
+    snapshot: Option<Snapshot>,
+    tail: Vec<SeedRoundLog>,
+    /// snapshots materialized over the run (the initial state counts)
+    pub snapshots_taken: usize,
+    /// log items discarded by compaction over the run
+    pub compacted_items: u64,
+    /// longest tail observed (worst-case catch-up replay length)
+    pub max_tail_rounds: usize,
+}
+
+impl CheckpointStore {
+    /// `every` = snapshot cadence (0 disables the subsystem entirely);
+    /// `init` = the global parameters entering round 0.
+    pub fn new(every: usize, init: &ParamVec) -> Self {
+        let snapshot = (every > 0).then(|| Snapshot {
+            at: 0,
+            params: init.clone(),
+        });
+        Self {
+            every,
+            snapshots_taken: snapshot.is_some() as usize,
+            snapshot,
+            tail: Vec::new(),
+            compacted_items: 0,
+            max_tail_rounds: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.snapshot.is_some()
+    }
+
+    /// Earliest round reconstructable from the current snapshot.
+    pub fn base_round(&self) -> usize {
+        self.snapshot.as_ref().map_or(0, |s| s.at)
+    }
+
+    /// Seed-replayable rounds currently in the live log.
+    pub fn tail_rounds(&self) -> usize {
+        self.tail.len()
+    }
+
+    fn take_snapshot(&mut self, at: usize, global: &ParamVec) {
+        self.compacted_items += self
+            .tail
+            .iter()
+            .map(|e| e.items.len() as u64)
+            .sum::<u64>();
+        self.tail.clear();
+        self.snapshot = Some(Snapshot {
+            at,
+            params: global.clone(),
+        });
+        self.snapshots_taken += 1;
+    }
+
+    /// Record a round whose update cannot be replayed from seeds (warm
+    /// FedAvg step, mixed-§A.4 FO fold): snapshot right after it so
+    /// catch-up never has to cross it. `global` is the state *after* the
+    /// round.
+    pub fn record_opaque(&mut self, round: usize, global: &ParamVec) {
+        if !self.enabled() {
+            return;
+        }
+        debug_assert_eq!(self.base_round() + self.tail.len(), round, "rounds must be recorded in order");
+        self.take_snapshot(round + 1, global);
+    }
+
+    /// Record a seed-replayable round: append its fused items to the tail
+    /// and, at the `ckpt_every` cadence, materialize a snapshot and
+    /// compact. `global` is the state *after* the round.
+    pub fn record_seed_round(&mut self, round: usize, items: Vec<(u64, f32)>, global: &ParamVec) {
+        if !self.enabled() {
+            return;
+        }
+        debug_assert_eq!(self.base_round() + self.tail.len(), round, "rounds must be recorded in order");
+        self.tail.push(SeedRoundLog { round, items });
+        self.max_tail_rounds = self.max_tail_rounds.max(self.tail.len());
+        if self.tail.len() >= self.every {
+            self.take_snapshot(round + 1, global);
+        }
+    }
+
+    /// Replay cost (wire bytes, item count) for the tail rounds
+    /// `[from, to)` (indices are round numbers); `None` if the span is
+    /// reversed or not fully inside the live tail.
+    fn tail_span(&self, from: usize, to: usize) -> Option<(u64, usize)> {
+        let base = self.base_round();
+        if to < from || from < base || to > base + self.tail.len() {
+            return None;
+        }
+        let items: usize = self.tail[from - base..to - base]
+            .iter()
+            .map(|e| e.items.len())
+            .sum();
+        Some((items as u64 * BYTES_PER_REPLAY_ITEM, items))
+    }
+
+    /// The cheapest way to take a client holding the state entering round
+    /// `known` to the state entering round `target` (`dim_bytes` = 4·d,
+    /// the snapshot transfer size). `None` when no catch-up is needed or
+    /// the store is disabled.
+    pub fn catch_up_plan(&self, known: usize, target: usize, dim_bytes: u64) -> Option<CatchUpPlan> {
+        let snap = self.snapshot.as_ref()?;
+        if known >= target {
+            return None;
+        }
+        debug_assert!(
+            target <= snap.at + self.tail.len(),
+            "target {target} beyond recorded history {}",
+            snap.at + self.tail.len()
+        );
+        // a target sealed behind the snapshot (target < snap.at) is
+        // served by the snapshot alone: the client lands at base_round,
+        // at or past the state it asked for, with nothing to replay
+        let (snap_tail_bytes, snap_tail_items) =
+            self.tail_span(snap.at, target.max(snap.at)).unwrap_or((0, 0));
+        let snapshot_plan = CatchUpPlan {
+            via_snapshot: true,
+            replay_rounds: target.saturating_sub(snap.at),
+            replay_items: snap_tail_items,
+            bytes: dim_bytes + snap_tail_bytes,
+        };
+        match self.tail_span(known, target) {
+            Some((tail_bytes, tail_items)) if tail_bytes <= snapshot_plan.bytes => {
+                Some(CatchUpPlan {
+                    via_snapshot: false,
+                    replay_rounds: target - known,
+                    replay_items: tail_items,
+                    bytes: tail_bytes,
+                })
+            }
+            _ => Some(snapshot_plan),
+        }
+    }
+
+    /// Catch-up downlink charge: `min(snapshot_bytes, tail_seed_bytes)`
+    /// over the available paths; 0 when already synced or disabled.
+    pub fn catch_up_bytes(&self, known: usize, target: usize, dim_bytes: u64) -> u64 {
+        self.catch_up_plan(known, target, dim_bytes)
+            .map_or(0, |p| p.bytes)
+    }
+
+    /// Rebuild the global parameters entering round `target` from the
+    /// snapshot plus tail replay, through the identical sharded fused
+    /// pass the live server applies — bit-identical to continuous
+    /// participation for every `workers` count.
+    pub fn reconstruct(
+        &self,
+        target: usize,
+        tau: f32,
+        dist: Distribution,
+        workers: usize,
+    ) -> anyhow::Result<ParamVec> {
+        let snap = self
+            .snapshot
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("checkpointing disabled (ckpt_every = 0)"))?;
+        anyhow::ensure!(
+            target >= snap.at && target <= snap.at + self.tail.len(),
+            "round {target} outside reconstructable span [{}, {}]",
+            snap.at,
+            snap.at + self.tail.len()
+        );
+        let mut p = snap.params.clone();
+        for e in &self.tail[..target - snap.at] {
+            perturb_axpy_many_sharded(&mut p.0, &e.items, tau, dist, workers);
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    const TAU: f32 = 0.75;
+    const DIST: Distribution = Distribution::Rademacher;
+
+    fn items(rng: &mut Xoshiro256, n: usize) -> Vec<(u64, f32)> {
+        (0..n)
+            .map(|_| (rng.next_u64(), (rng.next_f32() - 0.5) * 1e-2))
+            .collect()
+    }
+
+    /// Reference: straight-line replay of every round from init — what a
+    /// client that never left (and never compacted) would hold.
+    fn replay_all(init: &ParamVec, rounds: &[Vec<(u64, f32)>], upto: usize) -> ParamVec {
+        let mut p = init.clone();
+        for r in &rounds[..upto] {
+            perturb_axpy_many_sharded(&mut p.0, r, TAU, DIST, 1);
+        }
+        p
+    }
+
+    #[test]
+    fn disabled_store_is_inert() {
+        let init = ParamVec::zeros(64);
+        let mut s = CheckpointStore::new(0, &init);
+        assert!(!s.enabled());
+        s.record_seed_round(0, vec![(1, 0.5)], &init);
+        s.record_opaque(1, &init);
+        assert_eq!(s.catch_up_bytes(0, 5, 1024), 0);
+        assert_eq!(s.tail_rounds(), 0);
+        assert!(s.reconstruct(0, TAU, DIST, 1).is_err());
+    }
+
+    #[test]
+    fn reconstruct_matches_straight_replay_across_compaction() {
+        let mut rng = Xoshiro256::seed_from(9);
+        let init = ParamVec(vec![0.25f32; 300]);
+        let mut store = CheckpointStore::new(3, &init);
+        let mut live = init.clone();
+        let mut all_rounds: Vec<Vec<(u64, f32)>> = Vec::new();
+        for round in 0..8 {
+            let it = items(&mut rng, 1 + round % 4);
+            perturb_axpy_many_sharded(&mut live.0, &it, TAU, DIST, 1);
+            all_rounds.push(it.clone());
+            store.record_seed_round(round, it, &live);
+            // every reconstructable prefix equals the never-left replay
+            for target in store.base_round()..=store.base_round() + store.tail_rounds() {
+                let rec = store.reconstruct(target, TAU, DIST, 1).unwrap();
+                assert_eq!(rec, replay_all(&init, &all_rounds, target), "target {target}");
+            }
+        }
+        // cadence 3 over 8 rounds: snapshots after rounds 2 and 5 (+ init)
+        assert_eq!(store.snapshots_taken, 3);
+        assert_eq!(store.base_round(), 6);
+        assert_eq!(store.tail_rounds(), 2);
+        assert!(store.compacted_items > 0);
+    }
+
+    #[test]
+    fn opaque_rounds_snapshot_and_restart_the_tail() {
+        let init = ParamVec(vec![0.0f32; 128]);
+        let mut store = CheckpointStore::new(10, &init);
+        let mut rng = Xoshiro256::seed_from(4);
+        let mut live = init.clone();
+        let it = items(&mut rng, 3);
+        perturb_axpy_many_sharded(&mut live.0, &it, TAU, DIST, 1);
+        store.record_seed_round(0, it, &live);
+        // an opaque (warm/mixed) round: pretend a full-weight fold happened
+        live.0[7] += 1.0;
+        store.record_opaque(1, &live);
+        assert_eq!(store.base_round(), 2);
+        assert_eq!(store.tail_rounds(), 0);
+        // catch-up from before the opaque round can only use the snapshot
+        let plan = store.catch_up_plan(0, 2, 512).unwrap();
+        assert!(plan.via_snapshot);
+        assert_eq!(plan.bytes, 512);
+        // a target sealed behind the snapshot (0 -> 1 < base 2) must not
+        // panic: the snapshot alone serves it (client lands at base)
+        let sealed = store.catch_up_plan(0, 1, 512).unwrap();
+        assert!(sealed.via_snapshot);
+        assert_eq!(sealed.bytes, 512);
+        assert_eq!(sealed.replay_rounds, 0);
+        assert_eq!(sealed.replay_items, 0);
+        // and reconstruct at the new base is exactly the live state
+        assert_eq!(store.reconstruct(2, TAU, DIST, 1).unwrap(), live);
+        assert!(store.reconstruct(1, TAU, DIST, 1).is_err());
+    }
+
+    #[test]
+    fn catch_up_picks_the_cheaper_path() {
+        let init = ParamVec::zeros(64);
+        // cadence 3: snapshot after round 2 (at = 3), tail = rounds 3..5
+        let mut store = CheckpointStore::new(3, &init);
+        let mut rng = Xoshiro256::seed_from(1);
+        let mut live = init.clone();
+        for round in 0..6 {
+            let it = items(&mut rng, 5); // 5 items = 60 B per round
+            perturb_axpy_many_sharded(&mut live.0, &it, TAU, DIST, 1);
+            store.record_seed_round(round, it, &live);
+        }
+        assert_eq!(store.base_round(), 3);
+        assert_eq!(store.tail_rounds(), 3);
+        // a nearly-synced client replays the short tail span
+        let near = store.catch_up_plan(5, 6, 10_000).unwrap();
+        assert!(!near.via_snapshot);
+        assert_eq!(near.bytes, 60);
+        assert_eq!(near.replay_rounds, 1);
+        // a client stale since before the snapshot cannot use the tail —
+        // its missed rounds were compacted away — so it takes the
+        // snapshot plus the post-snapshot tail
+        let cold = store.catch_up_plan(0, 6, 100).unwrap();
+        assert!(cold.via_snapshot);
+        assert_eq!(cold.bytes, 100 + 3 * 60);
+        assert_eq!(cold.replay_rounds, 3);
+        // within tail coverage pure tail replay always wins — the
+        // snapshot path would ship the same span *plus* the snapshot
+        let tailful = store.catch_up_plan(3, 6, 10_000).unwrap();
+        assert!(!tailful.via_snapshot);
+        assert_eq!(tailful.bytes, 3 * 60);
+        let snappy = store.catch_up_plan(3, 6, 10).unwrap();
+        assert!(!snappy.via_snapshot);
+        assert_eq!(snappy.bytes, 3 * 60);
+        // synced clients pay nothing
+        assert_eq!(store.catch_up_bytes(6, 6, 10_000), 0);
+    }
+
+    #[test]
+    fn prop_catch_up_and_reconstruct_invariants() {
+        // random interleavings of seed/opaque rounds and cadences:
+        // (1) reconstruct == straight-line replay at every reconstructable
+        //     target (with opaque rounds modeled as arbitrary mutations);
+        // (2) catch_up_bytes is 0 iff synced, monotone non-increasing in
+        //     `known`, and never exceeds the pure snapshot path;
+        // (3) the tail stays bounded by the cadence.
+        crate::util::prop::run_prop("ckpt_catch_up", 60, |g| {
+            let mut rng = g.rng();
+            let dim = 64 + rng.below(g.size.max(1) * 4);
+            let every = 1 + rng.below(5);
+            let rounds = 1 + rng.below(g.size.max(2).min(14));
+            let dim_bytes = (dim * 4) as u64;
+            let init = ParamVec(vec![0.1f32; dim]);
+            let mut store = CheckpointStore::new(every, &init);
+            let mut live = init.clone();
+            // live history of *states entering* each round
+            let mut entering: Vec<ParamVec> = vec![init.clone()];
+            for round in 0..rounds {
+                if rng.below(4) == 0 {
+                    // opaque round: arbitrary full-weight mutation
+                    let k = rng.below(dim);
+                    live.0[k] += rng.next_f32() - 0.5;
+                    store.record_opaque(round, &live);
+                } else {
+                    // 0-item rounds model the all-drop identity rounds
+                    // the live server logs
+                    let n_items = rng.below(6);
+                    let it = items(&mut rng, n_items);
+                    perturb_axpy_many_sharded(&mut live.0, &it, 0.75, DIST, 1);
+                    store.record_seed_round(round, it, &live);
+                }
+                entering.push(live.clone());
+            }
+            if store.tail_rounds() >= every {
+                return Err(format!("tail {} >= cadence {every}", store.tail_rounds()));
+            }
+            let base = store.base_round();
+            let top = base + store.tail_rounds();
+            for target in base..=top {
+                let rec = store
+                    .reconstruct(target, 0.75, DIST, 1)
+                    .map_err(|e| e.to_string())?;
+                if rec != entering[target] {
+                    return Err(format!("reconstruct({target}) != live state"));
+                }
+                let snap_only = dim_bytes
+                    + store.tail_span(base, target).map_or(0, |t| t.0);
+                let mut prev = u64::MAX;
+                for known in 0..=target {
+                    let b = store.catch_up_bytes(known, target, dim_bytes);
+                    // free catch-up is legitimate exactly when synced, or
+                    // when the missed span is inside the tail and carries
+                    // zero items (all-drop identity rounds)
+                    let free_ok = known >= target
+                        || (known >= base
+                            && store.tail_span(known, target).map_or(false, |t| t.0 == 0));
+                    if (b == 0) != free_ok {
+                        return Err(format!(
+                            "charge {b} inconsistent at known={known}->{target} \
+                             (free_ok {free_ok})"
+                        ));
+                    }
+                    if b > snap_only {
+                        return Err(format!("{b} exceeds snapshot path {snap_only}"));
+                    }
+                    if b > prev {
+                        return Err(format!(
+                            "catch-up not monotone at known={known}: {b} > {prev}"
+                        ));
+                    }
+                    prev = b;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reconstruct_is_worker_invariant() {
+        let mut rng = Xoshiro256::seed_from(11);
+        // above the sharding threshold so workers actually shard
+        let dim = 1 << 15;
+        let init = ParamVec(vec![0.5f32; dim]);
+        let mut store = CheckpointStore::new(8, &init);
+        let mut live = init.clone();
+        for round in 0..5 {
+            let it = items(&mut rng, 4);
+            perturb_axpy_many_sharded(&mut live.0, &it, TAU, DIST, 1);
+            store.record_seed_round(round, it, &live);
+        }
+        let w1 = store.reconstruct(5, TAU, DIST, 1).unwrap();
+        for workers in [2usize, 4, 8] {
+            assert_eq!(
+                store.reconstruct(5, TAU, DIST, workers).unwrap(),
+                w1,
+                "workers={workers}"
+            );
+        }
+        assert_eq!(w1, live);
+    }
+}

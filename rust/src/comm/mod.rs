@@ -138,6 +138,11 @@ pub struct CommLedger {
     pub down_total: u64,
     /// per-round (up, down) history
     pub per_round: Vec<(u64, u64)>,
+    /// of `down_total`, the bytes spent on catch-up (snapshot/tail
+    /// replay downloads for stale clients — the `ckpt` subsystem's
+    /// `min(snapshot_bytes, tail_seed_bytes)` charges, measured with
+    /// partial transmissions). 0 when `ckpt_every = 0`.
+    pub catch_up_down_total: u64,
 }
 
 impl CommLedger {
@@ -145,6 +150,11 @@ impl CommLedger {
         self.up_total += up;
         self.down_total += down;
         self.per_round.push((up, down));
+    }
+
+    /// Attribute `bytes` of already-recorded downlink to catch-up.
+    pub fn record_catch_up(&mut self, bytes: u64) {
+        self.catch_up_down_total += bytes;
     }
 
     pub fn rounds(&self) -> usize {
@@ -225,5 +235,11 @@ mod tests {
         assert_eq!(l.up_total, 11);
         assert_eq!(l.down_total, 22);
         assert_eq!(l.rounds(), 2);
+        // catch-up is a sub-attribution of down, not extra bytes
+        assert_eq!(l.catch_up_down_total, 0);
+        l.record_catch_up(5);
+        l.record_catch_up(2);
+        assert_eq!(l.catch_up_down_total, 7);
+        assert_eq!(l.down_total, 22);
     }
 }

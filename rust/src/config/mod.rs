@@ -101,6 +101,14 @@ pub struct FedConfig {
     /// scenarios ignore `hi_frac` and draw tiers from their own
     /// fractions. CLI: `--scenario <preset|file.json|{inline json}>`.
     pub scenario: Scenario,
+    /// checkpoint cadence: materialize a server parameter snapshot every
+    /// this many seed-replayable ZO rounds and compact the live seed log
+    /// to the tail since it (`ckpt` module; CLI `--ckpt-every`). Stale
+    /// clients (late joiners, rejoining dropouts, churn absences) are
+    /// then charged the cheaper of snapshot-vs-tail catch-up downlink
+    /// before they can participate. 0 (default) disables the subsystem —
+    /// the seed repo's free-rejoin accounting, byte-identical to before.
+    pub ckpt_every: usize,
 }
 
 impl Default for FedConfig {
@@ -125,6 +133,7 @@ impl Default for FedConfig {
             mixed_step2: false,
             threads: 0,
             scenario: Scenario::Binary,
+            ckpt_every: 0,
         }
     }
 }
@@ -223,6 +232,7 @@ impl FedConfig {
         self.seed = a.usize_or("seed", self.seed as usize)? as u64;
         self.mixed_step2 = a.bool_or("mixed-step2", self.mixed_step2)?;
         self.threads = a.usize_or("threads", self.threads)?;
+        self.ckpt_every = a.usize_or("ckpt-every", self.ckpt_every)?;
         if let Some(s) = a.get("scenario") {
             self.scenario = Scenario::load(s)?;
         }
@@ -421,6 +431,24 @@ mod tests {
         assert_eq!(c.threads, 0); // default: auto
         c.apply_args(&a).unwrap();
         assert_eq!(c.threads, 4);
+    }
+
+    #[test]
+    fn ckpt_every_override() {
+        let argv: Vec<String> = "--ckpt-every 5"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = FedConfig::default();
+        assert_eq!(c.ckpt_every, 0); // default: disabled (seed-compatible)
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.ckpt_every, 5);
+        // also flows through JSON configs
+        let j = Json::parse(r#"{"ckpt-every": 3}"#).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.ckpt_every, 3);
     }
 
     #[test]

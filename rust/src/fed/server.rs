@@ -31,6 +31,7 @@
 
 use std::time::Instant;
 
+use crate::ckpt::CheckpointStore;
 use crate::comm::{CommLedger, CostModel};
 use crate::config::FedConfig;
 use crate::data::loader::{eval_chunks, ClientData, Source};
@@ -41,12 +42,12 @@ use crate::fed::client::{
 };
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
-use crate::model::params::ParamVec;
+use crate::model::params::{perturb_axpy_many_sharded, ParamVec};
 use crate::sim::{self, Scenario};
 use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
 use crate::zo::{
-    apply_zo_update_sharded, zo_round_ledger_outcomes, zoopt, SeedIssuer, ZoClientCharge,
+    zo_round_ledger_outcomes, zo_update_items, zoopt, SeedIssuer, ZoClientCharge,
     ZoContribution,
 };
 
@@ -63,6 +64,14 @@ pub struct Federation<'b, B: ModelBackend> {
     /// the backend's eq. 4/5 cost profile — the capability thresholds
     /// and simulated timing of the `sim` scenario engine
     pub cost: CostModel,
+    /// server-side checkpoint + compacted seed log (`cfg.ckpt_every`;
+    /// inert when 0 — see the `ckpt` module)
+    pub ckpt: CheckpointStore,
+    /// per-client sync ledger: `synced[c] = r` means client c can
+    /// reconstruct the global parameters *entering* round r (it received
+    /// every broadcast through round r−1). Everyone starts at 0 (init
+    /// weights). The gap `round − synced[c]` is what catch-up must cover.
+    pub synced: Vec<usize>,
     server_opt: ServerOptState,
     issuer: SeedIssuer,
     rng: Xoshiro256,
@@ -73,9 +82,12 @@ pub struct Federation<'b, B: ModelBackend> {
 pub struct RoundSummary {
     /// the round's training signal (always finite; see [`zo_train_signal`])
     pub train_signal: f64,
-    /// sampled clients that missed the deadline, failed mid-round, or
-    /// could not fit even the ZO footprint
+    /// sampled clients that missed the deadline, failed mid-round, could
+    /// not fit even the ZO footprint, or were absent / not yet joined
     pub dropped: usize,
+    /// catch-up downlink actually transmitted this round (`ckpt`
+    /// subsystem; 0 with checkpointing disabled or in warm rounds)
+    pub catch_up_down: u64,
 }
 
 /// Clamp a training signal to the finite domain the CSV log expects
@@ -140,6 +152,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let server_opt = ServerOptState::new(cfg.server_opt, backend.dim());
         let issuer = SeedIssuer::new(cfg.seed ^ 0x5EED_1557);
         let rng = Xoshiro256::seed_from(cfg.seed ^ 0xFED_0_FED);
+        let ckpt = CheckpointStore::new(cfg.ckpt_every, &init);
+        let synced = vec![0usize; cfg.clients];
         Ok(Self {
             cfg,
             backend,
@@ -150,6 +164,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             log: RunLog::default(),
             ledger: CommLedger::default(),
             cost,
+            ckpt,
+            synced,
             server_opt,
             issuer,
             rng,
@@ -214,6 +230,12 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let mut dropped = 0usize;
         for &cid in &picked {
             let client = &self.clients[cid];
+            // churn trace: late joiners and whole-round absences transmit
+            // nothing and stay stale
+            if !sim::is_available(&client.profile, self.cfg.seed, self.round, cid) {
+                dropped += 1;
+                continue;
+            }
             let plan = sim::RoundPlan {
                 down_bytes: d4,
                 passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
@@ -223,6 +245,11 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
             up += o.up_bytes;
             down += o.down_bytes;
+            if o.down_bytes == plan.down_bytes {
+                // a completed full-weight download IS a sync: the client
+                // now holds the global entering this round
+                self.synced[cid] = self.synced[cid].max(self.round);
+            }
             if o.survives {
                 jobs.push((cid, self.client_rng(cid)));
             } else {
@@ -252,10 +279,14 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         // partial/zero transmissions are already folded into up/down
         self.ledger.record_round(up, down);
         if updates.is_empty() {
-            // every sampled client dropped: no aggregate step this round
+            // every sampled client dropped: no aggregate step — the
+            // identity round is seed-replayable with an empty item list,
+            // so a catch-up tail can cross it
+            self.ckpt.record_seed_round(self.round, Vec::new(), &self.global);
             return Ok(RoundSummary {
                 train_signal: 0.0,
                 dropped,
+                catch_up_down: 0,
             });
         }
         let avg = weighted_average(&updates);
@@ -263,9 +294,12 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         delta.axpy(-1.0, &self.global);
         self.server_opt
             .apply(&mut self.global, &delta, self.cfg.lr_server_warm);
+        // a FedAvg step cannot be replayed from seeds: snapshot after it
+        self.ckpt.record_opaque(self.round, &self.global);
         Ok(RoundSummary {
             train_signal: finite_signal(train.mean_loss()),
             dropped,
+            catch_up_down: 0,
         })
     }
 
@@ -283,6 +317,17 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     /// ([`zo_round_ledger_outcomes`]). Clients whose memory budget is
     /// below even the eq. 5 ZO footprint never participate and transmit
     /// nothing.
+    ///
+    /// Churn & catch-up: sampled clients that are absent or not yet
+    /// joined ([`sim::is_available`]) transmit nothing and stay stale.
+    /// With checkpointing enabled, a stale participant's timeline is
+    /// fronted with the catch-up charge — the cheaper of snapshot vs
+    /// tail replay ([`CheckpointStore::catch_up_plan`]), download bytes
+    /// plus local replay passes — and the per-client sync ledger
+    /// advances: full download ⇒ synced to this round; survival
+    /// (broadcast received) ⇒ synced to the next, but only when the
+    /// round stays seed-replayable (a mixed-FO fold is opaque — the
+    /// broadcast alone cannot reach the post-fold global).
     pub fn zo_round(&mut self) -> anyhow::Result<RoundSummary> {
         // Q ⊆ K — all resource classes participate in step 2. With
         // mixed_step2 (§A.4 ablation) the sampled high-res clients do FO
@@ -309,8 +354,19 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let mut zo_charges: Vec<ZoClientCharge> = Vec::with_capacity(q);
         let (mut fo_up, mut fo_down) = (0u64, 0u64);
         let mut dropped = 0usize;
+        let mut catch_up_down = 0u64;
+        // ZO survivors whose sync ledger may advance to round+1 — only
+        // once the round is known to be seed-replayable (no mixed-FO
+        // fold), decided after the join
+        let mut zo_survivors: Vec<usize> = Vec::with_capacity(q);
         for &cid in &picked {
             let client = &self.clients[cid];
+            // churn trace: late joiners and whole-round absences transmit
+            // nothing and stay stale
+            if !sim::is_available(&client.profile, self.cfg.seed, self.round, cid) {
+                dropped += 1;
+                continue;
+            }
             let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
             if self.cfg.mixed_step2 && client.is_high() {
                 let plan = sim::RoundPlan {
@@ -321,6 +377,10 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
                 fo_up += o.up_bytes;
                 fo_down += o.down_bytes;
+                if o.down_bytes == plan.down_bytes {
+                    // full-weight download = sync to the current round
+                    self.synced[cid] = self.synced[cid].max(self.round);
+                }
                 if o.survives {
                     jobs.push(Job::Fo { cid, rng: self.client_rng(cid) });
                 } else {
@@ -329,19 +389,46 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             } else if client.profile.zo_capable(&self.cost) {
                 let steps = zo_step_count(client.n(), self.cfg.zo.grad_steps);
                 let n_seeds = self.cfg.zo.s_seeds * steps;
+                // a stale client must first reconstruct the current
+                // global: the server charges the cheaper of snapshot vs
+                // tail replay (ckpt subsystem; nothing when synced or
+                // when checkpointing is disabled). Both the catch-up
+                // download and the local replay passes lead the
+                // timeline, so a tight deadline can cut either short.
+                let catch_plan = self.ckpt.catch_up_plan(self.synced[cid], self.round, d4);
+                let catch = catch_plan.map_or(0, |p| p.bytes);
                 let plan = sim::RoundPlan {
-                    down_bytes: (n_seeds * 8) as u64,
-                    passes: sim::zo_passes(client.n(), self.cfg.zo.s_seeds),
+                    down_bytes: catch + (n_seeds * 8) as u64,
+                    passes: sim::zo_passes(client.n(), self.cfg.zo.s_seeds)
+                        + sim::replay_passes(catch_plan.map_or(0, |p| p.replay_items)),
                     up_bytes: (n_seeds * 4) as u64,
                 };
                 let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+                catch_up_down += o.down_bytes.min(catch);
                 zo_charges.push(ZoClientCharge {
                     issued_seeds: n_seeds,
                     up_bytes: o.up_bytes,
                     seed_down_bytes: o.down_bytes,
                     survives: o.survives,
                 });
+                if o.down_bytes >= catch {
+                    // the download leg is ordered catch-up first, so
+                    // receiving at least `catch` bytes means the client
+                    // holds the full catch-up payload — even if the seed
+                    // issue (or anything later in its timeline) was cut.
+                    // A replay interrupted by the deadline finishes
+                    // offline before the next round (the deadline bounds
+                    // round participation, not between-round local
+                    // compute), so the client counts as synced and the
+                    // catch-up is never re-charged.
+                    self.synced[cid] = self.synced[cid].max(self.round);
+                }
                 if o.survives {
+                    // survivors also receive the end-of-round broadcast;
+                    // whether that reaches the *next* round's global
+                    // depends on the round staying seed-replayable —
+                    // resolved after the join (see zo_survivors)
+                    zo_survivors.push(cid);
                     jobs.push(Job::Zo {
                         cid,
                         seeds: self.issuer.seeds_for(self.round, cid, n_seeds),
@@ -419,13 +506,20 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         // Intermediate grad_steps blocks replay at lr_client (matching the
         // client's local trajectory); the server lr scales only the final
         // aggregated block. The weight-vector pass shards across the same
-        // worker budget.
-        apply_zo_update_sharded(
-            &mut self.global,
+        // worker budget. The item list is the single artifact shared with
+        // the checkpoint seed log: replaying it reproduces this exact
+        // update bit for bit.
+        let items = zo_update_items(
             &contributions,
             &self.cfg.zo,
             self.cfg.lr_client_zo,
             self.cfg.lr_server_zo,
+        );
+        perturb_axpy_many_sharded(
+            &mut self.global.0,
+            &items,
+            self.cfg.zo.tau,
+            self.cfg.zo.dist,
             workers,
         );
 
@@ -438,18 +532,35 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             let share = fo_participants as f32 / q as f32;
             self.server_opt
                 .apply(&mut self.global, &delta, self.cfg.lr_server_warm * share);
+            // the FO fold is a full-weight update no seed list can
+            // replay: snapshot after it. ZO survivors received the
+            // (seed, ΔL) broadcast but NOT the fold, so their sync
+            // ledger must NOT advance past this round — they stay at
+            // `round` (full download) and pay the snapshot path next
+            // time.
+            self.ckpt.record_opaque(self.round, &self.global);
+        } else {
+            // seed-replayable round: the broadcast lets every ZO
+            // survivor reconstruct the next round's global
+            for &cid in &zo_survivors {
+                self.synced[cid] = self.synced[cid].max(self.round + 1);
+            }
+            self.ckpt.record_seed_round(self.round, items, &self.global);
         }
 
         // comm accounting: seed traffic is charged only to ZO
-        // participants (partial transmissions for dropouts, the end-of-
-        // round broadcast of surviving (seed, ΔL) pairs only to
-        // survivors); FO participants exchange full weights instead.
+        // participants (partial transmissions for dropouts — catch-up
+        // bytes included — and the end-of-round broadcast of surviving
+        // (seed, ΔL) pairs only to survivors); FO participants exchange
+        // full weights instead.
         let (up, down) = zo_round_ledger_outcomes(&zo_charges, fo_up, fo_down);
         self.ledger.record_round(up, down);
+        self.ledger.record_catch_up(catch_up_down);
 
         Ok(RoundSummary {
             train_signal: zo_train_signal(&contributions, &train),
             dropped,
+            catch_up_down,
         })
     }
 
@@ -480,6 +591,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             bytes_up: up,
             bytes_down: down,
             dropped: summary.dropped,
+            catch_up_down: summary.catch_up_down,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         });
         self.round += 1;
@@ -827,6 +939,98 @@ mod tests {
         assert_eq!(fed.global, init, "no survivors => no server step");
         let (up, _down) = *fed.ledger.per_round.last().unwrap();
         assert_eq!(up, 0, "cut during download charges zero uplink");
+    }
+
+    #[test]
+    fn default_config_keeps_checkpointing_inert() {
+        // acceptance: ckpt_every = 0 (the default) is byte-inert — no
+        // snapshots, no log, no catch-up charges — so seed-era traces
+        // (incl. the golden fixture) are reproduced unchanged.
+        let cfg = smoke_cfg();
+        assert_eq!(cfg.ckpt_every, 0);
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+        fed.run().unwrap();
+        assert!(!fed.ckpt.enabled());
+        assert_eq!(fed.ckpt.tail_rounds(), 0);
+        assert_eq!(fed.ledger.catch_up_down_total, 0);
+        assert!(fed.log.rounds.iter().all(|r| r.catch_up_down == 0));
+    }
+
+    #[test]
+    fn churn_fleet_charges_catch_up_and_stays_thread_invariant() {
+        // the tentpole guarantee under churn: late joiners / absences /
+        // rejoins with checkpointing enabled yield bit-identical weights,
+        // logs AND catch-up ledgers for every worker count, and the
+        // catch-up downlink is actually exercised.
+        let run_with = |threads: usize| {
+            let mut cfg = smoke_cfg();
+            cfg.threads = threads;
+            cfg.ckpt_every = 2;
+            cfg.scenario = crate::sim::Scenario::preset("churn").unwrap();
+            let (be, shards, test) = build(cfg.clone());
+            let init = ParamVec::zeros(be.dim());
+            let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+            fed.run().unwrap();
+            (fed.global.clone(), fed.log, fed.ledger)
+        };
+        let (g1, log1, led1) = run_with(1);
+        let (g4, log4, led4) = run_with(4);
+        assert_eq!(g1, g4, "weights must not depend on threads under churn");
+        assert_eq!(led1.catch_up_down_total, led4.catch_up_down_total);
+        assert_eq!((led1.up_total, led1.down_total), (led4.up_total, led4.down_total));
+        for (a, b) in log1.rounds.iter().zip(&log4.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.catch_up_down, b.catch_up_down);
+            assert_eq!((a.bytes_up, a.bytes_down, a.dropped), (b.bytes_up, b.bytes_down, b.dropped));
+        }
+        assert!(
+            led1.catch_up_down_total > 0,
+            "the churn fleet must pay catch-up downlink somewhere"
+        );
+        assert!(
+            led1.catch_up_down_total <= led1.down_total,
+            "catch-up is an attribution of the downlink, not extra bytes"
+        );
+        let absent: usize = log1.rounds.iter().map(|r| r.dropped).sum();
+        assert!(absent > 0, "churn should keep someone out of some round");
+        assert!(g1.is_finite());
+    }
+
+    #[test]
+    fn mixed_round_does_not_oversync_zo_survivors() {
+        // regression: a mixed_step2 round with surviving FO participants
+        // is opaque — its FO fold cannot be reached from the (seed, ΔL)
+        // broadcast — so ZO survivors must NOT be marked synced past it,
+        // or their next catch-up would skip the snapshot they need.
+        let mk = |mixed: bool| {
+            let mut cfg = smoke_cfg();
+            cfg.pivot = 0;
+            cfg.rounds_total = 1;
+            cfg.sample_zo = cfg.clients; // sample everyone: FO + ZO mix
+            cfg.mixed_step2 = mixed;
+            cfg.ckpt_every = 1;
+            let (be, shards, test) = build(cfg.clone());
+            let mut fed =
+                Federation::new(cfg, &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+            fed.step().unwrap();
+            fed
+        };
+        // pure ZO round: every survivor receives the broadcast and syncs
+        // to round 1
+        let fed = mk(false);
+        assert!(fed.synced.iter().all(|&s| s == 1), "{:?}", fed.synced);
+        // mixed round (binary fleet: half the clients run FO): opaque —
+        // nobody may claim the post-fold state
+        let fed = mk(true);
+        assert_eq!(fed.ckpt.tail_rounds(), 0, "mixed round must be opaque");
+        assert_eq!(fed.ckpt.base_round(), 1);
+        assert!(
+            fed.synced.iter().all(|&s| s == 0),
+            "oversynced past an opaque round: {:?}",
+            fed.synced
+        );
     }
 
     #[test]

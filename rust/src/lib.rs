@@ -12,6 +12,9 @@
 //!   FedAdam aggregation, and the seed-based SPSA protocol.
 //! * [`zo`] — SPSA estimation and seed bookkeeping.
 //! * [`baselines`] — HeteroFL, FedKSeed, High-Res-Only comparators.
+//! * [`ckpt`] — server-side checkpointing + seed-log compaction: bounded
+//!   catch-up replay for late joiners and rejoining dropouts
+//!   (`--ckpt-every`; DESIGN.md §7).
 //! * [`data`] — procedural datasets + Dirichlet partitioner.
 //! * [`comm`] — measured byte accounting + the eq. 4/5 analytic cost model.
 //! * [`sim`] — the device-capability scenario engine: per-client
@@ -24,9 +27,9 @@
 //! ## Capability scenarios
 //!
 //! Fleets are described by [`sim::Scenario`]s — named presets
-//! (`binary`, `uniform-high`, `edge-spectrum`, `stragglers`, `flaky`) or
-//! JSON specs (`train --scenario <name|file>`; schema in
-//! `rust/src/exp/README.md`). Each client draws a
+//! (`binary`, `uniform-high`, `edge-spectrum`, `stragglers`, `flaky`,
+//! `churn`) or JSON specs (`train --scenario <name|file>`; schema in
+//! README.md and `rust/src/exp/README.md`). Each client draws a
 //! [`sim::CapabilityProfile`] reproducibly from the master seed; the
 //! eq. 4/5 cost model decides FO-vs-ZO eligibility (replacing the old
 //! hardcoded binary flag — `fed::server::assign_resources` survives as a
@@ -35,6 +38,22 @@
 //! the server folds only surviving contributions, and the ledger charges
 //! only bytes actually transmitted before the drop. The default
 //! scenario reproduces the seed repo's behavior bit for bit.
+//!
+//! ## Checkpointing & late joiners
+//!
+//! Scenarios can also model **churn**: tiers may join the federation late
+//! (`join_round`) or sit out whole rounds (`absent_rate`, drawn from a
+//! deterministic per-(round, client) trace). A client that missed rounds
+//! is *stale* — it never received the (seed, ΔL) broadcasts — and must
+//! catch up before it can evaluate seeds against the current model. With
+//! `FedConfig::ckpt_every > 0` the server materializes periodic parameter
+//! snapshots, compacts the seed log to the tail, and charges each stale
+//! client the cheaper of `snapshot + tail` vs pure tail replay
+//! ([`ckpt::CheckpointStore`]); reconstruction replays the tail through
+//! the same sharded fused pass as the live server, so a rejoiner's state
+//! is bit-identical to continuous participation. With `ckpt_every == 0`
+//! (default) the accounting is byte-inert, reproducing the seed repo's
+//! traces unchanged.
 //!
 //! ## Threading model
 //!
@@ -57,6 +76,7 @@
 //! enforcement.
 
 pub mod baselines;
+pub mod ckpt;
 pub mod comm;
 pub mod config;
 pub mod data;

@@ -36,11 +36,18 @@ SUBCOMMANDS
                                         results identical for every N)
             --scenario NAME|FILE       (device-capability fleet: binary|
                                         uniform-high|edge-spectrum|
-                                        stragglers|flaky, a JSON spec file,
-                                        or an inline {...} spec — schema in
+                                        stragglers|flaky|churn, a JSON spec
+                                        file, or an inline {...} spec —
+                                        schema in README.md and
                                         rust/src/exp/README.md)
+            --ckpt-every N             (server checkpoint cadence: snapshot
+                                        + seed-log compaction every N ZO
+                                        rounds; stale/late-joining clients
+                                        pay min(snapshot, tail) catch-up
+                                        downlink. 0 = off, the seed-
+                                        compatible default)
   exp     regenerate a paper table/figure
-            zowarmup exp <table1..table7|fig3..fig7|all> [--scale smoke|default|paper]
+            zowarmup exp <table1..table7|fig3..fig7|ckpt|all> [--scale smoke|default|paper]
             [--threads N]              (worker threads for every run in
                                         the sweep; 0 = auto)
             [--scenario NAME|FILE]     (capability fleet for every run in

@@ -32,7 +32,11 @@ pub struct RoundRecord {
     pub bytes_up: u64,
     pub bytes_down: u64,
     /// sampled clients that dropped mid-round (deadline / availability)
+    /// or were absent / not yet joined (churn)
     pub dropped: usize,
+    /// of `bytes_down`, the catch-up downlink charged to stale clients
+    /// this round (`ckpt` subsystem; 0 with checkpointing disabled)
+    pub catch_up_down: u64,
     pub wall_ms: f64,
 }
 
@@ -71,6 +75,11 @@ impl RunLog {
         self.rounds.iter().map(|r| r.dropped).sum()
     }
 
+    /// Total catch-up downlink over the run (`ckpt` subsystem view).
+    pub fn total_catch_up_down(&self) -> u64 {
+        self.rounds.iter().map(|r| r.catch_up_down).sum()
+    }
+
     pub fn total_bytes(&self) -> (u64, u64) {
         (
             self.rounds.iter().map(|r| r.bytes_up).sum(),
@@ -92,7 +101,7 @@ impl RunLog {
             path,
             &[
                 "round", "phase", "train_loss", "test_acc", "test_loss", "bytes_up",
-                "bytes_down", "dropped", "wall_ms",
+                "bytes_down", "dropped", "catch_up_down", "wall_ms",
             ],
         )?;
         for r in &self.rounds {
@@ -105,6 +114,7 @@ impl RunLog {
                 r.bytes_up.to_string(),
                 r.bytes_down.to_string(),
                 r.dropped.to_string(),
+                r.catch_up_down.to_string(),
                 format!("{:.3}", r.wall_ms),
             ])?;
         }
@@ -165,6 +175,7 @@ mod tests {
             bytes_up: 10,
             bytes_down: 20,
             dropped: 0,
+            catch_up_down: 0,
             wall_ms: 1.0,
         }
     }

@@ -57,6 +57,12 @@ use crate::util::rng::Xoshiro256;
 /// (salt 0) and FedKSeed (salt 0x4B) streams.
 pub const SIM_SALT: u64 = 0x51D_7E57;
 
+/// Salt for the per-(round, client) churn trace (whole-round absences,
+/// [`is_available`]) — a *separate* stream from [`SIM_SALT`] so enabling
+/// churn never perturbs the mid-round drop/deadline draws of existing
+/// scenarios.
+pub const CHURN_SALT: u64 = 0xC4_0E11;
+
 /// ms per sample-pass per million parameters at `compute = 1.0`.
 pub const MS_PER_MPARAM_PASS: f64 = 0.1;
 
@@ -84,6 +90,21 @@ pub fn zo_passes(n: usize, s_seeds: usize) -> f64 {
 /// `step_batch`-sized minibatch.
 pub fn kseed_passes(local_steps: usize, step_batch: usize) -> f64 {
     (2 * local_steps * step_batch) as f64
+}
+
+/// Pass-equivalents of one fused (seed, coeff) catch-up replay item: a
+/// single O(P) traversal of the weight vector, modeled as one forward
+/// sample-pass (both are parameter-proportional; the axpy is
+/// memory-bound, the forward compute-bound — close enough at this
+/// model's granularity).
+pub const REPLAY_PASS_FACTOR: f64 = 1.0;
+
+/// Sample-passes a rejoining client spends replaying `items` catch-up
+/// items locally ([`crate::ckpt::CatchUpPlan::replay_items`]) — charged
+/// on its round timeline so deadlines bite on the replay, not just the
+/// download.
+pub fn replay_passes(items: usize) -> f64 {
+    items as f64 * REPLAY_PASS_FACTOR
 }
 
 // ---------------------------------------------------------------------------
@@ -126,6 +147,12 @@ pub struct DeviceTier {
     pub compute: f64,
     /// per-round probability of failing mid-round
     pub drop_rate: f64,
+    /// first round this tier's clients are part of the federation
+    /// (late joiners; 0 = from the start)
+    pub join_round: usize,
+    /// per-round probability of sitting the whole round out (absent
+    /// before any byte moves, unlike `drop_rate`'s mid-round cut)
+    pub absent_rate: f64,
 }
 
 impl DeviceTier {
@@ -138,6 +165,8 @@ impl DeviceTier {
             down_mbps: 10.0,
             compute: 1.0,
             drop_rate: 0.0,
+            join_round: 0,
+            absent_rate: 0.0,
         }
     }
 
@@ -154,6 +183,16 @@ impl DeviceTier {
 
     fn drops(mut self, rate: f64) -> Self {
         self.drop_rate = rate;
+        self
+    }
+
+    fn joins(mut self, round: usize) -> Self {
+        self.join_round = round;
+        self
+    }
+
+    fn absent(mut self, rate: f64) -> Self {
+        self.absent_rate = rate;
         self
     }
 
@@ -189,6 +228,11 @@ impl DeviceTier {
                     .ok_or_else(|| anyhow::anyhow!("tier {name}: {key} must be a number")),
             }
         };
+        let join_round = num("join_round", 0.0)?;
+        anyhow::ensure!(
+            join_round >= 0.0 && join_round.fract() == 0.0,
+            "tier {name}: join_round must be a non-negative integer"
+        );
         Ok(Self {
             frac,
             mem,
@@ -196,6 +240,8 @@ impl DeviceTier {
             down_mbps: num("down_mbps", 10.0)?,
             compute: num("compute", 1.0)?,
             drop_rate: num("drop_rate", 0.0)?,
+            join_round: join_round as usize,
+            absent_rate: num("absent_rate", 0.0)?,
             name,
         })
     }
@@ -210,6 +256,10 @@ pub struct CapabilityProfile {
     pub down_mbps: f64,
     pub compute: f64,
     pub drop_rate: f64,
+    /// first round this client is part of the federation (late joiner)
+    pub join_round: usize,
+    /// per-round whole-round absence probability (churn)
+    pub absent_rate: f64,
 }
 
 impl CapabilityProfile {
@@ -231,8 +281,33 @@ impl CapabilityProfile {
             down_mbps: t.down_mbps,
             compute: t.compute,
             drop_rate: t.drop_rate,
+            join_round: t.join_round,
+            absent_rate: t.absent_rate,
         }
     }
+}
+
+/// Churn trace: is this client part of round `round` at all? `false`
+/// before the tier's `join_round` (late joiner) or on a whole-round
+/// absence drawn from the deterministic per-(round, client) churn stream
+/// ([`CHURN_SALT`] — separate from the mid-round drop trace, so default
+/// scenarios stay bit-identical). Absent clients transmit nothing and go
+/// stale; their next participation pays the catch-up downlink
+/// ([`crate::ckpt::CheckpointStore`]) when checkpointing is enabled.
+pub fn is_available(
+    profile: &CapabilityProfile,
+    master_seed: u64,
+    round: usize,
+    cid: usize,
+) -> bool {
+    if round < profile.join_round {
+        return false;
+    }
+    if profile.absent_rate <= 0.0 {
+        return true;
+    }
+    let mut rng = crate::fed::client::round_client_rng(master_seed, CHURN_SALT, round, cid);
+    rng.next_f64() >= profile.absent_rate
 }
 
 // ---------------------------------------------------------------------------
@@ -280,12 +355,13 @@ impl Default for Scenario {
 
 /// Preset names accepted by `--scenario` (besides a JSON file path or an
 /// inline `{...}` spec).
-pub const PRESETS: [&str; 5] = [
+pub const PRESETS: [&str; 6] = [
     "binary",
     "uniform-high",
     "edge-spectrum",
     "stragglers",
     "flaky",
+    "churn",
 ];
 
 fn binary_tiers() -> Vec<DeviceTier> {
@@ -352,6 +428,27 @@ impl Scenario {
                     .into_iter()
                     .map(|t| t.drops(0.25))
                     .collect(),
+                deadline_ms: 0.0,
+            },
+            // the late-join / rejoin workload the ckpt subsystem exists
+            // for: an anchor tier that is always there, a flaky tier that
+            // sits out a third of its rounds (rejoining stale), and a
+            // late tier that only joins at round 8 — inside the ZO phase
+            // at smoke scale (pivot 6), during warm-up at larger scales.
+            "churn" => ScenarioSpec {
+                name: name.into(),
+                tiers: vec![
+                    DeviceTier::new("anchor", 0.25, MemBudget::FitsBackprop)
+                        .net(100.0, 100.0)
+                        .speed(4.0),
+                    DeviceTier::new("flaky", 0.35, MemBudget::FitsZoOnly)
+                        .net(8.0, 8.0)
+                        .absent(0.35),
+                    DeviceTier::new("late", 0.4, MemBudget::FitsZoOnly)
+                        .net(8.0, 8.0)
+                        .drops(0.1)
+                        .joins(8),
+                ],
                 deadline_ms: 0.0,
             },
             _ => return None,
@@ -440,6 +537,11 @@ impl Scenario {
             anyhow::ensure!(
                 (0.0..=1.0).contains(&t.drop_rate),
                 "tier {}: drop_rate must be in [0,1]",
+                t.name
+            );
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&t.absent_rate),
+                "tier {}: absent_rate must be in [0,1]",
                 t.name
             );
             sum += t.frac;
@@ -618,6 +720,8 @@ mod tests {
             down_mbps: down,
             compute,
             drop_rate,
+            join_round: 0,
+            absent_rate: 0.0,
         }
     }
 
@@ -751,6 +855,78 @@ mod tests {
         let o = simulate_round(&p, &plan, 1_000_000, 0.001, &mut trace);
         assert!(o.survives);
         assert_eq!((o.up_bytes, o.down_bytes), (0, 0));
+    }
+
+    #[test]
+    fn churn_preset_has_late_joiners_and_absences() {
+        let s = Scenario::preset("churn").unwrap();
+        s.validate().unwrap();
+        let Scenario::Custom(spec) = &s else { panic!() };
+        assert!(spec.tiers.iter().any(|t| t.join_round > 0));
+        assert!(spec.tiers.iter().any(|t| t.absent_rate > 0.0));
+        // anchor tier is always available
+        let cost = probe_cost();
+        let profiles = s.sample_profiles(8, 0, 0, &cost);
+        let anchor = profiles.iter().find(|p| p.tier == "anchor").unwrap();
+        for round in 0..20 {
+            assert!(is_available(anchor, 0, round, 0));
+        }
+    }
+
+    #[test]
+    fn availability_respects_join_round_and_is_deterministic() {
+        let mut late = profile(10.0, 10.0, 1.0, 0.0);
+        late.join_round = 5;
+        for round in 0..5 {
+            assert!(!is_available(&late, 7, round, 3));
+        }
+        assert!(is_available(&late, 7, 5, 3));
+        // absences: deterministic per (seed, round, cid), rate-0 never
+        // absent, rate-1 always absent
+        let mut flaky = profile(10.0, 10.0, 1.0, 0.0);
+        flaky.absent_rate = 0.5;
+        let mut away = 0;
+        for round in 0..200 {
+            let a = is_available(&flaky, 7, round, 3);
+            assert_eq!(a, is_available(&flaky, 7, round, 3));
+            if !a {
+                away += 1;
+            }
+        }
+        assert!((50..150).contains(&away), "absences {away}/200 at rate 0.5");
+        flaky.absent_rate = 1.0;
+        assert!(!is_available(&flaky, 7, 0, 0));
+        flaky.absent_rate = 0.0;
+        assert!(is_available(&flaky, 7, 0, 0));
+    }
+
+    #[test]
+    fn json_join_round_and_absent_rate_parse_and_validate() {
+        let sc = Scenario::load(
+            r#"{"tiers": [
+                 {"frac": 0.5, "mem": "backprop"},
+                 {"frac": 0.5, "mem": "zo", "join_round": 12, "absent_rate": 0.2}
+               ]}"#,
+        )
+        .unwrap();
+        let Scenario::Custom(spec) = &sc else { panic!() };
+        assert_eq!(spec.tiers[1].join_round, 12);
+        assert_eq!(spec.tiers[1].absent_rate, 0.2);
+        assert_eq!(spec.tiers[0].join_round, 0);
+        // out-of-range absent_rate rejected
+        assert!(Scenario::load(
+            r#"{"tiers": [{"frac": 1.0, "mem": "zo", "absent_rate": 1.5}]}"#
+        )
+        .is_err());
+        // join_round must be a non-negative integer — no silent flooring
+        assert!(Scenario::load(
+            r#"{"tiers": [{"frac": 1.0, "mem": "zo", "join_round": 8.9}]}"#
+        )
+        .is_err());
+        assert!(Scenario::load(
+            r#"{"tiers": [{"frac": 1.0, "mem": "zo", "join_round": -3}]}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -191,16 +191,39 @@ pub fn apply_zo_update_sharded(
     lr_server: f32,
     workers: usize,
 ) {
+    let items = zo_update_items(contributions, cfg, lr_client, lr_server);
+    crate::model::params::perturb_axpy_many_sharded(
+        &mut global.0,
+        &items,
+        cfg.tau,
+        cfg.dist,
+        workers,
+    );
+}
+
+/// The order-canonical fused (seed, coeff) item list of one ZOUPDATE —
+/// the single source of truth shared by the live server pass
+/// ([`apply_zo_update_sharded`]) and the checkpoint/catch-up seed log
+/// ([`crate::ckpt::CheckpointStore`]): replaying these items through
+/// `perturb_axpy_many_sharded` from the same starting weights reproduces
+/// the server's update bit for bit. Empty when no contribution carries
+/// samples (an all-drop round is the identity update).
+pub fn zo_update_items(
+    contributions: &[ZoContribution],
+    cfg: &ZoConfig,
+    lr_client: f32,
+    lr_server: f32,
+) -> Vec<(u64, f32)> {
     let n_total: f64 = contributions.iter().map(|c| c.n_samples as f64).sum();
     if n_total == 0.0 {
-        return;
+        return Vec::new();
     }
     // The f32 product preserves bit-compatibility with the historical
     // single-lr API for grad_steps = 1 runs.
     let lr_final = lr_client * lr_server;
-    // Gather every (seed, coeff) pair, then apply in ONE fused pass over
-    // the weights (perturb_axpy_many) — the updates are linear in w, so
-    // order is immaterial up to f32 rounding (§Perf L3).
+    // Gather every (seed, coeff) pair for ONE fused pass over the weights
+    // (perturb_axpy_many) — the updates are linear in w, so order is
+    // immaterial up to f32 rounding (§Perf L3).
     let mut items: Vec<(u64, f32)> = Vec::new();
     for c in contributions {
         let weight = c.n_samples as f64 / n_total;
@@ -218,13 +241,7 @@ pub fn apply_zo_update_sharded(
             items.push((seed, coeff as f32));
         }
     }
-    crate::model::params::perturb_axpy_many_sharded(
-        &mut global.0,
-        &items,
-        cfg.tau,
-        cfg.dist,
-        workers,
-    );
+    items
 }
 
 /// Bytes on the wire for one ZO round, per participating client (measured
@@ -273,7 +290,10 @@ pub struct ZoClientCharge {
     pub issued_seeds: usize,
     /// ΔL payload bytes actually uploaded (≤ issued_seeds · 4)
     pub up_bytes: u64,
-    /// seed-issue bytes actually downloaded (≤ issued_seeds · 8)
+    /// bytes actually downloaded on the client's pre-round leg: the seed
+    /// issue (≤ issued_seeds · 8) plus, for stale clients under the
+    /// `ckpt` subsystem, the catch-up payload (snapshot and/or replay
+    /// tail) that rides the same download
     pub seed_down_bytes: u64,
     pub survives: bool,
 }
@@ -281,7 +301,8 @@ pub struct ZoClientCharge {
 /// Byte-accurate round totals under capability profiles and drop
 /// patterns, generalizing [`zo_round_ledger`]:
 ///
-/// * per-client seed-issue downlink and ΔL uplink are charged as
+/// * per-client pre-round downlink (seed issue, plus any `ckpt`
+///   catch-up payload riding the same leg) and ΔL uplink are charged as
 ///   *measured* (partial transmissions included);
 /// * the end-of-round broadcast carries only the **surviving** (seed, ΔL)
 ///   pairs (12 B each — the pairs actually folded into the update) and
@@ -512,6 +533,45 @@ mod tests {
     }
 
     #[test]
+    fn update_items_replay_matches_apply() {
+        // the ckpt contract: replaying zo_update_items through the fused
+        // pass is bit-identical to apply_zo_update itself
+        let cfg = ZoConfig::default();
+        let contribs = vec![
+            ZoContribution {
+                client: 0,
+                seeds: vec![5, 6, 7],
+                delta_l: vec![0.4, -0.2, 0.1],
+                n_samples: 10,
+            },
+            ZoContribution {
+                client: 1,
+                seeds: vec![11, 12, 13],
+                delta_l: vec![-0.3, 0.0, 0.25],
+                n_samples: 30,
+            },
+        ];
+        let mut a = ParamVec(vec![0.1f32; 2048]);
+        let mut b = a.clone();
+        apply_zo_update(&mut a, &contribs, &cfg, 0.7, 0.3);
+        let items = zo_update_items(&contribs, &cfg, 0.7, 0.3);
+        assert_eq!(items.len(), 6);
+        crate::model::params::perturb_axpy_many_sharded(
+            &mut b.0, &items, cfg.tau, cfg.dist, 1,
+        );
+        assert_eq!(a.0, b.0);
+        // zero-sample rounds are the identity update
+        assert!(zo_update_items(&[], &cfg, 1.0, 1.0).is_empty());
+        let zero = ZoContribution {
+            client: 0,
+            seeds: vec![1, 2, 3],
+            delta_l: vec![1.0; 3],
+            n_samples: 0,
+        };
+        assert!(zo_update_items(&[zero], &cfg, 1.0, 1.0).is_empty());
+    }
+
+    #[test]
     fn zoopt_rejects_bad_seed_count() {
         let be = LinearBackend::new(4, 2, 4);
         let g = ParamVec::zeros(be.dim());
@@ -651,10 +711,16 @@ mod tests {
                     down_mbps: 0.01 + rng.next_f64() * 20.0,
                     compute: 0.05 + rng.next_f64() * 4.0,
                     drop_rate: rng.next_f64(),
+                    join_round: 0,
+                    absent_rate: 0.0,
                 };
                 let issued_seeds = 1 + rng.below(48);
+                // catch-up downlink (the ckpt subsystem's min(snapshot,
+                // tail) charge) rides the same download leg as the seed
+                // issue — additivity must hold with it in the plan too
+                let catch_up = rng.below(1 << 16) as u64;
                 let plan = RoundPlan {
-                    down_bytes: (issued_seeds * 8) as u64,
+                    down_bytes: catch_up + (issued_seeds * 8) as u64,
                     passes: rng.below(2000) as f64 * 2.0,
                     up_bytes: (issued_seeds * 4) as u64,
                 };

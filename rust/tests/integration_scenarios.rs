@@ -1,6 +1,7 @@
 //! Integration tests for the device-capability scenario engine: dropout /
 //! straggler fleets end-to-end through the public API, the all-drop edge,
-//! and compatibility of profile sampling with the legacy binary split.
+//! compatibility of profile sampling with the legacy binary split, and
+//! the checkpoint/catch-up subsystem's bit-exact rejoin guarantee.
 
 use std::sync::Arc;
 
@@ -129,6 +130,103 @@ fn scenario_loads_from_json_file_and_drives_a_run() {
     assert!(fed.log.final_accuracy().is_finite());
     assert!(fed.global.is_finite());
     std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn rejoin_after_drop_reconstructs_bit_identical_to_continuous() {
+    // acceptance: a client that drops at round r and rejoins at round
+    // r + k reconstructs the global parameters — snapshot + tail replay
+    // through the same sharded fused pass — bit-identical to a client
+    // that never left (which simply holds the live global), at every
+    // worker count {1, 2, 4}. The churn fleet supplies real drop/rejoin/
+    // late-join events; ckpt_every = 2 exercises compaction mid-run.
+    let mut finals: Vec<(ParamVec, u64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut cfg = Scale::Smoke.fed();
+        cfg.lr_client_warm = 0.06;
+        cfg.lr_client_zo = 1.0;
+        cfg.lr_server_zo = 0.01;
+        cfg.zo.eps = 1e-3;
+        cfg.threads = threads;
+        cfg.ckpt_every = 2;
+        cfg.scenario = Scenario::preset("churn").unwrap();
+        let (shards, test) = setup(&cfg);
+        let be = probe();
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg.clone(), &be, shards, test, init).unwrap();
+        // the live global *entering* each round — what a continuously
+        // participating client holds at that point
+        let mut entering: Vec<ParamVec> = Vec::new();
+        while fed.round < cfg.rounds_total {
+            entering.push(fed.global.clone());
+            fed.step().unwrap();
+        }
+        entering.push(fed.global.clone());
+
+        // every round the store can still serve must reconstruct to the
+        // exact live state (base_round moved forward by compaction)
+        let base = fed.ckpt.base_round();
+        let top = base + fed.ckpt.tail_rounds();
+        assert!(top == cfg.rounds_total, "store must cover the full run");
+        for target in base..=top {
+            let rebuilt = fed
+                .ckpt
+                .reconstruct(target, cfg.zo.tau, cfg.zo.dist, threads)
+                .unwrap();
+            assert_eq!(
+                rebuilt, entering[target],
+                "rejoin reconstruction diverged at round {target} (threads {threads})"
+            );
+        }
+        // churn + checkpointing must actually charge catch-up downlink
+        assert!(fed.ledger.catch_up_down_total > 0);
+        assert!(fed.log.total_dropped() > 0, "churn fleet must miss rounds");
+        finals.push((fed.global.clone(), fed.ledger.catch_up_down_total));
+    }
+    // and the whole thing is worker-count invariant, catch-up included
+    for f in &finals[1..] {
+        assert_eq!(f.0, finals[0].0, "weights must not depend on threads");
+        assert_eq!(f.1, finals[0].1, "catch-up bytes must not depend on threads");
+    }
+}
+
+#[test]
+fn checkpointing_is_observational_without_deadlines() {
+    // with no round deadline, the catch-up download can never change who
+    // survives — so enabling checkpointing changes ONLY the byte
+    // accounting: weights and train signals are bit-identical to the
+    // disabled run, and the default (disabled) run charges nothing.
+    let run = |ckpt_every: usize| {
+        let mut cfg = Scale::Smoke.fed();
+        cfg.lr_client_warm = 0.06;
+        cfg.lr_client_zo = 1.0;
+        cfg.lr_server_zo = 0.01;
+        cfg.zo.eps = 1e-3;
+        cfg.ckpt_every = ckpt_every;
+        cfg.scenario = Scenario::preset("churn").unwrap();
+        assert_eq!(cfg.scenario.deadline_ms(), 0.0);
+        let (shards, test) = setup(&cfg);
+        let be = probe();
+        let mut fed =
+            Federation::new(cfg, &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+        fed.run().unwrap();
+        (fed.global.clone(), fed.log.clone(), fed.ledger.clone())
+    };
+    let (g_off, log_off, led_off) = run(0);
+    let (g_on, log_on, led_on) = run(3);
+    assert_eq!(g_off, g_on, "checkpointing must not move the weights");
+    for (a, b) in log_off.rounds.iter().zip(&log_on.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.dropped, b.dropped);
+    }
+    assert_eq!(led_off.catch_up_down_total, 0, "disabled ⇒ free rejoin");
+    assert_eq!(log_off.total_catch_up_down(), 0);
+    assert!(led_on.catch_up_down_total > 0, "enabled ⇒ honest catch-up charge");
+    assert_eq!(log_on.total_catch_up_down(), led_on.catch_up_down_total);
+    assert!(
+        led_on.down_total >= led_off.down_total,
+        "catch-up only ever adds downlink"
+    );
 }
 
 #[test]
