@@ -151,7 +151,31 @@ fn main() {
                 black_box(fed.zo_round().unwrap());
             });
         }
+
+        // adaptive probe budgets: the planner's O(Q log S) inversion plus
+        // the heterogeneous-S round itself, vs the uniform row above
+        {
+            let mut c = cfg.clone();
+            c.scenario = zowarmup::sim::Scenario::preset("edge-spectrum").unwrap();
+            c.zo.adaptive_s = true;
+            c.zo.s_min = 1;
+            c.zo.s_max = 16;
+            let shards = shards_from_partition(&src, &part);
+            let init = ParamVec::zeros(be.dim());
+            let mut fed =
+                Federation::new(c, &be, shards, test_src.clone(), init).unwrap();
+            b.iter("zo_round Q=8 adaptive-S edge-spectrum", || {
+                black_box(fed.zo_round().unwrap());
+            });
+            let all: Vec<usize> = (0..8).collect();
+            b.iter("planned_seed_counts K=8 (planner only)", || {
+                black_box(fed.planned_seed_counts(&all));
+            });
+        }
     }
 
     b.report();
+    if let Err(e) = b.write_json("runs/BENCH_fed_primitives.json") {
+        eprintln!("bench json: {e}");
+    }
 }

@@ -4,17 +4,25 @@
 //! feasible model size (§Perf L3).
 
 use zowarmup::ckpt::CheckpointStore;
-use zowarmup::config::ZoConfig;
+use zowarmup::config::{VarianceGuard, ZoConfig};
 use zowarmup::model::params::ParamVec;
-use zowarmup::util::bench::{black_box, Bench};
+use zowarmup::util::bench::{black_box, quick, Bench};
 use zowarmup::util::rng::{Distribution, PerturbStream, Xoshiro256};
-use zowarmup::zo::{apply_zo_update, ZoContribution};
+use zowarmup::zo::{apply_zo_update, zo_update_items, ZoContribution};
 
 fn main() {
     let mut b = Bench::new("zo_core");
+    // quick mode (ZOWARMUP_BENCH_QUICK=1, the CI bench-smoke step) skips
+    // the ResNet-scale d=11M cases so the suite finishes in seconds
+    let full = !quick();
 
     // raw stream generation
-    for d in [44_370usize, 175_258, 11_173_962] {
+    let stream_dims: &[usize] = if full {
+        &[44_370, 175_258, 11_173_962]
+    } else {
+        &[44_370, 175_258]
+    };
+    for &d in stream_dims {
         let mut out = vec![0.0f32; d];
         b.iter_with_items(&format!("rademacher_stream d={d}"), d as f64, || {
             let mut s = PerturbStream::new(7, 0.75, Distribution::Rademacher);
@@ -33,7 +41,8 @@ fn main() {
     }
 
     // the fused perturb-axpy (the protocol's unit of work)
-    for d in [175_258usize, 11_173_962] {
+    let axpy_dims: &[usize] = if full { &[175_258, 11_173_962] } else { &[175_258] };
+    for &d in axpy_dims {
         let mut w = ParamVec(vec![0.1f32; d]);
         b.iter_with_items(&format!("perturb_axpy d={d}"), d as f64, || {
             w.perturb_axpy(13, 0.75, Distribution::Rademacher, 1e-4);
@@ -52,6 +61,7 @@ fn main() {
                 seeds: vec![c as u64 * 3, c as u64 * 3 + 1, c as u64 * 3 + 2],
                 delta_l: vec![0.01, -0.02, 0.005],
                 n_samples: 100,
+                s_block: 3,
             })
             .collect();
         b.iter_with_items("apply_zo_update d=1M Q=10 S=3", (d * 30) as f64, || {
@@ -69,6 +79,33 @@ fn main() {
                         &mut g, &contribs, &cfg, 1.0, 0.01, workers,
                     );
                     black_box(&g.0[0]);
+                },
+            );
+        }
+        // the item-fold itself (no weight pass): the variance guards add
+        // per-contribution statistics on top of the plain fold —
+        // negligible next to the O(d) axpy, measured here to keep it so.
+        // Heterogeneous S_j blocks (adaptive-S shape) ride the same path.
+        let hetero: Vec<ZoContribution> = (0..10)
+            .map(|c| {
+                let s = 2 + (c % 5); // S_j in 2..=6
+                ZoContribution {
+                    client: c,
+                    seeds: (0..s as u64).map(|i| c as u64 * 100 + i).collect(),
+                    delta_l: (0..s).map(|i| 0.01 * (i as f64 - 2.0)).collect(),
+                    n_samples: 100,
+                    s_block: s,
+                }
+            })
+            .collect();
+        for guard in [VarianceGuard::Off, VarianceGuard::InvVar, VarianceGuard::Clip] {
+            let mut gcfg = cfg;
+            gcfg.guard = guard;
+            b.iter_with_items(
+                &format!("zo_update_items hetero Q=10 guard={}", guard.as_str()),
+                40.0,
+                || {
+                    black_box(zo_update_items(&hetero, &gcfg, 1.0, 0.01));
                 },
             );
         }
@@ -97,12 +134,13 @@ fn main() {
     // parallel vs sequential fused pass: the sharded variant splits the
     // weight vector into 64-aligned chunks with bit-exact stream
     // fast-forward (ZOUPDATE at ResNet scale is memory-bound single-core)
-    for workers in [1usize, 2, 4, 8] {
-        let d = 11_173_962;
+    for workers in if full { &[1usize, 2, 4, 8][..] } else { &[1usize, 2][..] } {
+        let &workers = workers;
+        let d = if full { 11_173_962 } else { 1_000_000 };
         let mut w = vec![0.1f32; d];
         let items: Vec<(u64, f32)> = (0..30).map(|i| (i as u64, 1e-4)).collect();
         b.iter_with_items(
-            &format!("perturb_axpy_many_sharded d=11M x30 w={workers}"),
+            &format!("perturb_axpy_many_sharded d={d} x30 w={workers}"),
             (d * 30) as f64,
             || {
                 zowarmup::model::params::perturb_axpy_many_sharded(
@@ -123,9 +161,9 @@ fn main() {
     // sharded fused pass the live server uses, so throughput here is the
     // rejoin latency bound (item-applications/s = d · items · rounds).
     {
-        let d = 11_173_962;
+        let d = if full { 11_173_962 } else { 1_000_000 };
         let init = ParamVec(vec![0.1f32; d]);
-        for &rounds in &[4usize, 16] {
+        for &rounds in if full { &[4usize, 16][..] } else { &[4usize][..] } {
             let mut store = CheckpointStore::new(rounds + 1, &init); // no compaction
             let mut live = init.clone();
             for r in 0..rounds {
@@ -142,7 +180,7 @@ fn main() {
             }
             for &workers in &[1usize, 4] {
                 b.iter_with_items(
-                    &format!("ckpt_tail_replay d=11M rounds={rounds} w={workers}"),
+                    &format!("ckpt_tail_replay d={d} rounds={rounds} w={workers}"),
                     (d * 30 * rounds) as f64,
                     || {
                         let p = store
@@ -167,5 +205,28 @@ fn main() {
         });
     }
 
+    // stream fast-forward: the O(log n) GF(2) jump vs the draw loop at
+    // the last-shard-worker offset PR 1 flagged (d=11M ⇒ ~175k draws per
+    // stream; ~4.6M across 30 streams). The jump makes setup offset-
+    // independent.
+    {
+        let n: u64 = 4_600_000;
+        b.iter("xoshiro_discard jump n=4.6M", || {
+            let mut rng = Xoshiro256::seed_from(9);
+            rng.discard(n);
+            black_box(rng.next_u64());
+        });
+        b.iter("xoshiro_discard loop n=100k (pre-jump path shape)", || {
+            let mut rng = Xoshiro256::seed_from(9);
+            for _ in 0..100_000u64 {
+                rng.next_u64();
+            }
+            black_box(rng.next_u64());
+        });
+    }
+
     b.report();
+    if let Err(e) = b.write_json("runs/BENCH_zo_core.json") {
+        eprintln!("bench json: {e}");
+    }
 }

@@ -12,6 +12,14 @@
 //!
 //! Run cold (`pivot = 0`) it reproduces Table 2's "nc" rows; run as the
 //! step-2 method after a warm start it is "ZOWarmUp + FedKSeed".
+//!
+//! **Probe budgeting:** FedKSeed's candidate pool and `local_steps` are
+//! uniform across clients by construction — the capability-adaptive
+//! per-client probe budgets of `--adaptive-s` (DESIGN.md §9) apply only
+//! to ZOWarmUp's fresh-seed protocol, where the server controls each
+//! client's per-round seed block. This baseline therefore always runs
+//! uniform budgets and logs `seeds_issued = 0` / `eff_var = 0` in the
+//! per-round CSV columns.
 
 use std::time::Instant;
 
@@ -227,6 +235,8 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 train_signal: 0.0,
                 dropped,
                 catch_up_down: 0,
+                seeds_issued: 0,
+                eff_var: 0.0,
             });
         }
         let avg = weighted_average(&updates);
@@ -238,6 +248,8 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             train_signal: finite_signal(train.mean_loss()),
             dropped,
             catch_up_down: 0,
+            seeds_issued: 0,
+            eff_var: 0.0,
         })
     }
 
@@ -333,6 +345,13 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             }),
             dropped,
             catch_up_down: 0,
+            // the finite-pool protocol issues no fresh per-round seeds
+            // and reports no per-round estimator variance — the
+            // seeds_issued / eff_var columns are ZOWarmUp-specific
+            // (adaptive probe budgeting does not apply here; see the
+            // module docs)
+            seeds_issued: 0,
+            eff_var: 0.0,
         })
     }
 
@@ -364,6 +383,8 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 bytes_down: down,
                 dropped: summary.dropped,
                 catch_up_down: summary.catch_up_down,
+                seeds_issued: summary.seeds_issued,
+                eff_var: summary.eff_var,
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
         }

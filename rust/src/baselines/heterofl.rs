@@ -9,6 +9,13 @@
 //! The slice correspondence is derived mechanically from the paired
 //! manifests (`cnn10` / `cnn10_half` share tensor names; every half dim ≤
 //! full dim), so it works unchanged for any architecture pair.
+//!
+//! **Capability adaptation:** HeteroFL adapts the *model width* to device
+//! capability; ZOWarmUp's `--adaptive-s` (DESIGN.md §9) adapts the
+//! *probe count* instead, keeping every client on the full model. The
+//! two are the natural cross-method comparison for the adaptive
+//! ablation (`zowarmup exp adaptive`); this baseline runs no seed
+//! protocol, so its per-round `seeds_issued` / `eff_var` columns are 0.
 
 use crate::comm::{CommLedger, CostModel};
 use crate::config::FedConfig;
@@ -289,6 +296,11 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
             train_signal: crate::fed::server::finite_signal(train.mean_loss()),
             dropped,
             catch_up_down: 0,
+            // width slicing, not probe counts, is this baseline's
+            // capability adaptation — the seeds_issued / eff_var columns
+            // stay 0 (see the module docs)
+            seeds_issued: 0,
+            eff_var: 0.0,
         })
     }
 
@@ -315,6 +327,8 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
                 bytes_down: down,
                 dropped: summary.dropped,
                 catch_up_down: summary.catch_up_down,
+                seeds_issued: summary.seeds_issued,
+                eff_var: summary.eff_var,
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
         }

@@ -143,6 +143,11 @@ pub struct CommLedger {
     /// `min(snapshot_bytes, tail_seed_bytes)` charges, measured with
     /// partial transmissions). 0 when `ckpt_every = 0`.
     pub catch_up_down_total: u64,
+    /// total probes issued across every ZO round (the adaptive-S
+    /// accounting counterpart of the byte totals: uniform runs issue
+    /// `rounds · Q · S · steps`, adaptive runs whatever the per-client
+    /// planner affords)
+    pub seeds_total: u64,
 }
 
 impl CommLedger {
@@ -155,6 +160,11 @@ impl CommLedger {
     /// Attribute `bytes` of already-recorded downlink to catch-up.
     pub fn record_catch_up(&mut self, bytes: u64) {
         self.catch_up_down_total += bytes;
+    }
+
+    /// Count probes issued this round (seed derivations, not bytes).
+    pub fn record_seeds(&mut self, seeds: u64) {
+        self.seeds_total += seeds;
     }
 
     pub fn rounds(&self) -> usize {
@@ -241,5 +251,11 @@ mod tests {
         l.record_catch_up(2);
         assert_eq!(l.catch_up_down_total, 7);
         assert_eq!(l.down_total, 22);
+        // issued-seed accounting is a separate counter, not bytes
+        assert_eq!(l.seeds_total, 0);
+        l.record_seeds(12);
+        l.record_seeds(9);
+        assert_eq!(l.seeds_total, 21);
+        assert_eq!((l.up_total, l.down_total), (11, 22));
     }
 }

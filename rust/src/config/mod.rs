@@ -32,16 +32,73 @@ impl ServerOpt {
     }
 }
 
+/// How the server de-noises the aggregated SPSA estimate before folding
+/// contributions into the fused (seed, coeff) item list
+/// (`zo::zo_update_items`; DESIGN.md §9). `Off` reproduces the plain
+/// n_j/n_Q weighting bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarianceGuard {
+    /// plain n_j/n_Q weighting (the seed behavior)
+    Off,
+    /// scale each contribution's weight by the inverse of its final-block
+    /// ghat sample variance (floored, renormalized) — noisy clients count
+    /// less, tight estimates count more
+    InvVar,
+    /// clamp every |ΔL| to the fleet's `zo::GUARD_CLIP_QUANTILE` quantile
+    /// before forming ghat — bounds the reach of outlier probes
+    Clip,
+}
+
+impl VarianceGuard {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(VarianceGuard::Off),
+            "invvar" => Some(VarianceGuard::InvVar),
+            "clip" => Some(VarianceGuard::Clip),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            VarianceGuard::Off => "off",
+            VarianceGuard::InvVar => "invvar",
+            VarianceGuard::Clip => "clip",
+        }
+    }
+}
+
 /// ZO-phase hyperparameters (§A.5 defaults: ε=1e-4, S=3, τ=0.75).
 #[derive(Debug, Clone, Copy)]
 pub struct ZoConfig {
     pub eps: f32,
     pub tau: f32,
+    /// probes per client per local step. With `adaptive_s` off this is
+    /// the uniform S every ZO participant runs; with it on it is the
+    /// *reference* S — the per-client planner (`sim::max_affordable_s`)
+    /// sizes the no-deadline round budget from the slowest sampled
+    /// client's timeline at this S.
     pub s_seeds: usize,
     pub dist: Distribution,
     /// local ZO gradient steps per round (1 = the paper's method; >1 for
     /// the Table 3 ablation, splitting the client's data across steps)
     pub grad_steps: usize,
+    /// capability-adaptive per-client probe budgets: each sampled ZO
+    /// client is issued the largest S_j ∈ [s_min, s_max] whose simulated
+    /// download → compute → upload timeline (catch-up charge included)
+    /// fits the round budget — the scenario deadline when one is set,
+    /// else the slowest sampled client's uniform-S timeline. Default off:
+    /// every client gets exactly `s_seeds`, bit-identical to the seed
+    /// behavior. CLI `--adaptive-s true`.
+    pub adaptive_s: bool,
+    /// adaptive-S floor (CLI `--s-min`; ≥ 1)
+    pub s_min: usize,
+    /// adaptive-S ceiling (CLI `--s-max`; `s_max · grad_steps` must fit
+    /// the 2^16 per-round seed-index field)
+    pub s_max: usize,
+    /// variance-guard mode for the server aggregation (CLI
+    /// `--guard off|invvar|clip`)
+    pub guard: VarianceGuard,
 }
 
 impl Default for ZoConfig {
@@ -52,6 +109,10 @@ impl Default for ZoConfig {
             s_seeds: 3,
             dist: Distribution::Rademacher,
             grad_steps: 1,
+            adaptive_s: false,
+            s_min: 1,
+            s_max: 16,
+            guard: VarianceGuard::Off,
         }
     }
 }
@@ -206,6 +267,27 @@ impl FedConfig {
             self.zo.s_seeds.saturating_mul(self.zo.grad_steps),
             crate::zo::MAX_SEEDS_PER_ROUND
         );
+        // adaptive-S bounds: the planner's ceiling must also respect the
+        // 16-bit per-round seed-index field, and the range must be sane.
+        // With adaptive_s off the knobs are inert and left unvalidated
+        // against the seed field (a large s_max can sit in a config file
+        // without effect).
+        anyhow::ensure!(self.zo.s_min >= 1, "s_min must be >= 1");
+        anyhow::ensure!(
+            self.zo.s_min <= self.zo.s_max,
+            "s_min {} > s_max {}",
+            self.zo.s_min,
+            self.zo.s_max
+        );
+        if self.zo.adaptive_s {
+            anyhow::ensure!(
+                self.zo.s_max.saturating_mul(self.zo.grad_steps)
+                    <= crate::zo::MAX_SEEDS_PER_ROUND,
+                "s_max * grad_steps = {} exceeds the per-round seed limit {}",
+                self.zo.s_max.saturating_mul(self.zo.grad_steps),
+                crate::zo::MAX_SEEDS_PER_ROUND
+            );
+        }
         self.scenario.validate()?;
         Ok(())
     }
@@ -228,6 +310,13 @@ impl FedConfig {
         self.zo.tau = a.f64_or("tau", self.zo.tau as f64)? as f32;
         self.zo.s_seeds = a.usize_or("seeds-s", self.zo.s_seeds)?;
         self.zo.grad_steps = a.usize_or("grad-steps", self.zo.grad_steps)?;
+        self.zo.adaptive_s = a.bool_or("adaptive-s", self.zo.adaptive_s)?;
+        self.zo.s_min = a.usize_or("s-min", self.zo.s_min)?;
+        self.zo.s_max = a.usize_or("s-max", self.zo.s_max)?;
+        if let Some(g) = a.get("guard") {
+            self.zo.guard = VarianceGuard::parse(g)
+                .ok_or_else(|| anyhow::anyhow!("bad --guard {g:?} (off|invvar|clip)"))?;
+        }
         self.eval_every = a.usize_or("eval-every", self.eval_every)?;
         self.seed = a.usize_or("seed", self.seed as usize)? as u64;
         self.mixed_step2 = a.bool_or("mixed-step2", self.mixed_step2)?;
@@ -418,6 +507,64 @@ mod tests {
         let mut c = FedConfig::default();
         c.clients = crate::zo::MAX_CLIENTS + 1;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn adaptive_s_knobs_parse_and_validate() {
+        let argv: Vec<String> =
+            "--adaptive-s true --s-min 2 --s-max 24 --guard invvar"
+                .split_whitespace()
+                .map(String::from)
+                .collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = FedConfig::default();
+        assert!(!c.zo.adaptive_s); // default off: seed-compatible
+        assert_eq!(c.zo.guard, VarianceGuard::Off);
+        c.apply_args(&a).unwrap();
+        assert!(c.zo.adaptive_s);
+        assert_eq!((c.zo.s_min, c.zo.s_max), (2, 24));
+        assert_eq!(c.zo.guard, VarianceGuard::InvVar);
+        // also flows through JSON configs
+        let j = Json::parse(r#"{"adaptive-s": true, "s-max": 8, "guard": "clip"}"#).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_json(&j).unwrap();
+        assert!(c.zo.adaptive_s);
+        assert_eq!(c.zo.s_max, 8);
+        assert_eq!(c.zo.guard, VarianceGuard::Clip);
+        // bad guard mode rejected
+        let bad: Vec<String> = vec!["--guard".into(), "median".into()];
+        let a = Args::parse(&bad).unwrap();
+        assert!(FedConfig::default().apply_args(&a).is_err());
+    }
+
+    #[test]
+    fn adaptive_s_range_validation() {
+        let mut c = FedConfig::default();
+        c.zo.s_min = 0;
+        assert!(c.validate().is_err());
+        let mut c = FedConfig::default();
+        c.zo.s_min = 9;
+        c.zo.s_max = 4;
+        assert!(c.validate().is_err());
+        // the 2^16 seed field bounds s_max only when the planner can
+        // actually issue it
+        let mut c = FedConfig::default();
+        c.zo.grad_steps = 16;
+        c.zo.s_max = 4097; // 4097 * 16 > 2^16
+        assert!(c.validate().is_ok(), "inert knobs stay unvalidated");
+        c.zo.adaptive_s = true;
+        assert!(c.validate().is_err());
+        c.zo.s_max = 4096; // exactly 2^16: still representable
+        c.zo.s_min = 1;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn variance_guard_round_trips() {
+        for g in [VarianceGuard::Off, VarianceGuard::InvVar, VarianceGuard::Clip] {
+            assert_eq!(VarianceGuard::parse(g.as_str()), Some(g));
+        }
+        assert_eq!(VarianceGuard::parse("nope"), None);
     }
 
     #[test]

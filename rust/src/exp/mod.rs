@@ -5,6 +5,7 @@
 //! writes raw CSVs under runs/.
 
 pub mod ablations;
+pub mod adaptive;
 pub mod ckpt;
 pub mod common;
 pub mod curves;
@@ -48,9 +49,11 @@ pub fn run(
         "fig5" => fig5::run(scale, artifacts_dir, scenario),
         "fig6" => ablations::fig6(scale, scenario),
         "fig7" => ablations::fig7(scale, scenario),
-        // repo-native (not a paper artifact, so not in ALL_IDS): the
-        // checkpoint-cadence ablation under a churn fleet
+        // repo-native (not paper artifacts, so not in ALL_IDS): the
+        // checkpoint-cadence ablation under a churn fleet, and the
+        // adaptive-S / variance-guard ablation under a capability spread
         "ckpt" => ckpt::run(scale, scenario),
+        "adaptive" => adaptive::run(scale, scenario),
         "all" => {
             let mut out = String::new();
             for id in ALL_IDS {
@@ -61,7 +64,7 @@ pub fn run(
             Ok(out)
         }
         _ => anyhow::bail!(
-            "unknown experiment {id:?}; available: {:?}, \"ckpt\", or \"all\"",
+            "unknown experiment {id:?}; available: {:?}, \"ckpt\", \"adaptive\", or \"all\"",
             ALL_IDS
         ),
     }

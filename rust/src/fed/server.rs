@@ -88,6 +88,28 @@ pub struct RoundSummary {
     /// catch-up downlink actually transmitted this round (`ckpt`
     /// subsystem; 0 with checkpointing disabled or in warm rounds)
     pub catch_up_down: u64,
+    /// total probes the server derived for this round's ZO participants
+    /// (dropouts included — seeds are issued before the timeline runs);
+    /// 0 in warm rounds. Uniform `sample_zo · S · steps` with
+    /// `adaptive_s` off, heterogeneous per-client budgets with it on.
+    pub seeds_issued: usize,
+    /// effective variance of the aggregated SPSA step
+    /// ([`crate::zo::effective_variance`]); always finite, 0.0 in warm
+    /// or empty rounds
+    pub eff_var: f64,
+}
+
+/// One sampled ZO participant's resolved pre-round inputs — the unit the
+/// adaptive probe-budget planner works over (see
+/// [`Federation::zo_probe_budgets`]).
+struct ZoCandidate {
+    cid: usize,
+    /// local `grad_steps` blocks this client actually runs
+    steps: usize,
+    /// catch-up downlink fronting its download leg (`ckpt` subsystem)
+    catch_bytes: u64,
+    /// fused items it replays locally during catch-up
+    replay_items: usize,
 }
 
 /// Clamp a training signal to the finite domain the CSV log expects
@@ -287,6 +309,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 train_signal: 0.0,
                 dropped,
                 catch_up_down: 0,
+                seeds_issued: 0,
+                eff_var: 0.0,
             });
         }
         let avg = weighted_average(&updates);
@@ -300,7 +324,115 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             train_signal: finite_signal(train.mean_loss()),
             dropped,
             catch_up_down: 0,
+            seeds_issued: 0,
+            eff_var: 0.0,
         })
+    }
+
+    /// One ZO participant's resolved round inputs, gathered before the
+    /// probe-budget planning pass: its local step count, and the catch-up
+    /// charge fronting its download leg (`ckpt` subsystem).
+    fn zo_candidate(&self, cid: usize, d4: u64) -> ZoCandidate {
+        let catch_plan = self.ckpt.catch_up_plan(self.synced[cid], self.round, d4);
+        ZoCandidate {
+            cid,
+            steps: zo_step_count(self.clients[cid].n(), self.cfg.zo.grad_steps),
+            catch_bytes: catch_plan.map_or(0, |p| p.bytes),
+            replay_items: catch_plan.map_or(0, |p| p.replay_items),
+        }
+    }
+
+    /// The candidate's round timeline at probe count `s`: catch-up payload
+    /// and seed issue down, `2·s` forward passes per sample plus the
+    /// catch-up replay, ΔL scalars up — the exact plan
+    /// [`sim::simulate_round`] runs, which is what makes the planner's
+    /// inversion honest.
+    fn zo_candidate_plan(&self, c: &ZoCandidate, s: usize) -> sim::RoundPlan {
+        sim::RoundPlan {
+            down_bytes: c.catch_bytes + (s * c.steps * 8) as u64,
+            passes: sim::zo_passes(self.clients[c.cid].n(), s)
+                + sim::replay_passes(c.replay_items),
+            up_bytes: (s * c.steps * 4) as u64,
+        }
+    }
+
+    /// Per-candidate probe budgets S_j for one ZO round (the tentpole's
+    /// planner). With `adaptive_s` off every candidate gets the uniform
+    /// `cfg.zo.s_seeds` — bit-identical to the seed behavior. With it on,
+    /// the round budget is the scenario deadline when one is set;
+    /// otherwise the slowest candidate's uniform-S timeline (the
+    /// straggler-equalization envelope: the round takes as long as it
+    /// would have anyway, and faster clients convert their idle wait into
+    /// extra probes). Each candidate then receives the largest
+    /// `S_j ∈ [s_min, s_max]` whose full timeline — catch-up charge
+    /// included — fits ([`sim::max_affordable_s`]). Deterministic: no RNG
+    /// is consumed, so enabling the planner never perturbs the
+    /// drop/availability trace streams.
+    fn zo_probe_budgets(&self, cands: &[ZoCandidate]) -> Vec<usize> {
+        let z = &self.cfg.zo;
+        if !z.adaptive_s {
+            return vec![z.s_seeds; cands.len()];
+        }
+        let deadline = self.cfg.scenario.deadline_ms();
+        let budget = if deadline > 0.0 {
+            deadline
+        } else {
+            let s_ref = z.s_seeds.clamp(z.s_min, z.s_max);
+            cands
+                .iter()
+                .map(|c| {
+                    sim::plan_time_ms(
+                        &self.clients[c.cid].profile,
+                        &self.zo_candidate_plan(c, s_ref),
+                        self.cost.params,
+                    )
+                })
+                .fold(0.0f64, f64::max)
+        };
+        cands
+            .iter()
+            .map(|c| {
+                sim::max_affordable_s(
+                    &self.clients[c.cid].profile,
+                    self.cost.params,
+                    budget,
+                    z.s_min,
+                    z.s_max,
+                    |s| self.zo_candidate_plan(c, s),
+                )
+            })
+            .collect()
+    }
+
+    /// The probe budgets the planner would issue to a round *starting
+    /// now* whose ZO candidates are exactly the eligible clients among
+    /// `cids` (each paired with its id) — the deterministic inspection
+    /// surface behind the adaptive-S acceptance tests and
+    /// `examples/adaptive_fleet.rs`. Eligibility mirrors `zo_round`'s
+    /// classification pass: clients that are unavailable this round
+    /// (churn), run FO under `mixed_step2`, or cannot afford even the
+    /// ZO footprint are skipped — they would never enter the planner's
+    /// envelope. Note a real round plans over its *sampled* Q-subset, so
+    /// budgets there can differ when the sample excludes the slowest
+    /// client. Uniform `s_seeds` per client with `adaptive_s` off.
+    pub fn planned_seed_counts(&self, cids: &[usize]) -> Vec<(usize, usize)> {
+        let d4 = (self.backend.dim() * 4) as u64;
+        let cands: Vec<ZoCandidate> = cids
+            .iter()
+            .filter(|&&cid| {
+                let client = &self.clients[cid];
+                sim::is_available(&client.profile, self.cfg.seed, self.round, cid)
+                    && !(self.cfg.mixed_step2 && client.is_high())
+                    && client.profile.zo_capable(&self.cost)
+            })
+            .map(|&cid| self.zo_candidate(cid, d4))
+            .collect();
+        let budgets = self.zo_probe_budgets(&cands);
+        cands
+            .iter()
+            .zip(budgets)
+            .map(|(c, s)| (c.cid, s))
+            .collect()
     }
 
     /// One ZO round (Algorithm 1 lines 11-21). Sampled clients evaluate
@@ -328,6 +460,18 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     /// (broadcast received) ⇒ synced to the next, but only when the
     /// round stays seed-replayable (a mixed-FO fold is opaque — the
     /// broadcast alone cannot reach the post-fold global).
+    ///
+    /// Adaptive probe budgets (`cfg.zo.adaptive_s`): issuing happens in
+    /// two passes — a classification pass resolves each sampled client's
+    /// availability, FO/ZO role and catch-up charge; the planner
+    /// (`Self::zo_probe_budgets`) then picks every ZO candidate's
+    /// largest affordable S_j; and the simulation pass runs the exact
+    /// timelines and issues `S_j · steps` seeds. All planner inputs are
+    /// deterministic and consume no RNG, and the per-client trace streams
+    /// are pure functions of (master seed, round, client id) — so the
+    /// two-pass structure is invisible to worker-count invariance, and
+    /// with the planner off the pass is operation-for-operation the seed
+    /// behavior.
     pub fn zo_round(&mut self) -> anyhow::Result<RoundSummary> {
         // Q ⊆ K — all resource classes participate in step 2. With
         // mixed_step2 (§A.4 ablation) the sampled high-res clients do FO
@@ -337,108 +481,136 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
 
         enum Job {
             Fo { cid: usize, rng: Xoshiro256 },
-            Zo { cid: usize, seeds: Vec<u64> },
+            Zo { cid: usize, seeds: Vec<u64>, s_block: usize },
         }
         enum Out {
             Fo { cid: usize, w: ParamVec, sums: LossSums },
             Zo(ZoContribution),
         }
+        /// classification-pass verdict per sampled client, in picked order
+        enum Pending {
+            Dropped,
+            Fo(usize),
+            /// index into the ZO candidate list
+            Zo(usize),
+        }
 
-        // pre-derive every per-client random input (determinism rule 1):
-        // the FO local RNG, the issued seed block, and the capability
-        // timeline are all pure functions of (master seed, round, client
-        // id) and the sampled profile.
+        // pass 1 — classification: availability, FO/ZO role, catch-up
+        // charge. Pure reads; no RNG stream is touched.
         let deadline = self.cfg.scenario.deadline_ms();
         let d4 = (self.backend.dim() * 4) as u64;
-        let mut jobs: Vec<Job> = Vec::with_capacity(q);
-        let mut zo_charges: Vec<ZoClientCharge> = Vec::with_capacity(q);
-        let (mut fo_up, mut fo_down) = (0u64, 0u64);
-        let mut dropped = 0usize;
-        let mut catch_up_down = 0u64;
-        // ZO survivors whose sync ledger may advance to round+1 — only
-        // once the round is known to be seed-replayable (no mixed-FO
-        // fold), decided after the join
-        let mut zo_survivors: Vec<usize> = Vec::with_capacity(q);
+        let mut pendings: Vec<Pending> = Vec::with_capacity(q);
+        let mut cands: Vec<ZoCandidate> = Vec::with_capacity(q);
         for &cid in &picked {
             let client = &self.clients[cid];
             // churn trace: late joiners and whole-round absences transmit
             // nothing and stay stale
             if !sim::is_available(&client.profile, self.cfg.seed, self.round, cid) {
-                dropped += 1;
-                continue;
-            }
-            let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
-            if self.cfg.mixed_step2 && client.is_high() {
-                let plan = sim::RoundPlan {
-                    down_bytes: d4,
-                    passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
-                    up_bytes: d4,
-                };
-                let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
-                fo_up += o.up_bytes;
-                fo_down += o.down_bytes;
-                if o.down_bytes == plan.down_bytes {
-                    // full-weight download = sync to the current round
-                    self.synced[cid] = self.synced[cid].max(self.round);
-                }
-                if o.survives {
-                    jobs.push(Job::Fo { cid, rng: self.client_rng(cid) });
-                } else {
-                    dropped += 1;
-                }
+                pendings.push(Pending::Dropped);
+            } else if self.cfg.mixed_step2 && client.is_high() {
+                pendings.push(Pending::Fo(cid));
             } else if client.profile.zo_capable(&self.cost) {
-                let steps = zo_step_count(client.n(), self.cfg.zo.grad_steps);
-                let n_seeds = self.cfg.zo.s_seeds * steps;
                 // a stale client must first reconstruct the current
                 // global: the server charges the cheaper of snapshot vs
                 // tail replay (ckpt subsystem; nothing when synced or
                 // when checkpointing is disabled). Both the catch-up
                 // download and the local replay passes lead the
-                // timeline, so a tight deadline can cut either short.
-                let catch_plan = self.ckpt.catch_up_plan(self.synced[cid], self.round, d4);
-                let catch = catch_plan.map_or(0, |p| p.bytes);
-                let plan = sim::RoundPlan {
-                    down_bytes: catch + (n_seeds * 8) as u64,
-                    passes: sim::zo_passes(client.n(), self.cfg.zo.s_seeds)
-                        + sim::replay_passes(catch_plan.map_or(0, |p| p.replay_items)),
-                    up_bytes: (n_seeds * 4) as u64,
-                };
-                let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
-                catch_up_down += o.down_bytes.min(catch);
-                zo_charges.push(ZoClientCharge {
-                    issued_seeds: n_seeds,
-                    up_bytes: o.up_bytes,
-                    seed_down_bytes: o.down_bytes,
-                    survives: o.survives,
-                });
-                if o.down_bytes >= catch {
-                    // the download leg is ordered catch-up first, so
-                    // receiving at least `catch` bytes means the client
-                    // holds the full catch-up payload — even if the seed
-                    // issue (or anything later in its timeline) was cut.
-                    // A replay interrupted by the deadline finishes
-                    // offline before the next round (the deadline bounds
-                    // round participation, not between-round local
-                    // compute), so the client counts as synced and the
-                    // catch-up is never re-charged.
-                    self.synced[cid] = self.synced[cid].max(self.round);
-                }
-                if o.survives {
-                    // survivors also receive the end-of-round broadcast;
-                    // whether that reaches the *next* round's global
-                    // depends on the round staying seed-replayable —
-                    // resolved after the join (see zo_survivors)
-                    zo_survivors.push(cid);
-                    jobs.push(Job::Zo {
-                        cid,
-                        seeds: self.issuer.seeds_for(self.round, cid, n_seeds),
-                    });
-                } else {
-                    dropped += 1;
-                }
+                // timeline, so a tight deadline can cut either short —
+                // and both shrink the adaptive probe budget.
+                cands.push(self.zo_candidate(cid, d4));
+                pendings.push(Pending::Zo(cands.len() - 1));
             } else {
                 // below even the eq. 5 ZO footprint: cannot participate
-                dropped += 1;
+                pendings.push(Pending::Dropped);
+            }
+        }
+        // planning — per-candidate probe budgets (uniform s_seeds with
+        // the planner off)
+        let budgets = self.zo_probe_budgets(&cands);
+
+        // pass 2 — simulation + issuing: pre-derive every per-client
+        // random input (determinism rule 1): the FO local RNG, the issued
+        // seed block, and the capability timeline are all pure functions
+        // of (master seed, round, client id) and the sampled profile.
+        let mut jobs: Vec<Job> = Vec::with_capacity(q);
+        let mut zo_charges: Vec<ZoClientCharge> = Vec::with_capacity(q);
+        let (mut fo_up, mut fo_down) = (0u64, 0u64);
+        let mut dropped = 0usize;
+        let mut catch_up_down = 0u64;
+        let mut seeds_issued = 0usize;
+        // ZO survivors whose sync ledger may advance to round+1 — only
+        // once the round is known to be seed-replayable (no mixed-FO
+        // fold), decided after the join
+        let mut zo_survivors: Vec<usize> = Vec::with_capacity(q);
+        for p in &pendings {
+            match *p {
+                Pending::Dropped => dropped += 1,
+                Pending::Fo(cid) => {
+                    let client = &self.clients[cid];
+                    let mut trace =
+                        round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
+                    let plan = sim::RoundPlan {
+                        down_bytes: d4,
+                        passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
+                        up_bytes: d4,
+                    };
+                    let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+                    fo_up += o.up_bytes;
+                    fo_down += o.down_bytes;
+                    if o.down_bytes == plan.down_bytes {
+                        // full-weight download = sync to the current round
+                        self.synced[cid] = self.synced[cid].max(self.round);
+                    }
+                    if o.survives {
+                        jobs.push(Job::Fo { cid, rng: self.client_rng(cid) });
+                    } else {
+                        dropped += 1;
+                    }
+                }
+                Pending::Zo(i) => {
+                    let c = &cands[i];
+                    let cid = c.cid;
+                    let s_block = budgets[i];
+                    let n_seeds = s_block * c.steps;
+                    let plan = self.zo_candidate_plan(c, s_block);
+                    let mut trace =
+                        round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
+                    let o = sim::simulate_round(&self.clients[cid].profile, &plan, self.cost.params, deadline, &mut trace);
+                    catch_up_down += o.down_bytes.min(c.catch_bytes);
+                    seeds_issued += n_seeds;
+                    zo_charges.push(ZoClientCharge {
+                        issued_seeds: n_seeds,
+                        up_bytes: o.up_bytes,
+                        seed_down_bytes: o.down_bytes,
+                        survives: o.survives,
+                    });
+                    if o.down_bytes >= c.catch_bytes {
+                        // the download leg is ordered catch-up first, so
+                        // receiving at least `catch` bytes means the client
+                        // holds the full catch-up payload — even if the seed
+                        // issue (or anything later in its timeline) was cut.
+                        // A replay interrupted by the deadline finishes
+                        // offline before the next round (the deadline bounds
+                        // round participation, not between-round local
+                        // compute), so the client counts as synced and the
+                        // catch-up is never re-charged.
+                        self.synced[cid] = self.synced[cid].max(self.round);
+                    }
+                    if o.survives {
+                        // survivors also receive the end-of-round broadcast;
+                        // whether that reaches the *next* round's global
+                        // depends on the round staying seed-replayable —
+                        // resolved after the join (see zo_survivors)
+                        zo_survivors.push(cid);
+                        jobs.push(Job::Zo {
+                            cid,
+                            seeds: self.issuer.seeds_for(self.round, cid, n_seeds),
+                            s_block,
+                        });
+                    } else {
+                        dropped += 1;
+                    }
+                }
             }
         }
 
@@ -460,20 +632,24 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                         )?;
                         Ok(Out::Fo { cid, w, sums })
                     }
-                    Job::Zo { cid, seeds } => {
+                    Job::Zo { cid, seeds, s_block } => {
                         let client = &clients[cid];
                         let groups = zo_step_chunks(
                             &client.data,
                             backend.batch_size(),
                             cfg.zo.grad_steps,
                         );
-                        debug_assert_eq!(groups.len() * cfg.zo.s_seeds, seeds.len());
+                        debug_assert_eq!(groups.len() * s_block, seeds.len());
+                        // the client evaluates its own heterogeneous probe
+                        // budget: same ZO hyperparameters, its planned S_j
+                        let mut zcfg = cfg.zo;
+                        zcfg.s_seeds = s_block;
                         let deltas = zoopt(
                             backend,
                             global,
                             &groups,
                             &seeds,
-                            &cfg.zo,
+                            &zcfg,
                             cfg.lr_client_zo,
                         )?;
                         Ok(Out::Zo(ZoContribution {
@@ -481,6 +657,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                             seeds,
                             delta_l: deltas,
                             n_samples: client.n(),
+                            s_block,
                         }))
                     }
                 }
@@ -505,10 +682,13 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         // ZOUPDATE: reconstruct the aggregated step from (seed, ΔL) pairs.
         // Intermediate grad_steps blocks replay at lr_client (matching the
         // client's local trajectory); the server lr scales only the final
-        // aggregated block. The weight-vector pass shards across the same
-        // worker budget. The item list is the single artifact shared with
-        // the checkpoint seed log: replaying it reproduces this exact
-        // update bit for bit.
+        // aggregated block; each contribution's explicit block map carries
+        // its heterogeneous S_j and the configured variance guard rescales
+        // weights / clamps outliers inside the fold. The weight-vector
+        // pass shards across the same worker budget. The item list is the
+        // single artifact shared with the checkpoint seed log: replaying
+        // it reproduces this exact update bit for bit, guard and all.
+        let eff_var = crate::zo::effective_variance(&contributions, &self.cfg.zo);
         let items = zo_update_items(
             &contributions,
             &self.cfg.zo,
@@ -556,11 +736,14 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let (up, down) = zo_round_ledger_outcomes(&zo_charges, fo_up, fo_down);
         self.ledger.record_round(up, down);
         self.ledger.record_catch_up(catch_up_down);
+        self.ledger.record_seeds(seeds_issued as u64);
 
         Ok(RoundSummary {
             train_signal: zo_train_signal(&contributions, &train),
             dropped,
             catch_up_down,
+            seeds_issued,
+            eff_var,
         })
     }
 
@@ -592,6 +775,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             bytes_down: down,
             dropped: summary.dropped,
             catch_up_down: summary.catch_up_down,
+            seeds_issued: summary.seeds_issued,
+            eff_var: summary.eff_var,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         });
         self.round += 1;
@@ -1031,6 +1216,137 @@ mod tests {
             "oversynced past an opaque round: {:?}",
             fed.synced
         );
+    }
+
+    #[test]
+    fn adaptive_off_issues_uniform_budgets_and_counts_them() {
+        // default: the planner is a constant function and the new
+        // accounting columns reproduce the uniform protocol's arithmetic
+        let cfg = smoke_cfg();
+        assert!(!cfg.zo.adaptive_s);
+        let (be, shards, test) = build(cfg.clone());
+        let mut fed =
+            Federation::new(cfg.clone(), &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+        let all: Vec<usize> = (0..cfg.clients).collect();
+        for (_, s) in fed.planned_seed_counts(&all) {
+            assert_eq!(s, cfg.zo.s_seeds);
+        }
+        fed.run().unwrap();
+        // binary fleet, no drops: every ZO round issues Q · S · steps
+        // seeds (steps = 1 at grad_steps = 1), warm rounds none
+        for r in &fed.log.rounds {
+            match r.phase {
+                Phase::Warm => assert_eq!(r.seeds_issued, 0),
+                Phase::Zo => {
+                    assert_eq!(r.seeds_issued, cfg.sample_zo * cfg.zo.s_seeds)
+                }
+            }
+            assert!(r.eff_var.is_finite());
+        }
+        assert_eq!(
+            fed.ledger.seeds_total as usize,
+            fed.log.total_seeds_issued()
+        );
+        let zo_rounds = cfg.rounds_total - cfg.pivot;
+        assert_eq!(
+            fed.ledger.seeds_total as usize,
+            zo_rounds * cfg.sample_zo * cfg.zo.s_seeds
+        );
+    }
+
+    #[test]
+    fn adaptive_budgets_track_capability_and_fill_the_envelope() {
+        // under a capability spread with no deadline, the planner hands
+        // every candidate at least the uniform S (the slowest sampled
+        // client defines the envelope at exactly that S) and the strong
+        // tiers strictly more
+        let mut cfg = smoke_cfg();
+        cfg.zo.adaptive_s = true;
+        cfg.zo.s_min = 1;
+        cfg.zo.s_max = 16;
+        cfg.scenario = crate::sim::Scenario::preset("edge-spectrum").unwrap();
+        let (be, shards, test) = build(cfg.clone());
+        let fed =
+            Federation::new(cfg.clone(), &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+        let all: Vec<usize> = (0..cfg.clients).collect();
+        let counts = fed.planned_seed_counts(&all);
+        assert_eq!(counts.len(), cfg.clients, "every tier is ZO-capable");
+        for &(cid, s) in &counts {
+            assert!((1..=16).contains(&s), "client {cid}: S={s} out of range");
+            assert!(
+                s >= cfg.zo.s_seeds,
+                "client {cid}: the envelope guarantees at least uniform S, got {s}"
+            );
+        }
+        // acceptance: budgets differ across clients and across tiers.
+        // (The per-probe cost mixes tier capability with shard size, so
+        // compare tier means, not hand-picked tier pairs.)
+        let distinct: std::collections::BTreeSet<usize> =
+            counts.iter().map(|&(_, s)| s).collect();
+        assert!(
+            distinct.len() > 1,
+            "edge-spectrum must yield heterogeneous budgets: {counts:?}"
+        );
+        let mut tier_means: Vec<(String, f64)> = Vec::new();
+        for &(cid, s) in &counts {
+            let tier = fed.clients[cid].profile.tier.clone();
+            match tier_means.iter_mut().find(|(t, _)| *t == tier) {
+                Some((_, m)) => *m += s as f64,
+                None => tier_means.push((tier, s as f64)),
+            }
+        }
+        for (tier, m) in tier_means.iter_mut() {
+            let n = fed
+                .clients
+                .iter()
+                .filter(|c| c.profile.tier == *tier)
+                .count();
+            *m /= n as f64;
+        }
+        let hi = tier_means.iter().map(|(_, m)| *m).fold(f64::MIN, f64::max);
+        let lo = tier_means.iter().map(|(_, m)| *m).fold(f64::MAX, f64::min);
+        assert!(
+            hi > lo,
+            "acceptance: issued budgets must differ across tiers: {tier_means:?}"
+        );
+    }
+
+    #[test]
+    fn adaptive_run_is_thread_invariant_and_outprobes_uniform() {
+        // the tentpole e2e guarantee: heterogeneous S with a variance
+        // guard stays bit-identical across worker counts, and issues
+        // strictly more probes than the uniform run on the same fleet
+        let run_with = |threads: usize, adaptive: bool| {
+            let mut cfg = smoke_cfg();
+            cfg.threads = threads;
+            cfg.zo.adaptive_s = adaptive;
+            cfg.zo.guard = crate::config::VarianceGuard::InvVar;
+            cfg.scenario = crate::sim::Scenario::preset("edge-spectrum").unwrap();
+            let (be, shards, test) = build(cfg.clone());
+            let mut fed =
+                Federation::new(cfg, &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+            fed.run().unwrap();
+            (fed.global.clone(), fed.log, fed.ledger)
+        };
+        let (g1, log1, led1) = run_with(1, true);
+        let (g4, log4, led4) = run_with(4, true);
+        assert_eq!(g1, g4, "adaptive weights must not depend on threads");
+        assert_eq!(led1.seeds_total, led4.seeds_total);
+        assert_eq!((led1.up_total, led1.down_total), (led4.up_total, led4.down_total));
+        for (a, b) in log1.rounds.iter().zip(&log4.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.eff_var.to_bits(), b.eff_var.to_bits());
+            assert_eq!(a.seeds_issued, b.seeds_issued);
+            assert_eq!((a.bytes_up, a.bytes_down), (b.bytes_up, b.bytes_down));
+        }
+        let (_, _, led_uniform) = run_with(1, false);
+        assert!(
+            led1.seeds_total > led_uniform.seeds_total,
+            "adaptive ({}) must out-probe uniform ({})",
+            led1.seeds_total,
+            led_uniform.seeds_total
+        );
+        assert!(g1.is_finite());
     }
 
     #[test]

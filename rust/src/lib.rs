@@ -10,7 +10,9 @@
 //!   compiled from `python/compile/`).
 //! * [`fed`] — the coordinator: Algorithm 1's two-phase loop, FedAvg /
 //!   FedAdam aggregation, and the seed-based SPSA protocol.
-//! * [`zo`] — SPSA estimation and seed bookkeeping.
+//! * [`zo`] — SPSA estimation, seed bookkeeping, and the fused
+//!   (seed, coeff) ZOUPDATE artifact with explicit per-client block maps
+//!   and variance-guarded aggregation (DESIGN.md §9).
 //! * [`baselines`] — HeteroFL, FedKSeed, High-Res-Only comparators.
 //! * [`ckpt`] — server-side checkpointing + seed-log compaction: bounded
 //!   catch-up replay for late joiners and rejoining dropouts
@@ -19,8 +21,10 @@
 //! * [`comm`] — measured byte accounting + the eq. 4/5 analytic cost model.
 //! * [`sim`] — the device-capability scenario engine: per-client
 //!   memory/bandwidth/compute profiles sampled from the federation seed,
-//!   deterministic availability/straggler traces, and round deadline
-//!   simulation with byte-accurate partial-transmission accounting.
+//!   deterministic availability/straggler traces, round deadline
+//!   simulation with byte-accurate partial-transmission accounting, and
+//!   the adaptive probe-budget planner (`max_affordable_s`) that inverts
+//!   the timeline model to size each client's per-round S_j.
 //! * [`exp`] — runners that regenerate every paper table and figure.
 //! * [`util`] — offline substrates (RNG, JSON, CLI, bench, property tests).
 //!

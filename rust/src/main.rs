@@ -46,8 +46,22 @@ SUBCOMMANDS
                                         pay min(snapshot, tail) catch-up
                                         downlink. 0 = off, the seed-
                                         compatible default)
+            --adaptive-s true|false    (capability-adaptive probe budgets:
+                                        each ZO client gets the largest
+                                        S in [--s-min, --s-max] whose
+                                        simulated timeline fits the round
+                                        budget — the scenario deadline,
+                                        else the slowest sampled client's
+                                        uniform-S time. default false =
+                                        uniform --seeds-s, bit-identical
+                                        to before)
+            --s-min N --s-max N        (adaptive-S range; default 1..16)
+            --guard off|invvar|clip    (aggregation variance guard:
+                                        inverse-variance reweighting or
+                                        |dL|-quantile clipping folded into
+                                        the fused update; default off)
   exp     regenerate a paper table/figure
-            zowarmup exp <table1..table7|fig3..fig7|ckpt|all> [--scale smoke|default|paper]
+            zowarmup exp <table1..table7|fig3..fig7|ckpt|adaptive|all> [--scale smoke|default|paper]
             [--threads N]              (worker threads for every run in
                                         the sweep; 0 = auto)
             [--scenario NAME|FILE]     (capability fleet for every run in

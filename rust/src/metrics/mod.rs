@@ -37,6 +37,12 @@ pub struct RoundRecord {
     /// of `bytes_down`, the catch-up downlink charged to stale clients
     /// this round (`ckpt` subsystem; 0 with checkpointing disabled)
     pub catch_up_down: u64,
+    /// probes the server issued to this round's ZO participants (0 in
+    /// warm rounds; heterogeneous per-client budgets under `--adaptive-s`)
+    pub seeds_issued: usize,
+    /// effective variance of the round's aggregated SPSA step
+    /// (`zo::effective_variance`; always finite, 0.0 when undefined)
+    pub eff_var: f64,
     pub wall_ms: f64,
 }
 
@@ -80,6 +86,23 @@ impl RunLog {
         self.rounds.iter().map(|r| r.catch_up_down).sum()
     }
 
+    /// Total probes issued over the run (adaptive-S accounting view).
+    pub fn total_seeds_issued(&self) -> usize {
+        self.rounds.iter().map(|r| r.seeds_issued).sum()
+    }
+
+    /// Mean effective variance over the ZO rounds that measured one
+    /// (skips warm/empty rounds; 0.0 when none did).
+    pub fn mean_eff_var(&self) -> f64 {
+        let vals: Vec<f64> = self
+            .rounds
+            .iter()
+            .filter(|r| r.phase == Phase::Zo && r.eff_var > 0.0)
+            .map(|r| r.eff_var)
+            .collect();
+        crate::util::stats::mean(&vals)
+    }
+
     pub fn total_bytes(&self) -> (u64, u64) {
         (
             self.rounds.iter().map(|r| r.bytes_up).sum(),
@@ -101,7 +124,8 @@ impl RunLog {
             path,
             &[
                 "round", "phase", "train_loss", "test_acc", "test_loss", "bytes_up",
-                "bytes_down", "dropped", "catch_up_down", "wall_ms",
+                "bytes_down", "dropped", "catch_up_down", "seeds_issued", "eff_var",
+                "wall_ms",
             ],
         )?;
         for r in &self.rounds {
@@ -115,6 +139,8 @@ impl RunLog {
                 r.bytes_down.to_string(),
                 r.dropped.to_string(),
                 r.catch_up_down.to_string(),
+                r.seeds_issued.to_string(),
+                format!("{:.6e}", r.eff_var),
                 format!("{:.3}", r.wall_ms),
             ])?;
         }
@@ -176,6 +202,8 @@ mod tests {
             bytes_down: 20,
             dropped: 0,
             catch_up_down: 0,
+            seeds_issued: 0,
+            eff_var: 0.0,
             wall_ms: 1.0,
         }
     }
@@ -206,6 +234,7 @@ mod tests {
         log.write_csv(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("round,phase,"));
+        assert!(text.contains(",seeds_issued,eff_var,wall_ms"));
         assert!(text.contains("0,warm,1.000000,0.250000"));
         std::fs::remove_file(path).ok();
     }

@@ -651,6 +651,74 @@ pub struct RoundOutcome {
     pub sim_ms: f64,
 }
 
+/// The three timeline legs of a planned round (download, compute,
+/// upload) in simulated ms — the deterministic core shared by
+/// [`simulate_round`] (which adds failure draws and deadline cuts) and
+/// the adaptive seed-budget planner ([`max_affordable_s`], which inverts
+/// it). Consumes no randomness.
+pub fn leg_times_ms(
+    profile: &CapabilityProfile,
+    plan: &RoundPlan,
+    params: u64,
+) -> (f64, f64, f64) {
+    let t_down = plan.down_bytes as f64 / bytes_per_ms(profile.down_mbps);
+    let t_comp = plan.passes * (params as f64 / 1e6) * MS_PER_MPARAM_PASS / profile.compute;
+    let t_up = plan.up_bytes as f64 / bytes_per_ms(profile.up_mbps);
+    (t_down, t_comp, t_up)
+}
+
+/// Full planned timeline length (no failure draw): what the client's
+/// round costs if nothing cuts it. Deterministic — the planner's view of
+/// [`simulate_round`]'s `sim_ms` for a survivor.
+pub fn plan_time_ms(profile: &CapabilityProfile, plan: &RoundPlan, params: u64) -> f64 {
+    let (t_down, t_comp, t_up) = leg_times_ms(profile, plan, params);
+    t_down + t_comp + t_up
+}
+
+/// Invert the round-timeline model for the adaptive seed budget: the
+/// largest `S ∈ [s_min, s_max]` whose planned timeline (`mk_plan(S)`,
+/// catch-up charge and all) fits `budget_ms` — or `s_min` when even the
+/// floor does not fit (the client is then expected to drop at simulation
+/// time, exactly as it would have under the uniform protocol). A
+/// non-positive budget means "unconstrained" and yields `s_max`.
+///
+/// The timeline is monotone non-decreasing in S (more probes ⇒ more
+/// seed-issue bytes, more forward passes, more ΔL uplink), so a binary
+/// search against [`plan_time_ms`] finds the frontier in O(log(s_max −
+/// s_min)) deterministic evaluations — no RNG is consumed, keeping the
+/// planner invisible to the per-(round, client) trace streams.
+pub fn max_affordable_s(
+    profile: &CapabilityProfile,
+    params: u64,
+    budget_ms: f64,
+    s_min: usize,
+    s_max: usize,
+    mk_plan: impl Fn(usize) -> RoundPlan,
+) -> usize {
+    debug_assert!(s_min >= 1 && s_min <= s_max);
+    if budget_ms <= 0.0 {
+        return s_max;
+    }
+    let fits = |s: usize| plan_time_ms(profile, &mk_plan(s), params) <= budget_ms;
+    if fits(s_max) {
+        return s_max;
+    }
+    if !fits(s_min) {
+        return s_min;
+    }
+    // invariant: lo fits, hi does not
+    let (mut lo, mut hi) = (s_min, s_max);
+    while lo + 1 < hi {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
 /// Simulate one client's round against its profile, the scenario deadline
 /// (`0.0` = none) and its availability trace. `trace` must be the
 /// per-(round, client) RNG salted with [`SIM_SALT`]; exactly two draws are
@@ -665,9 +733,7 @@ pub fn simulate_round(
 ) -> RoundOutcome {
     let down_rate = bytes_per_ms(profile.down_mbps);
     let up_rate = bytes_per_ms(profile.up_mbps);
-    let t_down = plan.down_bytes as f64 / down_rate;
-    let t_comp = plan.passes * (params as f64 / 1e6) * MS_PER_MPARAM_PASS / profile.compute;
-    let t_up = plan.up_bytes as f64 / up_rate;
+    let (t_down, t_comp, t_up) = leg_times_ms(profile, plan, params);
     let t_total = t_down + t_comp + t_up;
 
     // availability trace: always two draws, whether or not they matter
@@ -971,6 +1037,112 @@ mod tests {
         assert!(Scenario::load(r#"{"tiers": [{"frac": 1.0}]}"#).is_err());
         // tiers are required
         assert!(Scenario::load(r#"{"name": "x"}"#).is_err());
+    }
+
+    fn probe_zo_plan(n: usize, steps: usize, catch: u64) -> impl Fn(usize) -> RoundPlan {
+        move |s| RoundPlan {
+            down_bytes: catch + (s * steps * 8) as u64,
+            passes: zo_passes(n, s),
+            up_bytes: (s * steps * 4) as u64,
+        }
+    }
+
+    #[test]
+    fn plan_time_matches_simulated_survivor() {
+        // the planner's deterministic timeline is exactly what
+        // simulate_round reports for a survivor
+        let p = profile(10.0, 10.0, 1.0, 0.0);
+        let plan = RoundPlan {
+            down_bytes: 1000,
+            passes: 10.0,
+            up_bytes: 500,
+        };
+        let mut trace = Xoshiro256::seed_from(0);
+        let o = simulate_round(&p, &plan, 1_000_000, 0.0, &mut trace);
+        assert!(o.survives);
+        assert_eq!(o.sim_ms.to_bits(), plan_time_ms(&p, &plan, 1_000_000).to_bits());
+        let (d, c, u) = leg_times_ms(&p, &plan, 1_000_000);
+        assert!((d - 0.8).abs() < 1e-12);
+        assert!((c - 1.0).abs() < 1e-12);
+        assert!((u - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn planner_fills_the_budget_and_respects_bounds() {
+        let p = profile(10.0, 10.0, 1.0, 0.0);
+        let mk = probe_zo_plan(40, 1, 0);
+        // unconstrained budget → ceiling
+        assert_eq!(max_affordable_s(&p, 100_000, 0.0, 1, 32, &mk), 32);
+        // a budget below even S=1 → floor (the client will likely drop)
+        assert_eq!(max_affordable_s(&p, 100_000, 1e-9, 1, 32, &mk), 1);
+        // a mid budget: the result S fits, S+1 does not
+        let budget = plan_time_ms(&p, &mk(9), 100_000) + 1e-9;
+        let s = max_affordable_s(&p, 100_000, budget, 1, 32, &mk);
+        assert_eq!(s, 9);
+        assert!(plan_time_ms(&p, &mk(s), 100_000) <= budget);
+        assert!(plan_time_ms(&p, &mk(s + 1), 100_000) > budget);
+        // a catch-up charge fronting the download shrinks the probe budget
+        let with_catch = probe_zo_plan(40, 1, 4_000_000);
+        assert!(max_affordable_s(&p, 100_000, budget, 1, 32, &with_catch) < s);
+    }
+
+    #[test]
+    fn planner_gives_stronger_clients_more_probes() {
+        // the tentpole's premise: under a shared budget, compute/bandwidth
+        // translate directly into affordable probes
+        let budget = 50.0;
+        let mk = probe_zo_plan(64, 1, 0);
+        let iot = max_affordable_s(&profile(1.0, 4.0, 0.25, 0.0), 175_258, budget, 1, 64, &mk);
+        let phone = max_affordable_s(&profile(5.0, 20.0, 1.0, 0.0), 175_258, budget, 1, 64, &mk);
+        let server = max_affordable_s(&profile(50.0, 100.0, 8.0, 0.0), 175_258, budget, 1, 64, &mk);
+        assert!(iot < phone && phone < server, "{iot} < {phone} < {server}");
+    }
+
+    #[test]
+    fn prop_planner_is_monotone_and_exact() {
+        // random profiles/budgets: the planner stays in bounds, is
+        // monotone in the budget, and sits exactly on the frontier
+        // (S fits; S+1 does not, unless capped)
+        crate::util::prop::run_prop("adaptive_s_planner", 200, |g| {
+            let mut rng = g.rng();
+            let p = CapabilityProfile {
+                tier: "rand".into(),
+                mem_bytes: u64::MAX,
+                up_mbps: 0.01 + rng.next_f64() * 50.0,
+                down_mbps: 0.01 + rng.next_f64() * 50.0,
+                compute: 0.05 + rng.next_f64() * 8.0,
+                drop_rate: 0.0,
+                join_round: 0,
+                absent_rate: 0.0,
+            };
+            let n = 1 + rng.below(200);
+            let steps = 1 + rng.below(3);
+            let catch = (rng.below(1 << 18)) as u64;
+            let s_min = 1 + rng.below(4);
+            let s_max = s_min + rng.below(40);
+            let params = 1_000 + rng.below(1_000_000) as u64;
+            let mk = probe_zo_plan(n, steps, catch);
+            let b1 = rng.next_f64() * 20.0;
+            let b2 = b1 + rng.next_f64() * 20.0;
+            let s1 = max_affordable_s(&p, params, b1, s_min, s_max, &mk);
+            let s2 = max_affordable_s(&p, params, b2, s_min, s_max, &mk);
+            if !(s_min..=s_max).contains(&s1) || !(s_min..=s_max).contains(&s2) {
+                return Err(format!("out of bounds: {s1}/{s2} not in [{s_min},{s_max}]"));
+            }
+            if s2 < s1 {
+                return Err(format!("not monotone in budget: {s1} -> {s2}"));
+            }
+            // frontier exactness whenever the floor fits and the cap is slack
+            if plan_time_ms(&p, &mk(s_min), params) <= b1 && s1 < s_max {
+                if plan_time_ms(&p, &mk(s1), params) > b1 {
+                    return Err(format!("S={s1} does not fit its own budget"));
+                }
+                if plan_time_ms(&p, &mk(s1 + 1), params) <= b1 {
+                    return Err(format!("S={s1} is not maximal"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

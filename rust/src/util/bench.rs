@@ -44,15 +44,29 @@ pub struct Bench {
     pub results: Vec<Measurement>,
 }
 
+/// True when `ZOWARMUP_BENCH_QUICK` is set (non-empty, not "0"): the CI
+/// bench-smoke mode — tiny time budgets, and the bench mains skip their
+/// ResNet-scale cases so the whole suite runs in seconds. Quick numbers
+/// are for trajectory tracking, not absolute comparison.
+pub fn quick() -> bool {
+    std::env::var("ZOWARMUP_BENCH_QUICK").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
 impl Bench {
     pub fn new(group: &str) -> Self {
-        Self {
+        let mut b = Self {
             group: group.to_string(),
             min_time: Duration::from_millis(300),
             min_iters: 10,
             warmup_iters: 2,
             results: Vec::new(),
+        };
+        if quick() {
+            b.min_time = Duration::from_millis(10);
+            b.min_iters = 3;
+            b.warmup_iters = 1;
         }
+        b
     }
 
     /// Quick preset for expensive end-to-end cases.
@@ -97,6 +111,41 @@ impl Bench {
         };
         self.results.push(m);
         self.results.last().unwrap()
+    }
+
+    /// Serialize the group's measurements as a JSON object — the
+    /// machine-readable counterpart of [`Self::report`], consumed by the
+    /// CI bench-smoke step and diffed against the committed
+    /// `BENCH_baseline.json` so the perf trajectory is tracked, not
+    /// anecdotal.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"group\": \"{}\",\n", self.group));
+        out.push_str(&format!("  \"quick\": {},\n", quick()));
+        out.push_str("  \"results\": [\n");
+        for (i, m) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+                 \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"throughput_per_sec\": {:.1}}}{}\n",
+                m.name,
+                m.iters,
+                m.mean_ns,
+                m.p50_ns,
+                m.p95_ns,
+                m.throughput_per_sec(),
+                if i + 1 < self.results.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write [`Self::to_json`] to `path` (parent dirs created).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())
     }
 
     /// Print a criterion-ish table to stdout.
@@ -178,5 +227,37 @@ mod tests {
         assert_eq!(fmt_ns(500.0), "500ns");
         assert_eq!(fmt_ns(1_500_000.0), "1.50ms");
         assert_eq!(fmt_qty(2_000_000.0), "2.00M");
+    }
+
+    #[test]
+    fn json_export_round_trips_through_parser() {
+        let mut b = Bench::new("jgroup");
+        b.min_time = Duration::from_millis(1);
+        b.min_iters = 2;
+        b.iter("case_a", || {
+            black_box(1 + 1);
+        });
+        b.iter_with_items("case_b", 10.0, || {
+            black_box(2 + 2);
+        });
+        let j = crate::util::json::Json::parse(&b.to_json()).unwrap();
+        assert_eq!(j.get("group").and_then(|v| v.as_str()), Some("jgroup"));
+        let results = j.get("results").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("name").and_then(|v| v.as_str()),
+            Some("case_a")
+        );
+        assert!(results[1]
+            .get("throughput_per_sec")
+            .and_then(|v| v.as_f64())
+            .unwrap()
+            > 0.0);
+        // and the file writer lands it on disk
+        let path = std::env::temp_dir().join("zow_bench_json_test.json");
+        b.write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+        std::fs::remove_file(path).ok();
     }
 }

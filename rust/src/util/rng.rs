@@ -39,18 +39,11 @@ impl Xoshiro256 {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        let s = &mut self.s;
-        let result = s[0]
-            .wrapping_add(s[3])
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
             .rotate_left(23)
-            .wrapping_add(s[0]);
-        let t = s[1] << 17;
-        s[2] ^= s[0];
-        s[3] ^= s[1];
-        s[1] ^= s[2];
-        s[0] ^= s[3];
-        s[2] ^= t;
-        s[3] = s[3].rotate_left(45);
+            .wrapping_add(self.s[0]);
+        advance(&mut self.s);
         result
     }
 
@@ -145,18 +138,31 @@ impl Xoshiro256 {
     /// chunk starting at element `offset` (64-aligned) reproduces the
     /// bit-exact sub-stream by discarding `offset / 64` draws.
     ///
-    /// Cost note: the plain loop is O(n), so a shard worker's setup grows
-    /// with its offset — at d=11M × 30 streams × 8 workers the last
-    /// worker discards ~4.6M draws, roughly 15% of its chunk work. Each
-    /// discard runs concurrently with the other workers, so the fan-out
-    /// still wins, but if profiles ever show setup dominating at high
-    /// worker counts the upgrade path is xoshiro's GF(2) polynomial jump
-    /// specialized to arbitrary n (not implemented: the fixed 2^128 jump
-    /// constant does not help at these offsets).
+    /// Cost: small offsets (`n < `[`JUMP_MIN_DRAWS`]) run the plain O(n)
+    /// draw loop; larger offsets apply the xoshiro256 GF(2) jump
+    /// specialized to arbitrary `n` — the state transition is linear over
+    /// GF(2), so `n` steps are the matrix power `Mⁿ` applied to the
+    /// 256-bit state, evaluated in O(log n) vector-matrix products
+    /// against the lazily-built table of `M^(2^k)` squarings
+    /// (`jump_powers`). This removes the O(offset) setup the last shard
+    /// worker used to pay at d=11M (≈4.6M discarded draws across its 30
+    /// streams); both paths produce bit-identical states
+    /// (`discard_matches_manual_draws`, `discard_large_offset_matches_loop`).
     pub fn discard(&mut self, n: u64) {
-        for _ in 0..n {
-            self.next_u64();
+        if n < JUMP_MIN_DRAWS {
+            for _ in 0..n {
+                self.next_u64();
+            }
+            return;
         }
+        let powers = jump_powers();
+        let mut v = self.s;
+        for (k, m) in powers.iter().enumerate() {
+            if (n >> k) & 1 == 1 {
+                v = m.apply(&v);
+            }
+        }
+        self.s = v;
     }
 
     /// In-place Fisher-Yates shuffle.
@@ -166,6 +172,86 @@ impl Xoshiro256 {
             xs.swap(i, j);
         }
     }
+}
+
+/// One xoshiro256 state transition (the part of [`Xoshiro256::next_u64`]
+/// after the output is formed). Every operation — xor, left shift,
+/// rotate — is linear over GF(2), which is what makes the arbitrary-n
+/// jump below possible.
+#[inline]
+fn advance(s: &mut [u64; 4]) {
+    let t = s[1] << 17;
+    s[2] ^= s[0];
+    s[3] ^= s[1];
+    s[1] ^= s[2];
+    s[0] ^= s[3];
+    s[2] ^= t;
+    s[3] = s[3].rotate_left(45);
+}
+
+/// Below this many draws the plain loop beats the jump's table lookups
+/// (the one-time 512 KB power-table build amortizes across the many
+/// per-(stream, worker) discards of a sharded ZOUPDATE run).
+pub const JUMP_MIN_DRAWS: u64 = 1 << 12;
+
+/// A 256×256 GF(2) matrix over the xoshiro256 state, column-major:
+/// `col[i]` is the image of basis state bit `i` (bit `i % 64` of word
+/// `i / 64`). Applying the matrix to a state vector XORs together the
+/// columns selected by the state's set bits.
+#[derive(Clone)]
+struct JumpMatrix {
+    col: Vec<[u64; 4]>,
+}
+
+impl JumpMatrix {
+    /// The one-step transition matrix, built by pushing each basis state
+    /// through [`advance`] — definitionally in sync with the generator.
+    fn one_step() -> Self {
+        let mut col = vec![[0u64; 4]; 256];
+        for (i, c) in col.iter_mut().enumerate() {
+            let mut s = [0u64; 4];
+            s[i / 64] = 1u64 << (i % 64);
+            advance(&mut s);
+            *c = s;
+        }
+        Self { col }
+    }
+
+    fn apply(&self, v: &[u64; 4]) -> [u64; 4] {
+        let mut out = [0u64; 4];
+        for (i, c) in self.col.iter().enumerate() {
+            if (v[i >> 6] >> (i & 63)) & 1 == 1 {
+                out[0] ^= c[0];
+                out[1] ^= c[1];
+                out[2] ^= c[2];
+                out[3] ^= c[3];
+            }
+        }
+        out
+    }
+
+    fn square(&self) -> Self {
+        Self {
+            col: self.col.iter().map(|c| self.apply(c)).collect(),
+        }
+    }
+}
+
+/// Lazily-built table of `M^(2^k)` for k = 0..64 (M = the one-step
+/// transition): any `n < 2^64` jump is the product of the powers at `n`'s
+/// set bits. Built once per process (~64 squarings, milliseconds, 512 KB).
+fn jump_powers() -> &'static [JumpMatrix] {
+    use std::sync::OnceLock;
+    static POWERS: OnceLock<Vec<JumpMatrix>> = OnceLock::new();
+    POWERS.get_or_init(|| {
+        let mut v = Vec::with_capacity(64);
+        v.push(JumpMatrix::one_step());
+        for k in 1..64 {
+            let sq = v[k - 1].square();
+            v.push(sq);
+        }
+        v
+    })
 }
 
 /// The seeded perturbation stream of the SPSA protocol (§3.1).
@@ -433,6 +519,54 @@ mod tests {
         let mut c = Xoshiro256::seed_from(21);
         c.discard(0);
         assert_eq!(c.next_u64(), Xoshiro256::seed_from(21).next_u64());
+    }
+
+    #[test]
+    fn discard_jump_matches_loop_across_the_threshold() {
+        // the O(log n) jump must be bit-identical to the draw loop right
+        // where discard() switches implementations
+        for n in [
+            JUMP_MIN_DRAWS - 1,
+            JUMP_MIN_DRAWS,
+            JUMP_MIN_DRAWS + 1,
+            3 * JUMP_MIN_DRAWS + 17,
+        ] {
+            let mut a = Xoshiro256::seed_from(5);
+            let mut b = Xoshiro256::seed_from(5);
+            for _ in 0..n {
+                a.next_u64();
+            }
+            b.discard(n);
+            assert_eq!(a.s, b.s, "state diverged at n={n}");
+            assert_eq!(a.next_u64(), b.next_u64(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn discard_large_offset_matches_loop() {
+        // satellite: the last shard worker at d=11M discards millions of
+        // draws — the jump path must reproduce the loop's state exactly
+        // at that scale, and compose additively
+        let n: u64 = 4_600_000 + 37;
+        let mut a = Xoshiro256::seed_from(99);
+        let mut b = Xoshiro256::seed_from(99);
+        for _ in 0..n {
+            a.next_u64();
+        }
+        b.discard(n);
+        assert_eq!(a.s, b.s);
+        for _ in 0..4 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // discard(x); discard(y) == discard(x + y), mixing both paths
+        let mut c = Xoshiro256::seed_from(99);
+        let mut d = Xoshiro256::seed_from(99);
+        c.discard(1_000_000);
+        c.discard(17); // loop path on top of the jump path
+        c.discard(3_600_000 + 20);
+        d.discard(n);
+        assert_eq!(c.s, d.s);
+        assert_eq!(c.next_u64(), d.next_u64());
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! Summary statistics for experiment tables ("mean(std) over seeds") and
 //! the bench harness.
+//!
+//! Every reduction here honors the `finite_signal` contract the CSV
+//! summaries rely on: empty (or all-NaN) input yields 0.0, never ±inf or
+//! NaN, and NaN samples are filtered rather than poisoning the reduction
+//! (the old `min`/`max` returned ±inf on empty input and `percentile`
+//! panicked on NaN via `partial_cmp().unwrap()`).
 
 /// Mean of a slice (0.0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -18,21 +24,42 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
+/// Minimum over the non-NaN samples; 0.0 when none remain.
 pub fn min(xs: &[f64]) -> f64 {
-    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    xs.iter()
+        .copied()
+        .filter(|x| !x.is_nan())
+        .fold(None, |m: Option<f64>, x| {
+            Some(match m {
+                None => x,
+                Some(m) => m.min(x),
+            })
+        })
+        .unwrap_or(0.0)
 }
 
+/// Maximum over the non-NaN samples; 0.0 when none remain.
 pub fn max(xs: &[f64]) -> f64 {
-    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    xs.iter()
+        .copied()
+        .filter(|x| !x.is_nan())
+        .fold(None, |m: Option<f64>, x| {
+            Some(match m {
+                None => x,
+                Some(m) => m.max(x),
+            })
+        })
+        .unwrap_or(0.0)
 }
 
-/// p in [0,1]; linear interpolation on the sorted copy.
+/// p in [0,1]; linear interpolation on the sorted copy of the non-NaN
+/// samples (0.0 when none remain).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if s.is_empty() {
         return 0.0;
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let pos = p.clamp(0.0, 1.0) * (s.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -63,6 +90,39 @@ mod tests {
     fn empty_and_singleton() {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std_dev(&[3.0]), 0.0);
+    }
+
+    #[test]
+    fn min_max_empty_is_finite_zero() {
+        // the old fold identities leaked ±inf into CSV summaries
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+        assert!(min(&[]).is_finite());
+        assert!(max(&[]).is_finite());
+        assert_eq!(min(&[3.0, -1.0, 2.0]), -1.0);
+        assert_eq!(max(&[3.0, -1.0, 2.0]), 3.0);
+        assert_eq!(min(&[5.0]), 5.0);
+        assert_eq!(max(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn min_max_filter_nan() {
+        assert_eq!(min(&[f64::NAN, 2.0, 1.0]), 1.0);
+        assert_eq!(max(&[2.0, f64::NAN, 1.0]), 2.0);
+        // all-NaN behaves like empty
+        assert_eq!(min(&[f64::NAN, f64::NAN]), 0.0);
+        assert_eq!(max(&[f64::NAN]), 0.0);
+    }
+
+    #[test]
+    fn percentile_is_nan_safe() {
+        // the old sort_by(partial_cmp().unwrap()) panicked on NaN
+        let xs = [1.0, f64::NAN, 3.0, 2.0, f64::NAN, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.5), 2.5);
+        assert_eq!(percentile(&[f64::NAN], 0.5), 0.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
     }
 
     #[test]

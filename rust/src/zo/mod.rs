@@ -13,10 +13,11 @@
 
 pub mod fused;
 
-use crate::config::ZoConfig;
+use crate::config::{VarianceGuard, ZoConfig};
 use crate::model::backend::{Batch, ModelBackend};
 use crate::model::params::ParamVec;
 use crate::util::rng::SplitMix64;
+use crate::util::stats;
 
 /// Deterministic per-(round, client, s) seed derivation: SplitMix64 over a
 /// unique packed index.
@@ -72,13 +73,25 @@ impl SeedIssuer {
 }
 
 /// One client's round-t contribution: the seeds it was issued, its ΔL per
-/// seed, and its sample count (for n_j/n_Q weighting).
+/// seed, its sample count (for n_j/n_Q weighting), and its **block map**.
+///
+/// `s_block` is the per-step probe count S_j this client was issued: its
+/// `seeds`/`delta_l` lists are exactly `seeds.len() / s_block` consecutive
+/// blocks of `s_block` (one per local `grad_steps` step, the last block
+/// being the round's aggregated-gradient block). The block structure is
+/// carried **explicitly** because S_j is heterogeneous under
+/// `ZoConfig::adaptive_s` — the old implicit "every client runs
+/// `cfg.s_seeds` per block" inference would silently mis-split adaptive
+/// contributions, and even uniform runs only `debug_assert`ed the
+/// invariant. [`zo_update_items`] now hard-enforces it in release builds.
 #[derive(Debug, Clone)]
 pub struct ZoContribution {
     pub client: usize,
     pub seeds: Vec<u64>,
     pub delta_l: Vec<f64>,
     pub n_samples: usize,
+    /// per-step probe count S_j (the explicit block size of `seeds`)
+    pub s_block: usize,
 }
 
 /// Client-side ZOOPT: evaluate ΔL for each issued seed over the client's
@@ -201,43 +214,231 @@ pub fn apply_zo_update_sharded(
     );
 }
 
+/// Quantile of |ΔL| the `Clip` variance guard clamps every probe to.
+pub const GUARD_CLIP_QUANTILE: f64 = 0.95;
+
+/// Relative variance floor of the `InvVar` guard: this fraction of the
+/// fleet-mean squared ghat is added to every contribution's variance
+/// before inversion, so a zero-variance contribution cannot absorb the
+/// whole update.
+pub const GUARD_VAR_FLOOR_REL: f64 = 1e-3;
+
+/// The `Clip` guard's |ΔL| threshold: the fleet's
+/// [`GUARD_CLIP_QUANTILE`] magnitude quantile over every probe
+/// (`f64::INFINITY` when there are none). NaN probes are filtered by the
+/// quantile, not propagated.
+fn clip_threshold(contributions: &[ZoContribution]) -> f64 {
+    let mags: Vec<f64> = contributions
+        .iter()
+        .flat_map(|c| c.delta_l.iter().map(|d| d.abs()))
+        .collect();
+    if mags.is_empty() {
+        f64::INFINITY
+    } else {
+        stats::percentile(&mags, GUARD_CLIP_QUANTILE)
+    }
+}
+
+/// Sample variance of a contribution's **final-block** ghat estimates
+/// (ΔL/(2ε) over its last `s_block` probes, each |ΔL| clamped to `clip`
+/// first — pass `f64::INFINITY` for the unguarded view) — the per-client
+/// noise level the `InvVar` guard inverts and the `eff_var` metric
+/// aggregates. `None` when fewer than 2 probes make the variance
+/// undefined.
+fn final_block_ghat_var(c: &ZoContribution, eps: f32, clip: f64) -> Option<f64> {
+    if c.s_block < 2 || c.delta_l.len() < c.s_block {
+        return None;
+    }
+    let start = c.delta_l.len() - c.s_block;
+    let ghats: Vec<f64> = c.delta_l[start..]
+        .iter()
+        .map(|d| d.clamp(-clip, clip) / (2.0 * eps as f64))
+        .collect();
+    let sd = stats::std_dev(&ghats);
+    Some(sd * sd)
+}
+
+/// The per-contribution aggregation weights of one ZOUPDATE: the base
+/// n_j/n_Q data weighting, optionally rescaled by the configured
+/// [`VarianceGuard`]. With `Off` (the default) this is exactly the seed
+/// repo's weighting, bit for bit; `InvVar` multiplies each weight by the
+/// floored inverse of that contribution's final-block ghat variance and
+/// renormalizes (contributions too small to define a variance use the
+/// fleet-mean variance); `Clip` leaves weights alone (it clamps ΔL
+/// instead — see [`zo_update_items`]). Weights always sum to 1 over the
+/// sample-carrying contributions, so the guard redistributes trust
+/// without changing the update's overall scale. Deterministic — every
+/// participant recomputing the broadcast reaches the identical list.
+pub fn contribution_weights(contributions: &[ZoContribution], cfg: &ZoConfig) -> Vec<f64> {
+    let n_total: f64 = contributions.iter().map(|c| c.n_samples as f64).sum();
+    if n_total == 0.0 {
+        return vec![0.0; contributions.len()];
+    }
+    let base: Vec<f64> = contributions
+        .iter()
+        .map(|c| c.n_samples as f64 / n_total)
+        .collect();
+    if cfg.guard != VarianceGuard::InvVar {
+        return base;
+    }
+    let vars: Vec<Option<f64>> = contributions
+        .iter()
+        .map(|c| final_block_ghat_var(c, cfg.eps, f64::INFINITY))
+        .collect();
+    let defined: Vec<f64> = vars.iter().filter_map(|v| *v).collect();
+    if defined.is_empty() {
+        return base; // nobody ran enough probes to estimate noise
+    }
+    let fallback = stats::mean(&defined);
+    // floor relative to the fleet's ghat magnitude so the guard is
+    // scale-invariant and a zero-variance client stays bounded
+    let mean_sq = {
+        let (mut sum, mut n) = (0.0f64, 0usize);
+        for c in contributions {
+            if c.delta_l.len() < c.s_block || c.s_block == 0 {
+                continue;
+            }
+            let start = c.delta_l.len() - c.s_block;
+            for d in &c.delta_l[start..] {
+                let g = d / (2.0 * cfg.eps as f64);
+                sum += g * g;
+                n += 1;
+            }
+        }
+        if n > 0 {
+            sum / n as f64
+        } else {
+            0.0
+        }
+    };
+    let floor = GUARD_VAR_FLOOR_REL * mean_sq + 1e-30;
+    let scaled: Vec<f64> = base
+        .iter()
+        .zip(&vars)
+        .map(|(w, v)| w / (v.unwrap_or(fallback) + floor))
+        .collect();
+    let z: f64 = scaled.iter().sum();
+    if z.is_finite() && z > 0.0 {
+        scaled.iter().map(|w| w / z).collect()
+    } else {
+        base
+    }
+}
+
+/// Variance proxy of this round's aggregated SPSA step:
+/// `Σ_j w_j² · Var_j / S_j` over the final-block ghat estimates (the
+/// standard variance of a weighted mean of per-client S_j-probe
+/// averages), computed with the *guarded* weights actually used by the
+/// fold. Always finite (0.0 when undefined) — logged per round as the
+/// `eff_var` CSV column so the adaptive-S / variance-guard ablations have
+/// a measurable target.
+pub fn effective_variance(contributions: &[ZoContribution], cfg: &ZoConfig) -> f64 {
+    let weights = contribution_weights(contributions, cfg);
+    // the metric measures the step the fold ACTUALLY takes: under the
+    // Clip guard the variance is that of the clamped estimates
+    let clip = if cfg.guard == VarianceGuard::Clip {
+        clip_threshold(contributions)
+    } else {
+        f64::INFINITY
+    };
+    let mut v = 0.0f64;
+    for (c, w) in contributions.iter().zip(&weights) {
+        if c.s_block == 0 || c.delta_l.len() < c.s_block {
+            continue;
+        }
+        if let Some(var) = final_block_ghat_var(c, cfg.eps, clip) {
+            v += w * w * var / c.s_block as f64;
+        }
+    }
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
 /// The order-canonical fused (seed, coeff) item list of one ZOUPDATE —
 /// the single source of truth shared by the live server pass
-/// ([`apply_zo_update_sharded`]) and the checkpoint/catch-up seed log
-/// ([`crate::ckpt::CheckpointStore`]): replaying these items through
-/// `perturb_axpy_many_sharded` from the same starting weights reproduces
-/// the server's update bit for bit. Empty when no contribution carries
-/// samples (an all-drop round is the identity update).
+/// ([`apply_zo_update_sharded`]), the round-end broadcast accounting, and
+/// the checkpoint/catch-up seed log ([`crate::ckpt::CheckpointStore`]):
+/// replaying these items through `perturb_axpy_many_sharded` from the
+/// same starting weights reproduces the server's update bit for bit.
+/// Empty when no contribution carries samples (an all-drop round is the
+/// identity update).
+///
+/// Heterogeneous probe counts are first-class: each contribution's block
+/// structure comes from its **explicit** `s_block` (per-step S_j), its
+/// ghat normalizes by its own S_j, and the configured [`VarianceGuard`]
+/// rescales weights ([`contribution_weights`]) or clamps outlier ΔLs
+/// before the coefficients are formed — so the guard rides inside the
+/// single fused artifact and every consumer (live pass, broadcast
+/// replayers, checkpoint log, catch-up reconstruction) stays bit-aligned.
+///
+/// # Panics
+///
+/// On a malformed contribution — `s_block == 0`, `delta_l.len() !=
+/// seeds.len()`, or a seed list that is not a whole number of `s_block`
+/// blocks. These are hard guards (not `debug_assert`): in release builds
+/// a partial block would silently mis-assign the intermediate-vs-final
+/// lr split and corrupt the update.
 pub fn zo_update_items(
     contributions: &[ZoContribution],
     cfg: &ZoConfig,
     lr_client: f32,
     lr_server: f32,
 ) -> Vec<(u64, f32)> {
-    let n_total: f64 = contributions.iter().map(|c| c.n_samples as f64).sum();
-    if n_total == 0.0 {
+    for c in contributions {
+        assert!(
+            c.s_block > 0,
+            "client {}: contribution carries s_block = 0",
+            c.client
+        );
+        assert_eq!(
+            c.delta_l.len(),
+            c.seeds.len(),
+            "client {}: ΔL count != seed count",
+            c.client
+        );
+        assert_eq!(
+            c.seeds.len() % c.s_block,
+            0,
+            "client {}: {} seeds is not a whole number of S = {} blocks",
+            c.client,
+            c.seeds.len(),
+            c.s_block
+        );
+    }
+    let weights = contribution_weights(contributions, cfg);
+    if weights.iter().all(|&w| w == 0.0) {
         return Vec::new();
     }
     // The f32 product preserves bit-compatibility with the historical
     // single-lr API for grad_steps = 1 runs.
     let lr_final = lr_client * lr_server;
+    // The Clip guard clamps |ΔL| to the fleet quantile before ghat is
+    // formed; stats::percentile filters NaN, so a poisoned probe cannot
+    // panic the fold.
+    let clip = if cfg.guard == VarianceGuard::Clip {
+        clip_threshold(contributions)
+    } else {
+        f64::INFINITY
+    };
     // Gather every (seed, coeff) pair for ONE fused pass over the weights
     // (perturb_axpy_many) — the updates are linear in w, so order is
     // immaterial up to f32 rounding (§Perf L3).
     let mut items: Vec<(u64, f32)> = Vec::new();
-    for c in contributions {
-        let weight = c.n_samples as f64 / n_total;
-        debug_assert_eq!(
-            c.seeds.len() % cfg.s_seeds,
-            0,
-            "seed count must be a whole number of S-blocks"
-        );
-        let blocks = (c.seeds.len() / cfg.s_seeds).max(1);
+    for (c, &weight) in contributions.iter().zip(&weights) {
+        let blocks = c.seeds.len() / c.s_block;
         for (i, &seed) in c.seeds.iter().enumerate() {
-            let block = i / cfg.s_seeds;
+            let block = i / c.s_block;
             let lr = if block + 1 == blocks { lr_final } else { lr_client };
-            let ghat = c.delta_l[i] / (2.0 * cfg.eps as f64);
-            let coeff = -(lr as f64) * weight * ghat / cfg.s_seeds as f64;
+            let dl = if cfg.guard == VarianceGuard::Clip {
+                c.delta_l[i].clamp(-clip, clip)
+            } else {
+                c.delta_l[i]
+            };
+            let ghat = dl / (2.0 * cfg.eps as f64);
+            let coeff = -(lr as f64) * weight * ghat / c.s_block as f64;
             items.push((seed, coeff as f32));
         }
     }
@@ -383,6 +584,7 @@ mod tests {
             s_seeds: 4,
             dist: Distribution::Rademacher,
             grad_steps: 1,
+            ..ZoConfig::default()
         };
         let iss = SeedIssuer::new(0);
         let l0 = be.fwd_loss(&global, &batch).unwrap().mean_loss();
@@ -402,6 +604,7 @@ mod tests {
                 seeds,
                 delta_l: deltas,
                 n_samples: 16,
+                s_block: cfg.s_seeds,
             };
             apply_zo_update(&mut global, &[contrib], &cfg, 1.0, 0.3);
         }
@@ -419,6 +622,7 @@ mod tests {
             seeds: vec![seed, seed + 1, seed + 2],
             delta_l: vec![dl; 3],
             n_samples: n,
+            s_block: 3,
         };
         let mut a = ParamVec::zeros(1000);
         apply_zo_update(&mut a, &[mk(1, 0.5, 100), mk(9, 0.5, 0)], &cfg, 1.0, 0.1);
@@ -446,6 +650,7 @@ mod tests {
             s_seeds: 2,
             dist: Distribution::Rademacher,
             grad_steps: 2,
+            ..ZoConfig::default()
         };
         let b1 = sep_batch(8, 6, 1);
         let b2 = sep_batch(8, 6, 2);
@@ -478,6 +683,7 @@ mod tests {
                 seeds: seeds.clone(),
                 delta_l: deltas.clone(),
                 n_samples: 8,
+                s_block: cfg.s_seeds,
             }],
             &cfg,
             lr_client,
@@ -523,6 +729,7 @@ mod tests {
             seeds: vec![5, 6, 7],
             delta_l: vec![0.4, -0.2, 0.1],
             n_samples: 10,
+            s_block: 3,
         };
         let mut a = ParamVec::zeros(2048);
         apply_zo_update(&mut a, &[contrib.clone()], &cfg, 0.7, 0.3);
@@ -543,12 +750,14 @@ mod tests {
                 seeds: vec![5, 6, 7],
                 delta_l: vec![0.4, -0.2, 0.1],
                 n_samples: 10,
+                s_block: 3,
             },
             ZoContribution {
                 client: 1,
                 seeds: vec![11, 12, 13],
                 delta_l: vec![-0.3, 0.0, 0.25],
                 n_samples: 30,
+                s_block: 3,
             },
         ];
         let mut a = ParamVec(vec![0.1f32; 2048]);
@@ -567,6 +776,7 @@ mod tests {
             seeds: vec![1, 2, 3],
             delta_l: vec![1.0; 3],
             n_samples: 0,
+            s_block: 3,
         };
         assert!(zo_update_items(&[zero], &cfg, 1.0, 1.0).is_empty());
     }
@@ -598,6 +808,7 @@ mod tests {
             s_seeds: 4,
             dist: Distribution::Gaussian,
             grad_steps: 1,
+            ..ZoConfig::default()
         };
         let iss = SeedIssuer::new(1);
         let l0 = be.fwd_loss(&global, &batch).unwrap().mean_loss();
@@ -612,6 +823,7 @@ mod tests {
                     seeds,
                     delta_l: deltas,
                     n_samples: 16,
+                    s_block: cfg.s_seeds,
                 }],
                 &cfg,
                 1.0,
@@ -691,9 +903,12 @@ mod tests {
     #[test]
     fn prop_ledger_outcomes_additive_under_drops() {
         // satellite: zo_round_ledger additivity holds under randomly
-        // generated capability profiles and drop patterns. Charges are
-        // produced by the real simulator, not hand-rolled numbers.
-        use crate::sim::{simulate_round, CapabilityProfile, RoundPlan};
+        // generated capability profiles and drop patterns — including
+        // heterogeneous per-client probe budgets produced by the REAL
+        // adaptive planner (extended for the adaptive-S tentpole).
+        // Charges are produced by the real simulator, not hand-rolled
+        // numbers.
+        use crate::sim::{max_affordable_s, simulate_round, CapabilityProfile, RoundPlan};
         crate::util::prop::run_prop("zo_ledger_additivity", 120, |g| {
             let mut rng = g.rng();
             let n_clients = 1 + rng.below(g.size.max(1).min(24));
@@ -714,11 +929,32 @@ mod tests {
                     join_round: 0,
                     absent_rate: 0.0,
                 };
-                let issued_seeds = 1 + rng.below(48);
                 // catch-up downlink (the ckpt subsystem's min(snapshot,
                 // tail) charge) rides the same download leg as the seed
                 // issue — additivity must hold with it in the plan too
                 let catch_up = rng.below(1 << 16) as u64;
+                // half the cases draw the probe count from the adaptive
+                // planner against a random budget (the tentpole's issuing
+                // path); the rest stay arbitrary
+                let issued_seeds = if rng.below(2) == 0 {
+                    let steps = 1 + rng.below(3);
+                    let s_min = 1 + rng.below(3);
+                    let s_max = s_min + rng.below(24);
+                    let budget = rng.next_f64() * 10.0;
+                    let s = max_affordable_s(&profile, 100_000, budget, s_min, s_max, |s| {
+                        RoundPlan {
+                            down_bytes: catch_up + (s * steps * 8) as u64,
+                            passes: (2 * s * 50) as f64,
+                            up_bytes: (s * steps * 4) as u64,
+                        }
+                    });
+                    if !(s_min..=s_max).contains(&s) {
+                        return Err(format!("planner out of bounds: {s}"));
+                    }
+                    s * steps
+                } else {
+                    1 + rng.below(48)
+                };
                 let plan = RoundPlan {
                     down_bytes: catch_up + (issued_seeds * 8) as u64,
                     passes: rng.below(2000) as f64 * 2.0,
@@ -842,5 +1078,224 @@ mod tests {
         let (up, down) = zo_round_ledger(9, 2, 0, d4);
         assert_eq!(up, 9 * 4);
         assert_eq!(down, (9 * 8 + 2 * 9 * 12) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number of S = 3 blocks")]
+    fn update_items_hard_rejects_partial_block() {
+        // satellite: the whole-block invariant is a hard guard in release
+        // builds — a malformed contribution must never silently mis-assign
+        // the intermediate-vs-final lr split
+        let cfg = ZoConfig::default();
+        let bad = ZoContribution {
+            client: 7,
+            seeds: vec![1, 2, 3, 4], // 4 seeds, s_block 3: partial block
+            delta_l: vec![0.1; 4],
+            n_samples: 5,
+            s_block: 3,
+        };
+        zo_update_items(&[bad], &cfg, 1.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ΔL count != seed count")]
+    fn update_items_hard_rejects_mismatched_deltas() {
+        let cfg = ZoConfig::default();
+        let bad = ZoContribution {
+            client: 2,
+            seeds: vec![1, 2, 3],
+            delta_l: vec![0.1; 2],
+            n_samples: 5,
+            s_block: 3,
+        };
+        zo_update_items(&[bad], &cfg, 1.0, 1.0);
+    }
+
+    #[test]
+    fn heterogeneous_s_blocks_normalize_per_client() {
+        // adaptive-S: each contribution's ghat averages over ITS OWN probe
+        // count. Two equal-n clients with identical per-probe ΔL but
+        // different S_j must contribute the same total update mass
+        // (coeff · S_j is S-invariant at fixed ΔL).
+        let cfg = ZoConfig::default();
+        let mk = |client: usize, s: usize| ZoContribution {
+            client,
+            seeds: (client as u64 * 100..client as u64 * 100 + s as u64).collect(),
+            delta_l: vec![0.4; s],
+            n_samples: 10,
+            s_block: s,
+        };
+        let items = zo_update_items(&[mk(0, 2), mk(1, 8)], &cfg, 1.0, 1.0);
+        assert_eq!(items.len(), 10);
+        let mass_a: f64 = items[..2].iter().map(|(_, c)| *c as f64).sum();
+        let mass_b: f64 = items[2..].iter().map(|(_, c)| *c as f64).sum();
+        assert!((mass_a - mass_b).abs() < 1e-9, "{mass_a} vs {mass_b}");
+        // and the per-item coeff really divides by the client's own S_j
+        assert!((items[0].1 as f64 * 2.0 - items[2].1 as f64 * 8.0).abs() < 1e-9);
+        // replaying the heterogeneous item list through the fused pass
+        // still matches apply_zo_update (the ckpt contract)
+        let contribs = [mk(0, 2), mk(1, 8)];
+        let mut a = ParamVec(vec![0.2f32; 2048]);
+        let mut b = a.clone();
+        apply_zo_update(&mut a, &contribs, &cfg, 0.7, 0.3);
+        let items = zo_update_items(&contribs, &cfg, 0.7, 0.3);
+        crate::model::params::perturb_axpy_many_sharded(
+            &mut b.0, &items, cfg.tau, cfg.dist, 1,
+        );
+        assert_eq!(a.0, b.0);
+    }
+
+    #[test]
+    fn invvar_guard_shifts_weight_to_tight_contributions() {
+        let mut cfg = ZoConfig::default();
+        let mk = |client: usize, deltas: Vec<f64>| ZoContribution {
+            client,
+            seeds: (client as u64 * 10..client as u64 * 10 + deltas.len() as u64).collect(),
+            delta_l: deltas,
+            n_samples: 10,
+            s_block: 3,
+        };
+        let tight = mk(0, vec![0.10, 0.11, 0.09]);
+        let noisy = mk(1, vec![2.0, -1.8, 0.4]);
+        let contribs = [tight, noisy];
+        let off = contribution_weights(&contribs, &cfg);
+        assert_eq!(off, vec![0.5, 0.5], "equal n ⇒ equal base weights");
+        cfg.guard = crate::config::VarianceGuard::InvVar;
+        let on = contribution_weights(&contribs, &cfg);
+        assert!((on.iter().sum::<f64>() - 1.0).abs() < 1e-12, "weights renormalize");
+        assert!(
+            on[0] > 0.9 && on[1] < 0.1,
+            "inverse-variance must favor the tight client: {on:?}"
+        );
+        // guard folds into the fused artifact: the noisy client's items
+        // shrink relative to the unguarded fold
+        cfg.guard = crate::config::VarianceGuard::Off;
+        let items_off = zo_update_items(&contribs, &cfg, 1.0, 1.0);
+        cfg.guard = crate::config::VarianceGuard::InvVar;
+        let items_on = zo_update_items(&contribs, &cfg, 1.0, 1.0);
+        let max_noisy = |items: &[(u64, f32)]| {
+            items[3..].iter().map(|(_, c)| c.abs()).fold(0.0f32, f32::max)
+        };
+        assert!(max_noisy(&items_on) < max_noisy(&items_off));
+        // degenerate single-probe fleet: variance undefined everywhere,
+        // guard falls back to the base weighting
+        let single = [
+            ZoContribution {
+                client: 0,
+                seeds: vec![1],
+                delta_l: vec![0.5],
+                n_samples: 4,
+                s_block: 1,
+            },
+            ZoContribution {
+                client: 1,
+                seeds: vec![2],
+                delta_l: vec![-0.5],
+                n_samples: 12,
+                s_block: 1,
+            },
+        ];
+        let w = contribution_weights(&single, &cfg);
+        assert_eq!(w, vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn clip_guard_bounds_outlier_probes() {
+        let mut cfg = ZoConfig::default();
+        let mut deltas = vec![0.1f64; 29];
+        deltas.push(50.0); // one exploding probe
+        let c = ZoContribution {
+            client: 0,
+            seeds: (0..30).collect(),
+            delta_l: deltas,
+            n_samples: 10,
+            s_block: 30,
+        };
+        let off = zo_update_items(std::slice::from_ref(&c), &cfg, 1.0, 1.0);
+        cfg.guard = crate::config::VarianceGuard::Clip;
+        let on = zo_update_items(std::slice::from_ref(&c), &cfg, 1.0, 1.0);
+        let max_off = off.iter().map(|(_, v)| v.abs()).fold(0.0f32, f32::max);
+        let max_on = on.iter().map(|(_, v)| v.abs()).fold(0.0f32, f32::max);
+        assert!(
+            max_on < max_off / 10.0,
+            "clip must bound the outlier: {max_on} vs {max_off}"
+        );
+        // the non-outlier probes are untouched (0.1 is far below the
+        // 95th-percentile magnitude)
+        assert_eq!(on[0], off[0]);
+        // the eff_var metric reflects the clamped fold, not the raw
+        // probes — clip must visibly cut the measured variance
+        let ev_on = effective_variance(std::slice::from_ref(&c), &cfg);
+        cfg.guard = crate::config::VarianceGuard::Off;
+        let ev_off = effective_variance(std::slice::from_ref(&c), &cfg);
+        assert!(
+            ev_on < ev_off / 10.0,
+            "clip must cut the measured effective variance: {ev_on} vs {ev_off}"
+        );
+        cfg.guard = crate::config::VarianceGuard::Clip;
+        // a NaN-poisoned probe must not panic the quantile (satellite:
+        // stats::percentile is NaN-safe now)
+        let mut poisoned = c.clone();
+        poisoned.delta_l[3] = f64::NAN;
+        let _ = zo_update_items(&[poisoned], &cfg, 1.0, 1.0);
+    }
+
+    #[test]
+    fn guard_off_is_bit_identical_to_legacy_weighting() {
+        // acceptance: the default guard reproduces the plain n_j/n_Q fold
+        // exactly — same items, same bits
+        let cfg = ZoConfig::default();
+        assert_eq!(cfg.guard, crate::config::VarianceGuard::Off);
+        let contribs = [
+            ZoContribution {
+                client: 0,
+                seeds: vec![5, 6, 7],
+                delta_l: vec![0.4, -0.2, 0.1],
+                n_samples: 10,
+                s_block: 3,
+            },
+            ZoContribution {
+                client: 1,
+                seeds: vec![11, 12, 13],
+                delta_l: vec![-0.3, 0.0, 0.25],
+                n_samples: 30,
+                s_block: 3,
+            },
+        ];
+        let items = zo_update_items(&contribs, &cfg, 0.7, 0.3);
+        // hand-computed legacy coefficients
+        let lr = 0.7f32 * 0.3f32;
+        for (k, c) in contribs.iter().enumerate() {
+            let weight = c.n_samples as f64 / 40.0;
+            for i in 0..3 {
+                let ghat = c.delta_l[i] / (2.0 * cfg.eps as f64);
+                let coeff = -(lr as f64) * weight * ghat / 3.0;
+                assert_eq!(items[k * 3 + i].1.to_bits(), (coeff as f32).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn effective_variance_is_finite_and_shrinks_with_probes() {
+        let cfg = ZoConfig::default();
+        assert_eq!(effective_variance(&[], &cfg), 0.0);
+        let mk = |s: usize, scale: f64| ZoContribution {
+            client: 0,
+            seeds: (0..s as u64).collect(),
+            // alternating ±scale: variance ≈ scale² regardless of S
+            delta_l: (0..s).map(|i| if i % 2 == 0 { scale } else { -scale }).collect(),
+            n_samples: 10,
+            s_block: s,
+        };
+        let few = effective_variance(&[mk(4, 0.2)], &cfg);
+        let many = effective_variance(&[mk(16, 0.2)], &cfg);
+        assert!(few.is_finite() && many.is_finite());
+        assert!(few > 0.0);
+        assert!(
+            many < few,
+            "more probes must cut the estimator variance: {many} vs {few}"
+        );
+        // single-probe contributions have no defined variance → 0.0, finite
+        assert_eq!(effective_variance(&[mk(1, 0.2)], &cfg), 0.0);
     }
 }

@@ -191,6 +191,114 @@ fn rejoin_after_drop_reconstructs_bit_identical_to_continuous() {
 }
 
 #[test]
+fn rejoin_with_heterogeneous_s_reconstructs_bit_identical_to_continuous() {
+    // acceptance: the bit-exact rejoin guarantee survives heterogeneous
+    // per-client probe budgets — adaptive-S items (variable S_j, guarded
+    // weights) flow through the same fused (seed, coeff) artifact, so
+    // snapshot + tail replay still lands exactly on the live state at
+    // every worker count {1, 2, 4}.
+    let mut finals: Vec<(ParamVec, u64, u64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut cfg = Scale::Smoke.fed();
+        cfg.lr_client_warm = 0.06;
+        cfg.lr_client_zo = 1.0;
+        cfg.lr_server_zo = 0.01;
+        cfg.zo.eps = 1e-3;
+        cfg.threads = threads;
+        cfg.ckpt_every = 2;
+        cfg.zo.adaptive_s = true;
+        cfg.zo.s_min = 1;
+        cfg.zo.s_max = 8;
+        cfg.scenario = Scenario::preset("churn").unwrap();
+        let (shards, test) = setup(&cfg);
+        let be = probe();
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg.clone(), &be, shards, test, init).unwrap();
+        let mut entering: Vec<ParamVec> = Vec::new();
+        while fed.round < cfg.rounds_total {
+            entering.push(fed.global.clone());
+            fed.step().unwrap();
+        }
+        entering.push(fed.global.clone());
+        // heterogeneous budgets must actually occur: past round 8 the
+        // late tier has deterministically joined, so the planner sees
+        // both the 4x-faster anchors and the slow late/flaky tiers
+        let all: Vec<usize> = (0..cfg.clients).collect();
+        let counts = fed.planned_seed_counts(&all);
+        let distinct: std::collections::BTreeSet<usize> =
+            counts.iter().map(|&(_, s)| s).collect();
+        assert!(
+            distinct.len() > 1,
+            "churn + adaptive must plan heterogeneous budgets: {counts:?}"
+        );
+        let base = fed.ckpt.base_round();
+        let top = base + fed.ckpt.tail_rounds();
+        assert_eq!(top, cfg.rounds_total, "store must cover the full run");
+        for target in base..=top {
+            let rebuilt = fed
+                .ckpt
+                .reconstruct(target, cfg.zo.tau, cfg.zo.dist, threads)
+                .unwrap();
+            assert_eq!(
+                rebuilt, entering[target],
+                "heterogeneous-S rejoin diverged at round {target} (threads {threads})"
+            );
+        }
+        assert!(fed.ledger.catch_up_down_total > 0);
+        assert!(fed.ledger.seeds_total > 0);
+        assert!(fed.global.is_finite());
+        finals.push((
+            fed.global.clone(),
+            fed.ledger.catch_up_down_total,
+            fed.ledger.seeds_total,
+        ));
+    }
+    for f in &finals[1..] {
+        assert_eq!(f.0, finals[0].0, "weights must not depend on threads");
+        assert_eq!(f.1, finals[0].1, "catch-up bytes must not depend on threads");
+        assert_eq!(f.2, finals[0].2, "issued seeds must not depend on threads");
+    }
+}
+
+#[test]
+fn adaptive_s_off_leaves_existing_fixtures_bit_identical() {
+    // acceptance: the new knobs at their defaults change NOTHING — a run
+    // with the fields explicitly forced to the documented defaults equals
+    // the plain default run bit for bit (weights, logs, ledgers, and the
+    // new accounting columns).
+    let run = |touch: bool| {
+        let mut cfg = Scale::Smoke.fed();
+        cfg.lr_client_warm = 0.06;
+        cfg.lr_client_zo = 1.0;
+        cfg.lr_server_zo = 0.01;
+        cfg.zo.eps = 1e-3;
+        cfg.scenario = Scenario::preset("stragglers").unwrap();
+        if touch {
+            cfg.zo.adaptive_s = false;
+            cfg.zo.s_min = 1;
+            cfg.zo.s_max = 16;
+            cfg.zo.guard = zowarmup::config::VarianceGuard::Off;
+        }
+        let (shards, test) = setup(&cfg);
+        let be = probe();
+        let mut fed =
+            Federation::new(cfg, &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+        fed.run().unwrap();
+        (fed.global.clone(), fed.log.clone(), fed.ledger.clone())
+    };
+    let (g_a, log_a, led_a) = run(false);
+    let (g_b, log_b, led_b) = run(true);
+    assert_eq!(g_a, g_b);
+    assert_eq!((led_a.up_total, led_a.down_total), (led_b.up_total, led_b.down_total));
+    assert_eq!(led_a.seeds_total, led_b.seeds_total);
+    for (a, b) in log_a.rounds.iter().zip(&log_b.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.seeds_issued, b.seeds_issued);
+        assert_eq!(a.eff_var.to_bits(), b.eff_var.to_bits());
+    }
+}
+
+#[test]
 fn checkpointing_is_observational_without_deadlines() {
     // with no round deadline, the catch-up download can never change who
     // survives — so enabling checkpointing changes ONLY the byte
