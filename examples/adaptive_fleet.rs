@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     let all: Vec<usize> = (0..cfg.clients).collect();
     let mut per_tier: Vec<(String, Vec<usize>)> = Vec::new();
     for (cid, s_j) in fed.planned_seed_counts(&all) {
-        let tier = fed.clients[cid].profile.tier.clone();
+        let tier = fed.pop.profile(cid).tier;
         match per_tier.iter_mut().find(|(t, _)| *t == tier) {
             Some((_, v)) => v.push(s_j),
             None => per_tier.push((tier, vec![s_j])),

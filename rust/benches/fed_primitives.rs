@@ -152,6 +152,34 @@ fn main() {
             });
         }
 
+        // the fleet-scale tentpole: O(sampled) ZO rounds over lazy
+        // populations — the N=1e3 and N=1e7 rows must land within noise
+        // of each other, because nothing in a round is O(N)
+        for n_clients in [1_000usize, 10_000_000] {
+            let mut c = cfg.clone();
+            c.clients = n_clients;
+            c.sample_zo = 64;
+            c.population = zowarmup::config::PopulationMode::Lazy;
+            c.scenario = zowarmup::sim::Scenario::preset("fleet").unwrap();
+            let init = ParamVec::zeros(be.dim());
+            let mut fed = Federation::new_lazy(
+                c,
+                &be,
+                src.clone(),
+                test_src.clone(),
+                init,
+            )
+            .unwrap();
+            let label = if n_clients == 1_000 {
+                "zo_round N=1e3 K=64"
+            } else {
+                "zo_round N=1e7 K=64"
+            };
+            b.iter(label, || {
+                black_box(fed.zo_round().unwrap());
+            });
+        }
+
         // adaptive probe budgets: the planner's O(Q log S) inversion plus
         // the heterogeneous-S round itself, vs the uniform row above
         {

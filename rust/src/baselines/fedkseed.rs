@@ -27,7 +27,8 @@ use crate::comm::{CommLedger, CostModel};
 use crate::config::FedConfig;
 use crate::data::loader::{eval_chunks, ClientData, Source};
 use crate::fed::aggregate::{weighted_average, ServerOptState};
-use crate::fed::client::{clients_from_profiles, round_client_rng, warm_local_train, ClientState};
+use crate::fed::client::{clients_from_profiles, round_client_rng, warm_local_train};
+use crate::fed::population::Population;
 use crate::fed::server::{finite_signal, RoundSummary};
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
@@ -116,7 +117,8 @@ pub struct FedKSeedRun<'a, B: ModelBackend> {
     pub cfg: FedConfig,
     pub ks: KSeedConfig,
     pub backend: &'a B,
-    pub clients: Vec<ClientState>,
+    /// the client population (materialized or lazy — `fed::population`)
+    pub pop: Population,
     pub test: Source,
     pub global: ParamVec,
     pub pool: Vec<u64>,
@@ -138,12 +140,50 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
         init: ParamVec,
     ) -> anyhow::Result<Self> {
         cfg.validate()?;
-        anyhow::ensure!(ks.pool_size > 0 && ks.local_steps > 0, "bad KSeedConfig");
+        anyhow::ensure!(shards.len() == cfg.clients, "shard count != clients");
         let cost = backend.cost_model();
         let profiles = cfg
             .scenario
             .sample_profiles(cfg.clients, cfg.hi_count(), cfg.seed, &cost);
         let clients = clients_from_profiles(shards, profiles, &cost);
+        Self::with_population(cfg, ks, backend, Population::materialized(clients), test, init)
+    }
+
+    /// Fleet-scale constructor: lazy per-client derivation over a shared
+    /// source (see `fed::population`).
+    pub fn new_lazy(
+        cfg: FedConfig,
+        ks: KSeedConfig,
+        backend: &'a B,
+        source: Source,
+        test: Source,
+        init: ParamVec,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let cost = backend.cost_model();
+        let pop = Population::lazy(
+            cfg.clients,
+            cfg.hi_count(),
+            cfg.seed,
+            cfg.scenario.clone(),
+            cost,
+            source,
+        )?;
+        Self::with_population(cfg, ks, backend, pop, test, init)
+    }
+
+    pub fn with_population(
+        cfg: FedConfig,
+        ks: KSeedConfig,
+        backend: &'a B,
+        pop: Population,
+        test: Source,
+        init: ParamVec,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(pop.len() == cfg.clients, "population size != clients");
+        anyhow::ensure!(ks.pool_size > 0 && ks.local_steps > 0, "bad KSeedConfig");
+        let cost = backend.cost_model();
         let mut pool_rng = Xoshiro256::seed_from(cfg.seed ^ 0x4B_5EED);
         let pool: Vec<u64> = (0..ks.pool_size).map(|_| pool_rng.next_u64()).collect();
         let server_opt = ServerOptState::new(cfg.server_opt, backend.dim());
@@ -152,7 +192,7 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             cfg,
             ks,
             backend,
-            clients,
+            pop,
             test,
             global: init,
             pool,
@@ -173,40 +213,38 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
     }
 
     fn warm_round(&mut self, round: usize) -> anyhow::Result<RoundSummary> {
-        let hi: Vec<usize> = self
-            .clients
-            .iter()
-            .filter(|c| c.is_high())
-            .map(|c| c.id)
-            .collect();
-        anyhow::ensure!(!hi.is_empty(), "no FO-capable clients to warm up");
-        let p = self.cfg.sample_warm.clamp(1, hi.len());
-        let picked: Vec<usize> = self.rng.choose(hi.len(), p).into_iter().map(|i| hi[i]).collect();
+        let picked = self
+            .pop
+            .sample_high(&mut self.rng, self.cfg.sample_warm, &self.cost)?;
         // simulate capability timelines, then fan survivors out with
-        // pre-derived RNGs; fold back in sampled order (see fed::server's
-        // threading model)
+        // pre-derived RNGs and shards; fold back in sampled order (see
+        // fed::server's threading model)
         let deadline = self.cfg.scenario.deadline_ms();
         let d4 = (self.backend.dim() * 4) as u64;
-        let mut jobs: Vec<(usize, Xoshiro256)> = Vec::with_capacity(p);
+        let mut jobs: Vec<(usize, ClientData, Xoshiro256)> = Vec::with_capacity(picked.len());
         let (mut up, mut down) = (0u64, 0u64);
         let mut dropped = 0usize;
         for &cid in &picked {
-            let client = &self.clients[cid];
-            if !sim::is_available(&client.profile, self.cfg.seed, round, cid) {
+            let profile = self.pop.profile(cid);
+            if !sim::is_available(&profile, self.cfg.seed, round, cid) {
                 dropped += 1;
                 continue;
             }
             let plan = sim::RoundPlan {
                 down_bytes: d4,
-                passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
+                passes: sim::fo_passes(self.pop.n_samples(cid), self.cfg.local_epochs),
                 up_bytes: d4,
             };
             let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, round, cid);
-            let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+            let o = sim::simulate_round(&profile, &plan, self.cost.params, deadline, &mut trace);
             up += o.up_bytes;
             down += o.down_bytes;
             if o.survives {
-                jobs.push((cid, round_client_rng(self.cfg.seed, 0, round, cid)));
+                jobs.push((
+                    cid,
+                    self.pop.data(cid),
+                    round_client_rng(self.cfg.seed, 0, round, cid),
+                ));
             } else {
                 dropped += 1;
             }
@@ -214,19 +252,22 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
         let results = {
             let backend = self.backend;
             let global = &self.global;
-            let clients = &self.clients;
             let cfg = &self.cfg;
-            parallel_map_n(resolve_workers(self.cfg.threads), jobs, move |(cid, mut crng)| {
-                warm_local_train(backend, global, &clients[cid].data, cfg, &mut crng)
-                    .map(|out| (cid, out))
-            })
+            parallel_map_n(
+                resolve_workers(self.cfg.threads),
+                jobs,
+                move |(cid, data, mut crng)| {
+                    warm_local_train(backend, global, &data, cfg, &mut crng)
+                        .map(|out| (cid, data.n(), out))
+                },
+            )
         };
         let mut updates = Vec::new();
         let mut train = LossSums::default();
         for r in results {
-            let (cid, (w, sums)) = r?;
+            let (_cid, n, (w, sums)) = r?;
             train.add(sums);
-            updates.push((w, self.clients[cid].n() as f64));
+            updates.push((w, n as f64));
         }
         self.ledger.record_round(up, down);
         if updates.is_empty() {
@@ -261,13 +302,13 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
         // survivors, RNGs pre-derived, fold in sampled order
         let deadline = self.cfg.scenario.deadline_ms();
         let per_client_up = (self.ks.local_steps * (4 + 4)) as u64;
-        let mut jobs: Vec<(usize, Xoshiro256)> = Vec::with_capacity(q);
+        let mut jobs: Vec<(usize, ClientData, Xoshiro256)> = Vec::with_capacity(q);
         let mut up = 0u64;
         let mut dropped = 0usize;
         for &cid in &picked {
-            let client = &self.clients[cid];
-            if !sim::is_available(&client.profile, self.cfg.seed, round, cid)
-                || !client.profile.zo_capable(&self.cost)
+            let profile = self.pop.profile(cid);
+            if !sim::is_available(&profile, self.cfg.seed, round, cid)
+                || !profile.zo_capable(&self.cost)
             {
                 dropped += 1;
                 continue;
@@ -278,10 +319,14 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 up_bytes: per_client_up,
             };
             let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, round, cid);
-            let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+            let o = sim::simulate_round(&profile, &plan, self.cost.params, deadline, &mut trace);
             up += o.up_bytes;
             if o.survives {
-                jobs.push((cid, round_client_rng(self.cfg.seed, 0x4B, round, cid)));
+                jobs.push((
+                    cid,
+                    self.pop.data(cid),
+                    round_client_rng(self.cfg.seed, 0x4B, round, cid),
+                ));
             } else {
                 dropped += 1;
             }
@@ -289,34 +334,37 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
         let results = {
             let backend = self.backend;
             let global = &self.global;
-            let clients = &self.clients;
             let pool = &self.pool;
             let ks = &self.ks;
             let cfg = &self.cfg;
-            parallel_map_n(resolve_workers(self.cfg.threads), jobs, move |(cid, mut crng)| {
-                kseed_local(
-                    backend,
-                    global,
-                    &clients[cid].data,
-                    pool,
-                    ks,
-                    &cfg.zo,
-                    cfg.lr_client_zo,
-                    &mut crng,
-                )
-                .map(|hist| (cid, hist))
-            })
+            parallel_map_n(
+                resolve_workers(self.cfg.threads),
+                jobs,
+                move |(cid, data, mut crng)| {
+                    kseed_local(
+                        backend,
+                        global,
+                        &data,
+                        pool,
+                        ks,
+                        &cfg.zo,
+                        cfg.lr_client_zo,
+                        &mut crng,
+                    )
+                    .map(|hist| (cid, data.n(), hist))
+                },
+            )
         };
         let mut histories: Vec<(Vec<SeedGrad>, f64)> = Vec::new();
         let mut mean_abs = 0.0f64;
         let mut count = 0usize;
         for r in results {
-            let (cid, hist) = r?;
+            let (_cid, n, hist) = r?;
             for h in &hist {
                 mean_abs += h.ghat.abs();
                 count += 1;
             }
-            histories.push((hist, self.clients[cid].n() as f64));
+            histories.push((hist, n as f64));
         }
         let n_total: f64 = histories.iter().map(|(_, n)| n).sum();
         let lr = self.cfg.lr_client_zo * self.cfg.lr_server_zo;
@@ -519,6 +567,47 @@ mod tests {
             wa > ca,
             "warm 1-step ({wa}) must beat cold multi-step ({ca})"
         );
+    }
+
+    #[test]
+    fn lazy_population_fedkseed_runs_deterministically() {
+        // the fleet-scale constructor end-to-end: lazy profiles + keyed
+        // shards through both phases, deterministic per seed
+        let run = || {
+            let mut cfg = FedConfig::default().smoke_scale();
+            cfg.clients = 512;
+            cfg.rounds_total = 6;
+            cfg.pivot = 2;
+            cfg.population = crate::config::PopulationMode::Lazy;
+            cfg.scenario = crate::sim::Scenario::preset("fleet").unwrap();
+            cfg.lr_client_warm = 0.06;
+            cfg.lr_client_zo = 1.0;
+            cfg.lr_server_zo = 0.01;
+            let (train, test) = train_test(SynthKind::Synth10, 300, 100, cfg.seed);
+            let be = LinearBackend::pooled(32 * 32 * 3, 2, 10, 32);
+            let ks = KSeedConfig {
+                pool_size: 32,
+                local_steps: 2,
+                step_batch: 8,
+            };
+            let mut run = FedKSeedRun::new_lazy(
+                cfg,
+                ks,
+                &be,
+                Source::Image(Arc::new(train)),
+                Source::Image(Arc::new(test)),
+                ParamVec::zeros(be.dim()),
+            )
+            .unwrap();
+            run.run().unwrap();
+            (run.global.clone(), run.ledger.up_total, run.ledger.down_total)
+        };
+        let (g1, up1, down1) = run();
+        let (g2, up2, down2) = run();
+        assert_eq!(g1, g2);
+        assert_eq!((up1, down1), (up2, down2));
+        assert!(g1.is_finite());
+        assert!(up1 > 0, "ZO rounds must upload histories");
     }
 
     #[test]

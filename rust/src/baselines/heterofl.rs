@@ -20,7 +20,8 @@
 use crate::comm::{CommLedger, CostModel};
 use crate::config::FedConfig;
 use crate::data::loader::{eval_chunks, ClientData, Source};
-use crate::fed::client::{clients_from_profiles, round_client_rng, warm_local_train, ClientState, Resource};
+use crate::fed::client::{clients_from_profiles, round_client_rng, warm_local_train, Resource};
+use crate::fed::population::Population;
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
 use crate::model::manifest::ModelEntry;
@@ -144,7 +145,8 @@ pub struct HeteroFlRun<'a, BF: ModelBackend, BH: ModelBackend> {
     pub full: &'a BF,
     pub half: &'a BH,
     pub map: SliceMap,
-    pub clients: Vec<ClientState>,
+    /// the client population (materialized or lazy — `fed::population`)
+    pub pop: Population,
     pub test: Source,
     pub global: ParamVec,
     pub log: RunLog,
@@ -167,20 +169,60 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
         init: ParamVec,
     ) -> anyhow::Result<Self> {
         cfg.validate()?;
-        anyhow::ensure!(map.full_dim == full.dim(), "map/full dim");
-        anyhow::ensure!(map.half_dim() == half.dim(), "map/half dim");
+        anyhow::ensure!(shards.len() == cfg.clients, "shard count != clients");
         let cost = full.cost_model();
         let profiles = cfg
             .scenario
             .sample_profiles(cfg.clients, cfg.hi_count(), cfg.seed, &cost);
         let clients = clients_from_profiles(shards, profiles, &cost);
+        Self::with_population(cfg, full, half, map, Population::materialized(clients), test, init)
+    }
+
+    /// Fleet-scale constructor: lazy per-client derivation over a shared
+    /// source (see `fed::population`).
+    pub fn new_lazy(
+        cfg: FedConfig,
+        full: &'a BF,
+        half: &'a BH,
+        map: SliceMap,
+        source: Source,
+        test: Source,
+        init: ParamVec,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let cost = full.cost_model();
+        let pop = Population::lazy(
+            cfg.clients,
+            cfg.hi_count(),
+            cfg.seed,
+            cfg.scenario.clone(),
+            cost,
+            source,
+        )?;
+        Self::with_population(cfg, full, half, map, pop, test, init)
+    }
+
+    pub fn with_population(
+        cfg: FedConfig,
+        full: &'a BF,
+        half: &'a BH,
+        map: SliceMap,
+        pop: Population,
+        test: Source,
+        init: ParamVec,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(pop.len() == cfg.clients, "population size != clients");
+        anyhow::ensure!(map.full_dim == full.dim(), "map/full dim");
+        anyhow::ensure!(map.half_dim() == half.dim(), "map/half dim");
+        let cost = full.cost_model();
         let rng = Xoshiro256::seed_from(cfg.seed ^ 0x8E7E_0F1);
         Ok(Self {
             cfg,
             full,
             half,
             map,
-            clients,
+            pop,
             test,
             global: init,
             log: RunLog::default(),
@@ -215,31 +257,43 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
             Half(ParamVec, f64, LossSums),
         }
         let deadline = self.cfg.scenario.deadline_ms();
-        let mut jobs: Vec<(usize, Xoshiro256)> = Vec::with_capacity(q);
+        let mut jobs: Vec<(usize, Resource, ClientData, Xoshiro256)> = Vec::with_capacity(q);
         let (mut up, mut down) = (0u64, 0u64);
         let mut dropped = 0usize;
         for &cid in &picked {
-            let client = &self.clients[cid];
-            if !sim::is_available(&client.profile, self.cfg.seed, round, cid) {
+            let profile = self.pop.profile(cid);
+            if !sim::is_available(&profile, self.cfg.seed, round, cid) {
                 dropped += 1;
                 continue;
             }
-            let (dim, params) = match client.resource {
+            // derive the class from the profile already in hand (the
+            // lazy path would otherwise re-derive the whole profile)
+            let resource = if profile.fo_capable(&self.cost) {
+                Resource::High
+            } else {
+                Resource::Low
+            };
+            let (dim, params) = match resource {
                 Resource::High => (self.full.dim(), self.cost.params),
                 Resource::Low => (self.half.dim(), self.half.cost_model().params),
             };
             let d4 = (dim * 4) as u64;
             let plan = sim::RoundPlan {
                 down_bytes: d4,
-                passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
+                passes: sim::fo_passes(self.pop.n_samples(cid), self.cfg.local_epochs),
                 up_bytes: d4,
             };
             let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, round, cid);
-            let o = sim::simulate_round(&client.profile, &plan, params, deadline, &mut trace);
+            let o = sim::simulate_round(&profile, &plan, params, deadline, &mut trace);
             up += o.up_bytes;
             down += o.down_bytes;
             if o.survives {
-                jobs.push((cid, round_client_rng(self.cfg.seed, 0, round, cid)));
+                jobs.push((
+                    cid,
+                    resource,
+                    self.pop.data(cid),
+                    round_client_rng(self.cfg.seed, 0, round, cid),
+                ));
             } else {
                 dropped += 1;
             }
@@ -249,24 +303,22 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
             let half = self.half;
             let global = &self.global;
             let map = &self.map;
-            let clients = &self.clients;
             let cfg = &self.cfg;
             parallel_map_n(
                 resolve_workers(self.cfg.threads),
                 jobs,
-                move |(cid, mut crng)| -> anyhow::Result<Out> {
-                    let client = &clients[cid];
-                    match client.resource {
+                move |(_cid, resource, data, mut crng)| -> anyhow::Result<Out> {
+                    match resource {
                         Resource::High => {
                             let (w, sums) =
-                                warm_local_train(full, global, &client.data, cfg, &mut crng)?;
-                            Ok(Out::Full(w, client.n() as f64, sums))
+                                warm_local_train(full, global, &data, cfg, &mut crng)?;
+                            Ok(Out::Full(w, data.n() as f64, sums))
                         }
                         Resource::Low => {
                             let sub = map.slice(global);
                             let (w, sums) =
-                                warm_local_train(half, &sub, &client.data, cfg, &mut crng)?;
-                            Ok(Out::Half(w, client.n() as f64, sums))
+                                warm_local_train(half, &sub, &data, cfg, &mut crng)?;
+                            Ok(Out::Half(w, data.n() as f64, sums))
                         }
                     }
                 },
@@ -340,9 +392,9 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
     pub fn per_round_bytes(&self) -> u64 {
         let q = self.cfg.sample_zo.clamp(1, self.cfg.clients) as u64;
         // the full-width share is profile-derived (not cfg.hi_count():
-        // custom scenarios draw their own fleet mix)
-        let hi = self.clients.iter().filter(|c| c.is_high()).count();
-        let hi_share = hi as f64 / self.cfg.clients as f64;
+        // custom scenarios draw their own fleet mix); lazy populations
+        // use the tier draw mass instead of an O(N) scan
+        let hi_share = self.pop.fo_share(&self.cost);
         let per_client = hi_share * (self.full.dim() * 4) as f64
             + (1.0 - hi_share) * (self.half.dim() * 4) as f64;
         (q as f64 * per_client * 2.0) as u64
@@ -422,6 +474,42 @@ mod tests {
         );
         // uncovered full-only positions keep the old value
         assert_eq!(global.0, vec![1.0, 2.0, 9.0, 9.0, 3.0]);
+    }
+
+    #[test]
+    fn lazy_population_heterofl_constructs_and_rounds() {
+        use crate::data::loader::Source;
+        use crate::data::synthetic::{train_test, SynthKind};
+        use std::sync::Arc;
+
+        // the fleet-scale constructor: lazy profiles decide full-vs-half
+        // width per sampled client, rounds run deterministically
+        let f = 32 * 32 * 3;
+        let full = LinearBackend::new(f, 10, 32);
+        let half = LinearBackend::sliced(&full, f / 2);
+        let map = linear_slice_map(10, f);
+        let mut cfg = FedConfig::default().smoke_scale();
+        cfg.clients = 512;
+        cfg.rounds_total = 2;
+        cfg.population = crate::config::PopulationMode::Lazy;
+        cfg.scenario = crate::sim::Scenario::preset("fleet").unwrap();
+        let (train, test) = train_test(SynthKind::Synth10, 300, 100, cfg.seed);
+        let run = HeteroFlRun::new_lazy(
+            cfg,
+            &full,
+            &half,
+            map,
+            Source::Image(Arc::new(train)),
+            Source::Image(Arc::new(test)),
+            ParamVec::zeros(full.dim()),
+        );
+        let mut run = run.unwrap();
+        // per-round budgeting uses the tier draw mass in lazy mode
+        assert!(run.per_round_bytes() > 0);
+        let s1 = run.round(0).unwrap();
+        let s2 = run.round(1).unwrap();
+        assert!(run.global.is_finite());
+        assert!(s1.train_signal.is_finite() && s2.train_signal.is_finite());
     }
 
     #[test]

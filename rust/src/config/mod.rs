@@ -68,6 +68,44 @@ impl VarianceGuard {
     }
 }
 
+/// How the client population is backed (`fed::population::Population`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopulationMode {
+    /// materialized below [`LAZY_AUTO_THRESHOLD`] clients (bit-compatible
+    /// with every seed-era trace), lazy above it — the default
+    Auto,
+    /// always materialize per-client state (seed-era semantics at any N;
+    /// memory scales O(N))
+    Materialized,
+    /// always derive per-client state on demand (O(sampled) rounds; tier
+    /// occupancy is binomial, shards are fixed-size keyed draws)
+    Lazy,
+}
+
+impl PopulationMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(PopulationMode::Auto),
+            "materialized" => Some(PopulationMode::Materialized),
+            "lazy" => Some(PopulationMode::Lazy),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PopulationMode::Auto => "auto",
+            PopulationMode::Materialized => "materialized",
+            PopulationMode::Lazy => "lazy",
+        }
+    }
+}
+
+/// `PopulationMode::Auto` switches to the lazy population layer above
+/// this many clients: small federations keep the byte-identical
+/// materialized semantics, fleet-scale ones never pay O(N) setup.
+pub const LAZY_AUTO_THRESHOLD: usize = 1 << 17;
+
 /// ZO-phase hyperparameters (§A.5 defaults: ε=1e-4, S=3, τ=0.75).
 #[derive(Debug, Clone, Copy)]
 pub struct ZoConfig {
@@ -170,6 +208,12 @@ pub struct FedConfig {
     /// before they can participate. 0 (default) disables the subsystem —
     /// the seed repo's free-rejoin accounting, byte-identical to before.
     pub ckpt_every: usize,
+    /// population backing mode (CLI `--population auto|materialized|lazy`;
+    /// see `fed::population`). `Auto` (default) materializes up to
+    /// [`LAZY_AUTO_THRESHOLD`] clients — byte-identical to the seed-era
+    /// path — and derives lazily above it, so `--clients 10000000` costs
+    /// O(sampled) per round.
+    pub population: PopulationMode,
 }
 
 impl Default for FedConfig {
@@ -195,6 +239,7 @@ impl Default for FedConfig {
             threads: 0,
             scenario: Scenario::Binary,
             ckpt_every: 0,
+            population: PopulationMode::Auto,
         }
     }
 }
@@ -204,6 +249,17 @@ impl FedConfig {
     pub fn hi_count(&self) -> usize {
         ((self.clients as f64 * self.hi_frac).round() as usize)
             .clamp(1, self.clients)
+    }
+
+    /// Whether this config runs on the lazy population layer
+    /// (`fed::population::Population::Lazy`): forced by
+    /// `--population lazy|materialized`, or size-resolved under `Auto`.
+    pub fn lazy_population(&self) -> bool {
+        match self.population {
+            PopulationMode::Lazy => true,
+            PopulationMode::Materialized => false,
+            PopulationMode::Auto => self.clients > LAZY_AUTO_THRESHOLD,
+        }
     }
 
     /// The paper's full protocol: 50 clients, 200 + 300 rounds.
@@ -243,16 +299,16 @@ impl FedConfig {
             "tau must be in (0,1]"
         );
         anyhow::ensure!(self.batch > 0, "batch must be > 0");
-        // seed-derivation field widths: the SeedIssuer packs (round,
-        // client, s) into 24/24/16-bit fields and the per-client local
-        // RNG (`fed::client::round_client_rng`) gives the client id 20
-        // bits — exceeding a field silently aliases another stream. The
-        // client bound below is the tighter of the two.
+        // seed-derivation field widths: compact ids (< 2^20 for the
+        // per-client RNG, < 2^24 for the SeedIssuer) keep the historical
+        // packed streams; larger ids derive through the wide fleet path.
+        // The hard bound is the wide packing's 40-bit client field —
+        // exceeding it would silently alias another stream.
         anyhow::ensure!(
-            self.clients <= crate::fed::client::MAX_SIM_CLIENTS,
-            "clients {} exceeds the RNG-derivation limit {}",
+            self.clients <= crate::fed::client::MAX_FLEET_CLIENTS,
+            "clients {} exceeds the fleet RNG-derivation limit {}",
             self.clients,
-            crate::fed::client::MAX_SIM_CLIENTS
+            crate::fed::client::MAX_FLEET_CLIENTS
         );
         anyhow::ensure!(
             self.rounds_total <= crate::zo::MAX_ROUNDS,
@@ -322,6 +378,11 @@ impl FedConfig {
         self.mixed_step2 = a.bool_or("mixed-step2", self.mixed_step2)?;
         self.threads = a.usize_or("threads", self.threads)?;
         self.ckpt_every = a.usize_or("ckpt-every", self.ckpt_every)?;
+        if let Some(p) = a.get("population") {
+            self.population = PopulationMode::parse(p).ok_or_else(|| {
+                anyhow::anyhow!("bad --population {p:?} (auto|materialized|lazy)")
+            })?;
+        }
         if let Some(s) = a.get("scenario") {
             self.scenario = Scenario::load(s)?;
         }
@@ -504,9 +565,54 @@ mod tests {
         assert!(c.validate().is_err());
         c.zo.grad_steps = 16; // exactly 2^16: still representable
         assert!(c.validate().is_ok());
+        // fleet-scale populations are first-class now: ids past the
+        // compact packings derive through the wide stream path, so 10^7
+        // clients validate; only the 40-bit wide field is a hard wall
         let mut c = FedConfig::default();
-        c.clients = crate::zo::MAX_CLIENTS + 1;
+        c.clients = 10_000_000;
+        assert!(c.validate().is_ok(), "--clients must accept >= 10^7");
+        c.clients = crate::fed::client::MAX_FLEET_CLIENTS + 1;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn population_mode_parses_and_auto_resolves_by_size() {
+        for m in [
+            PopulationMode::Auto,
+            PopulationMode::Materialized,
+            PopulationMode::Lazy,
+        ] {
+            assert_eq!(PopulationMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(PopulationMode::parse("nope"), None);
+        let mut c = FedConfig::default();
+        assert_eq!(c.population, PopulationMode::Auto);
+        assert!(!c.lazy_population(), "20 clients stay materialized");
+        c.clients = LAZY_AUTO_THRESHOLD;
+        assert!(!c.lazy_population(), "threshold itself stays materialized");
+        c.clients = LAZY_AUTO_THRESHOLD + 1;
+        assert!(c.lazy_population(), "past the threshold auto goes lazy");
+        c.population = PopulationMode::Materialized;
+        assert!(!c.lazy_population());
+        c.clients = 8;
+        c.population = PopulationMode::Lazy;
+        assert!(c.lazy_population(), "explicit lazy wins at any size");
+        // CLI + JSON plumbing
+        let argv: Vec<String> = "--population lazy"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.population, PopulationMode::Lazy);
+        let j = Json::parse(r#"{"population": "materialized"}"#).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.population, PopulationMode::Materialized);
+        let bad: Vec<String> = vec!["--population".into(), "eager".into()];
+        let a = Args::parse(&bad).unwrap();
+        assert!(FedConfig::default().apply_args(&a).is_err());
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod ckpt;
 pub mod common;
 pub mod curves;
 pub mod fig5;
+pub mod fleet;
 pub mod table1;
 pub mod table2;
 pub mod table5;
@@ -50,10 +51,12 @@ pub fn run(
         "fig6" => ablations::fig6(scale, scenario),
         "fig7" => ablations::fig7(scale, scenario),
         // repo-native (not paper artifacts, so not in ALL_IDS): the
-        // checkpoint-cadence ablation under a churn fleet, and the
-        // adaptive-S / variance-guard ablation under a capability spread
+        // checkpoint-cadence ablation under a churn fleet, the adaptive-S
+        // / variance-guard ablation under a capability spread, and the
+        // population-scaling sweep over the lazy fleet layer
         "ckpt" => ckpt::run(scale, scenario),
         "adaptive" => adaptive::run(scale, scenario),
+        "fleet" => fleet::run(scale, scenario),
         "all" => {
             let mut out = String::new();
             for id in ALL_IDS {
@@ -64,7 +67,8 @@ pub fn run(
             Ok(out)
         }
         _ => anyhow::bail!(
-            "unknown experiment {id:?}; available: {:?}, \"ckpt\", \"adaptive\", or \"all\"",
+            "unknown experiment {id:?}; available: {:?}, \"ckpt\", \"adaptive\", \
+             \"fleet\", or \"all\"",
             ALL_IDS
         ),
     }

@@ -93,24 +93,50 @@ pub fn warm_local_train<B: ModelBackend>(
     Ok((w, first_epoch))
 }
 
-/// Hard cap on simulated clients: the per-(round, client) RNG packing
-/// below gives the client id the low 20 bits (enforced by
-/// `FedConfig::validate`; the SeedIssuer's 24-bit field is looser).
+/// Client-id bound of the *compact* per-(round, client) RNG packing: ids
+/// below this use the seed repo's historical `round << 20 | cid` stream
+/// derivation unchanged, so every pre-fleet trace stays bit-identical.
 pub const MAX_SIM_CLIENTS: usize = 1 << 20;
+
+/// Hard population bound of the fleet-scale wide derivation (enforced by
+/// `FedConfig::validate`): the wide packing gives the client id 40 bits,
+/// so up to ~10^12 simulated clients derive collision-free streams.
+pub const MAX_FLEET_CLIENTS: usize = 1 << 40;
+
+/// Stream salt of the wide (fleet-scale) derivation, decorrelating it
+/// from any value the compact linear packing can reach.
+const WIDE_STREAM_SALT: u64 = 0xF1EE7_5CA1E;
 
 /// Per-(round, client) local RNG shared by every round engine (warm /
 /// FO local SGD, FedKSeed minibatch + pool draws): a pure function of
 /// immutable inputs, so it can be derived before a parallel fan-out.
 /// `salt` decorrelates engines that need independent streams for the
-/// same (round, client) pair. The packing `round << 20 | cid` means a
-/// `cid >= 2^20` would alias another (round, client) stream — the same
-/// silent-collision class the SeedIssuer guards against.
+/// same (round, client) pair.
+///
+/// Two derivation domains, split so fleet-scale populations do not
+/// disturb historical traces:
+/// * `cid < 2^20` — the seed repo's compact packing `round << 20 | cid`,
+///   byte-for-byte the original stream;
+/// * `cid >= 2^20` — the unique 64-bit pack `round << 40 | cid`
+///   (`round < 2^24`, `cid < 2^40`) is hashed through
+///   [`crate::util::rng::SplitMix64`] before seeding, so wide-domain
+///   streams cannot alias the compact linear packings (which occupy a
+///   low-entropy corner of the space).
 pub fn round_client_rng(master: u64, salt: u64, round: usize, cid: usize) -> Xoshiro256 {
+    if cid < MAX_SIM_CLIENTS {
+        return Xoshiro256::seed_from(master ^ salt ^ ((round as u64) << 20) ^ cid as u64);
+    }
     debug_assert!(
-        cid < MAX_SIM_CLIENTS,
-        "client id {cid} overflows the 20-bit RNG field"
+        cid < MAX_FLEET_CLIENTS,
+        "client id {cid} overflows the 40-bit fleet RNG field"
     );
-    Xoshiro256::seed_from(master ^ salt ^ ((round as u64) << 20) ^ cid as u64)
+    debug_assert!(
+        round < crate::zo::MAX_ROUNDS,
+        "round {round} overflows the 24-bit field"
+    );
+    let packed = ((round as u64) << 40) | cid as u64;
+    let mut sm = crate::util::rng::SplitMix64(packed);
+    Xoshiro256::seed_from(master ^ salt ^ WIDE_STREAM_SALT ^ sm.next_u64())
 }
 
 /// Number of seed blocks a client with `n` samples actually runs — the
@@ -166,6 +192,31 @@ mod tests {
             source: Source::Image(Arc::new(d)),
             indices: (0..n).collect(),
         }
+    }
+
+    #[test]
+    fn round_client_rng_compact_domain_is_unchanged_and_wide_domain_is_distinct() {
+        // compact ids reproduce the historical derivation exactly
+        for (round, cid) in [(0usize, 0usize), (3, 7), (100, (1 << 20) - 1)] {
+            let legacy =
+                Xoshiro256::seed_from(9 ^ 5 ^ ((round as u64) << 20) ^ cid as u64).next_u64();
+            assert_eq!(
+                round_client_rng(9, 5, round, cid).next_u64(),
+                legacy,
+                "round={round} cid={cid}"
+            );
+        }
+        // wide ids: deterministic, distinct across (round, cid, salt),
+        // and distinct from nearby compact streams
+        let a = round_client_rng(9, 5, 3, 1 << 20).next_u64();
+        assert_eq!(a, round_client_rng(9, 5, 3, 1 << 20).next_u64());
+        assert_ne!(a, round_client_rng(9, 5, 3, (1 << 20) + 1).next_u64());
+        assert_ne!(a, round_client_rng(9, 5, 4, 1 << 20).next_u64());
+        assert_ne!(a, round_client_rng(9, 6, 3, 1 << 20).next_u64());
+        assert_ne!(a, round_client_rng(9, 5, 3, (1 << 20) - 1).next_u64());
+        // a 10M-client fleet id derives fine
+        let big = round_client_rng(0, 0, 0, 9_999_999).next_u64();
+        assert_ne!(big, round_client_rng(0, 0, 0, 9_999_998).next_u64());
     }
 
     #[test]

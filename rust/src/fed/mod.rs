@@ -3,7 +3,9 @@
 
 pub mod aggregate;
 pub mod client;
+pub mod population;
 pub mod server;
 
 pub use client::{clients_from_profiles, ClientState, Resource};
+pub use population::{Population, SparseSync};
 pub use server::{assign_resources, shards_from_partition, Federation, RoundSummary};

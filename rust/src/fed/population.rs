@@ -1,0 +1,549 @@
+//! The population layer: who the clients *are*, at O(sampled) cost.
+//!
+//! `Federation::new` historically materialized a `Vec<ClientState>` — a
+//! capability profile and a data shard for every client in the
+//! population — so memory and setup scaled O(N) even though a round only
+//! ever touches the K sampled clients. A [`Population`] abstracts that
+//! away behind per-client accessors with two backing modes:
+//!
+//! * **Materialized** — the seed-era `Vec<ClientState>` built from
+//!   Dirichlet shards and the shuffle-based `sample_profiles` stream.
+//!   Bit-compatible with every historical trace; the default below
+//!   [`crate::config::LAZY_AUTO_THRESHOLD`] clients.
+//! * **Lazy** — nothing per-client is stored. A client's
+//!   [`CapabilityProfile`] derives on demand from
+//!   `(scenario, seed, cid)` ([`crate::sim::Scenario::profile_of`]) and
+//!   its data shard is drawn on demand from the shared source by a keyed
+//!   sparse Fisher-Yates ([`SHARD_SALT`]). A federation over 10^7
+//!   clients costs O(K sampled per round), never O(N).
+//!
+//! The same O(sampled) discipline applies to per-client *state*: the
+//! server's sync ledger is a [`SparseSync`] map recording only clients
+//! that ever deviated from the population default (synced-to-0), so
+//! million-client churn bookkeeping stays proportional to participation.
+
+use crate::comm::CostModel;
+use crate::data::loader::{ClientData, Source};
+use crate::fed::client::{ClientState, Resource};
+use crate::sim::{CapabilityProfile, Scenario};
+use crate::util::rng::{SplitMix64, Xoshiro256};
+
+/// Stream salt of the lazy per-client shard draw — its own domain,
+/// decorrelated from the profile draw (`sim::PROFILE_SALT`) and every
+/// round trace.
+pub const SHARD_SALT: u64 = 0x5AD_D47A;
+
+/// Samples each lazy client holds (clamped to the source size): the
+/// cross-device regime's "small local dataset" — fixed and documented so
+/// lazy shard cost is O(1) per sampled client regardless of N.
+pub const LAZY_SHARD_SAMPLES: usize = 64;
+
+/// Rejection-sampling attempt budget per warm pick in lazy mode, as a
+/// multiple of the expected `1 / fo_frac` draws — a deterministic
+/// termination guard, not a tuning knob.
+const WARM_REJECTION_SLACK: usize = 64;
+
+/// Absolute ceiling on warm rejection draws, so a pathological scenario
+/// (an FO tier with a vanishingly small but positive fraction) fails
+/// fast with a clear error instead of spinning for `1 / frac` draws.
+const WARM_REJECTION_CAP: usize = 1 << 20;
+
+/// Below this population size, lazy warm sampling enumerates the
+/// FO-capable sub-population exactly (one O(n) profile scan) instead of
+/// rejection-sampling: at small n an O(n) pass is not the cost this
+/// layer exists to remove, and it makes small lazy fleets behave like
+/// the materialized path — `min(want, |H|)` picks, and a clean error
+/// when the tier mass realized zero FO clients (which at small n is a
+/// real possibility, e.g. 0.98^20 ≈ 67% for a 2% tier over 20 ids).
+const WARM_ENUM_THRESHOLD: usize = 1 << 13;
+
+/// A lazily-derived population: per-client profiles and shards are pure
+/// functions of the fields here — O(1) state for any N.
+pub struct LazyPopulation {
+    pub n: usize,
+    pub hi_count: usize,
+    pub seed: u64,
+    pub scenario: Scenario,
+    pub cost: CostModel,
+    pub source: Source,
+    /// samples per lazy shard (`LAZY_SHARD_SAMPLES` clamped to the source)
+    pub shard_n: usize,
+}
+
+/// The federation's client population (see module docs).
+pub enum Population {
+    Materialized(Vec<ClientState>),
+    Lazy(LazyPopulation),
+}
+
+impl Population {
+    /// Wrap a fully materialized client list (the seed-era path).
+    pub fn materialized(clients: Vec<ClientState>) -> Self {
+        Population::Materialized(clients)
+    }
+
+    /// Build a lazy population over `n` clients drawing shards from
+    /// `source`. Allocates O(1) — the acceptance contract of the
+    /// fleet-scale layer. Errors on an empty source (a shard draw from
+    /// it could only panic later).
+    pub fn lazy(
+        n: usize,
+        hi_count: usize,
+        seed: u64,
+        scenario: Scenario,
+        cost: CostModel,
+        source: Source,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!source.is_empty(), "lazy population needs a non-empty source");
+        let shard_n = LAZY_SHARD_SAMPLES.min(source.len());
+        Ok(Population::Lazy(LazyPopulation {
+            n,
+            hi_count,
+            seed,
+            scenario,
+            cost,
+            source,
+            shard_n,
+        }))
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Population::Materialized(c) => c.len(),
+            Population::Lazy(l) => l.n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_lazy(&self) -> bool {
+        matches!(self, Population::Lazy(_))
+    }
+
+    /// The client's capability profile (derived on demand in lazy mode).
+    pub fn profile(&self, cid: usize) -> CapabilityProfile {
+        match self {
+            Population::Materialized(c) => c[cid].profile.clone(),
+            Population::Lazy(l) => {
+                l.scenario.profile_of(l.n, l.hi_count, l.seed, cid, &l.cost)
+            }
+        }
+    }
+
+    /// The client's legacy FO/ZO resource class under `cost` — identical
+    /// to the materialized `ClientState::resource` derivation.
+    pub fn resource(&self, cid: usize, cost: &CostModel) -> Resource {
+        match self {
+            Population::Materialized(c) => c[cid].resource,
+            Population::Lazy(_) => {
+                if self.profile(cid).fo_capable(cost) {
+                    Resource::High
+                } else {
+                    Resource::Low
+                }
+            }
+        }
+    }
+
+    pub fn is_high(&self, cid: usize, cost: &CostModel) -> bool {
+        self.resource(cid, cost) == Resource::High
+    }
+
+    /// The client's local sample count, without materializing the shard.
+    pub fn n_samples(&self, cid: usize) -> usize {
+        match self {
+            Population::Materialized(c) => c[cid].n(),
+            Population::Lazy(l) => l.shard_n,
+        }
+    }
+
+    /// The client's data shard. Materialized mode clones the stored view
+    /// — a deliberate copy of the index list (a few KB per survivor,
+    /// noise next to the training job it feeds) so jobs own their inputs
+    /// uniformly across both modes; lazy mode draws `shard_n` distinct
+    /// sample indices from a keyed per-client stream — deterministic, and
+    /// only ever evaluated for sampled survivors.
+    pub fn data(&self, cid: usize) -> ClientData {
+        match self {
+            Population::Materialized(c) => c[cid].data.clone(),
+            Population::Lazy(l) => {
+                let mut h = SplitMix64(cid as u64);
+                let mut rng = Xoshiro256::seed_from(l.seed ^ SHARD_SALT ^ h.next_u64());
+                let indices = rng.choose(l.source.len(), l.shard_n);
+                ClientData {
+                    source: l.source.clone(),
+                    indices,
+                }
+            }
+        }
+    }
+
+    /// Expected FO-capable share of the population under `cost`: the
+    /// exact count in materialized mode, the tier draw mass in lazy mode.
+    pub fn fo_share(&self, cost: &CostModel) -> f64 {
+        match self {
+            Population::Materialized(c) => {
+                if c.is_empty() {
+                    0.0
+                } else {
+                    c.iter().filter(|x| x.is_high()).count() as f64 / c.len() as f64
+                }
+            }
+            Population::Lazy(l) => l.scenario.fo_tier_frac(l.n, l.hi_count, cost),
+        }
+    }
+
+    /// Whether warm-phase sampling can succeed at all: any FO-capable
+    /// client (materialized: an O(N) scan, done once at construction;
+    /// lazy: any FO-capable tier with positive draw mass).
+    pub fn any_fo_capable(&self, cost: &CostModel) -> bool {
+        match self {
+            Population::Materialized(c) => c.iter().any(|x| x.is_high()),
+            Population::Lazy(_) => self.fo_share(cost) > 0.0,
+        }
+    }
+
+    /// Sample `want` warm-phase participants from the FO-capable
+    /// sub-population, drawing from `rng`.
+    ///
+    /// Materialized mode reproduces the seed repo's stream exactly: one
+    /// `choose(|H|, p)` over the high-id list, `p = want.clamp(1, |H|)`.
+    /// Lazy mode cannot enumerate H, so it rejection-samples distinct ids
+    /// against the on-demand profile — deterministic (all draws come from
+    /// the caller's `rng`), terminating in expectation `want / fo_frac`
+    /// draws, with a hard attempt budget as the pathological-scenario
+    /// guard.
+    pub fn sample_high(
+        &self,
+        rng: &mut Xoshiro256,
+        want: usize,
+        cost: &CostModel,
+    ) -> anyhow::Result<Vec<usize>> {
+        match self {
+            Population::Materialized(c) => {
+                let hi: Vec<usize> =
+                    c.iter().filter(|x| x.is_high()).map(|x| x.id).collect();
+                anyhow::ensure!(!hi.is_empty(), "no FO-capable clients to warm up");
+                let p = want.clamp(1, hi.len());
+                Ok(rng.choose(hi.len(), p).into_iter().map(|i| hi[i]).collect())
+            }
+            Population::Lazy(l) => {
+                let frac = self.fo_share(cost);
+                anyhow::ensure!(frac > 0.0, "no FO-capable clients to warm up");
+                if l.n <= WARM_ENUM_THRESHOLD {
+                    // small fleet: enumerate H exactly — materialized
+                    // semantics (min(want, |H|) picks, clean error when
+                    // the tier mass realized no FO client at all)
+                    let hi: Vec<usize> = (0..l.n)
+                        .filter(|&cid| self.profile(cid).fo_capable(cost))
+                        .collect();
+                    anyhow::ensure!(
+                        !hi.is_empty(),
+                        "scenario {:?} realized no FO-capable client over {} ids \
+                         (fo share {frac:.4})",
+                        l.scenario.name(),
+                        l.n
+                    );
+                    let p = want.clamp(1, hi.len());
+                    return Ok(rng.choose(hi.len(), p).into_iter().map(|i| hi[i]).collect());
+                }
+                let p = want.clamp(1, l.n);
+                // expected draws plus generous slack, hard-capped so a
+                // vanishingly-thin FO tier errors fast instead of
+                // spinning — and memory stays O(p), never O(draws)
+                let budget = ((p as f64 / frac) as usize + p)
+                    .saturating_mul(WARM_REJECTION_SLACK)
+                    .min(WARM_REJECTION_CAP);
+                let mut picked: Vec<usize> = Vec::with_capacity(p);
+                for _ in 0..budget {
+                    if picked.len() == p {
+                        break;
+                    }
+                    let cid = rng.below(l.n);
+                    // p is tens at most: a linear dedup scan beats
+                    // holding every rejected id in a set
+                    if picked.contains(&cid) {
+                        continue;
+                    }
+                    if self.profile(cid).fo_capable(cost) {
+                        picked.push(cid);
+                    }
+                }
+                anyhow::ensure!(
+                    !picked.is_empty(),
+                    "warm sampling found no FO-capable client in {budget} draws \
+                     (scenario {:?}, fo share {frac:.4})",
+                    l.scenario.name()
+                );
+                if picked.len() < p {
+                    // the round proceeds with a smaller cohort, but never
+                    // silently: a thin FO tier exhausting the draw budget
+                    // is an operator-visible signal
+                    eprintln!(
+                        "[population] warm cohort short: {}/{p} FO-capable \
+                         clients found in {budget} draws (fo share {frac:.6})",
+                        picked.len()
+                    );
+                }
+                Ok(picked)
+            }
+        }
+    }
+
+    /// Approximate resident bytes of the population's per-client state —
+    /// the peak-RSS proxy of `exp fleet` and the O(N)-avoidance
+    /// acceptance test. Materialized mode sums the real storage
+    /// (profiles, tier strings, shard index lists); lazy mode is the
+    /// O(1) descriptor.
+    pub fn approx_state_bytes(&self) -> usize {
+        match self {
+            Population::Materialized(c) => {
+                c.iter()
+                    .map(|x| {
+                        std::mem::size_of::<ClientState>()
+                            + x.profile.tier.len()
+                            + x.data.indices.len() * std::mem::size_of::<usize>()
+                    })
+                    .sum()
+            }
+            Population::Lazy(l) => {
+                std::mem::size_of::<LazyPopulation>()
+                    + match &l.scenario {
+                        Scenario::Binary => 0,
+                        Scenario::Custom(s) => s
+                            .tiers
+                            .iter()
+                            .map(|t| std::mem::size_of_val(t) + t.name.len())
+                            .sum(),
+                    }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sparse per-client ledgers
+// ---------------------------------------------------------------------------
+
+/// Sparse per-client sync ledger: `get(cid)` is the round whose entering
+/// global the client can reconstruct (default 0 = init weights, the
+/// population-wide starting state). Only clients that ever *deviated*
+/// from the default occupy memory, so the ledger is O(participants), not
+/// O(N) — the fold (`advance` = pointwise max) reproduces the dense
+/// `Vec<usize>` it replaced bit-for-bit
+/// (`prop_sparse_sync_folds_match_dense` + the churn-preset mirror test
+/// in `fed::server`).
+#[derive(Debug, Clone, Default)]
+pub struct SparseSync {
+    map: std::collections::HashMap<usize, usize>,
+}
+
+impl SparseSync {
+    /// Round the client is synced to (0 = the population default).
+    pub fn get(&self, cid: usize) -> usize {
+        self.map.get(&cid).copied().unwrap_or(0)
+    }
+
+    /// Fold `synced[cid] = max(synced[cid], round)` — the dense ledger's
+    /// update, recording an entry only on actual deviation.
+    pub fn advance(&mut self, cid: usize, round: usize) {
+        if round > self.get(cid) {
+            self.map.insert(cid, round);
+        }
+    }
+
+    /// Clients holding a non-default entry (bounded by total distinct
+    /// participants, never by N).
+    pub fn deviated(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Materialize the dense equivalent (reference/testing only).
+    pub fn to_dense(&self, n: usize) -> Vec<usize> {
+        (0..n).map(|cid| self.get(cid)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GenConfig, SynthKind};
+    use std::sync::Arc;
+
+    fn src(n: usize) -> Source {
+        Source::Image(Arc::new(generate(SynthKind::Synth10, n, GenConfig::default())))
+    }
+
+    fn probe_cost() -> CostModel {
+        CostModel::generic(7690, 32)
+    }
+
+    fn fleet_pop(n: usize) -> Population {
+        Population::lazy(
+            n,
+            0,
+            7,
+            Scenario::preset("fleet").unwrap(),
+            probe_cost(),
+            src(200),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn lazy_population_state_is_o1_in_n() {
+        let small = fleet_pop(1_000);
+        let huge = fleet_pop(10_000_000);
+        assert_eq!(small.approx_state_bytes(), huge.approx_state_bytes());
+        assert!(huge.approx_state_bytes() < 4096, "{}", huge.approx_state_bytes());
+        assert_eq!(huge.len(), 10_000_000);
+        assert!(huge.is_lazy());
+    }
+
+    #[test]
+    fn lazy_shards_are_deterministic_distinct_views() {
+        let pop = fleet_pop(10_000_000);
+        let a = pop.data(9_999_999);
+        let b = pop.data(9_999_999);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.n(), pop.n_samples(9_999_999));
+        assert_eq!(a.n(), LAZY_SHARD_SAMPLES.min(200));
+        // indices are distinct and in range
+        let mut sorted = a.indices.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), a.n());
+        assert!(sorted.iter().all(|&i| i < 200));
+        // a different client draws a different shard
+        let c = pop.data(42);
+        assert_ne!(a.indices, c.indices);
+        // an empty source is rejected at construction, not at first draw
+        assert!(
+            Population::lazy(10, 0, 7, Scenario::Binary, probe_cost(), src(0)).is_err()
+        );
+    }
+
+    #[test]
+    fn lazy_profiles_and_resources_agree_with_scenario_derivation() {
+        let pop = fleet_pop(1_000);
+        let cost = probe_cost();
+        let scenario = Scenario::preset("fleet").unwrap();
+        for cid in [0usize, 1, 999] {
+            let p = pop.profile(cid);
+            assert_eq!(p, scenario.profile_of(1_000, 0, 7, cid, &cost));
+            assert_eq!(
+                pop.is_high(cid, &cost),
+                p.fo_capable(&cost),
+                "cid {cid}"
+            );
+        }
+        let share = pop.fo_share(&cost);
+        assert!((0.0..0.1).contains(&share), "{share}");
+        assert!(pop.any_fo_capable(&cost));
+    }
+
+    #[test]
+    fn lazy_warm_sampling_finds_the_backbone_deterministically() {
+        let pop = fleet_pop(1_000_000);
+        let cost = probe_cost();
+        let mut r1 = Xoshiro256::seed_from(5);
+        let mut r2 = Xoshiro256::seed_from(5);
+        let a = pop.sample_high(&mut r1, 5, &cost).unwrap();
+        let b = pop.sample_high(&mut r2, 5, &cost).unwrap();
+        assert_eq!(a, b, "same rng stream, same picks");
+        assert_eq!(a.len(), 5);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5, "distinct picks");
+        for &cid in &a {
+            assert!(pop.is_high(cid, &cost), "cid {cid} is not FO-capable");
+        }
+        // small fleets take the exact-enumeration path: picks are
+        // min(want, |H|), distinct, FO-capable, deterministic
+        let small = fleet_pop(2_000);
+        let hi_n = (0..2_000).filter(|&c| small.is_high(c, &cost)).count();
+        assert!(hi_n > 0, "2% tier over 2000 ids should realize someone");
+        let mut r = Xoshiro256::seed_from(9);
+        let picks = small.sample_high(&mut r, 5_000, &cost).unwrap();
+        assert_eq!(picks.len(), 5_000usize.clamp(1, hi_n));
+        for &cid in &picks {
+            assert!(small.is_high(cid, &cost));
+        }
+        // an all-FO scenario reports full FO mass...
+        let all_fo = Population::lazy(
+            1_000,
+            0,
+            7,
+            Scenario::preset("uniform-high").unwrap(),
+            probe_cost(),
+            src(100),
+        )
+        .unwrap();
+        assert!(all_fo.any_fo_capable(&probe_cost()));
+        // ...and a ZO-only scenario refuses instead of spinning
+        let no_fo = Population::lazy(
+            1_000,
+            0,
+            7,
+            Scenario::load(r#"{"tiers": [{"frac": 1.0, "mem": "zo"}]}"#).unwrap(),
+            probe_cost(),
+            src(100),
+        )
+        .unwrap();
+        assert!(!no_fo.any_fo_capable(&probe_cost()));
+        let mut r = Xoshiro256::seed_from(0);
+        assert!(no_fo.sample_high(&mut r, 3, &probe_cost()).is_err());
+    }
+
+    #[test]
+    fn sparse_sync_defaults_advances_and_counts_deviations() {
+        let mut s = SparseSync::default();
+        assert_eq!(s.get(123_456_789), 0, "default is the init state");
+        assert_eq!(s.deviated(), 0);
+        s.advance(7, 0); // advancing to the default records nothing
+        assert_eq!(s.deviated(), 0);
+        s.advance(7, 3);
+        s.advance(7, 2); // regressions are ignored (max fold)
+        assert_eq!(s.get(7), 3);
+        s.advance(9_999_999, 1);
+        assert_eq!(s.deviated(), 2);
+        assert_eq!(s.to_dense(10)[7], 3);
+        assert_eq!(s.to_dense(10)[0], 0);
+    }
+
+    #[test]
+    fn prop_sparse_sync_folds_match_dense() {
+        // satellite: random advance streams — the sparse fold reproduces
+        // the dense Vec ledger exactly, and memory stays bounded by the
+        // distinct clients touched
+        crate::util::prop::run_prop("sparse_sync_fold", 80, |g| {
+            let mut rng = g.rng();
+            let n = 2 + rng.below(g.size.max(1) * 4);
+            let ops = rng.below(g.size.max(1) * 8);
+            let mut dense = vec![0usize; n];
+            let mut sparse = SparseSync::default();
+            let mut touched = std::collections::BTreeSet::new();
+            for _ in 0..ops {
+                let cid = rng.below(n);
+                let round = rng.below(30);
+                touched.insert(cid);
+                dense[cid] = dense[cid].max(round);
+                sparse.advance(cid, round);
+            }
+            if sparse.to_dense(n) != dense {
+                return Err("sparse fold diverged from dense ledger".into());
+            }
+            if sparse.deviated() > touched.len() {
+                return Err(format!(
+                    "{} entries for {} touched clients",
+                    sparse.deviated(),
+                    touched.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -38,12 +38,13 @@ use crate::data::loader::{eval_chunks, ClientData, Source};
 use crate::fed::aggregate::{weighted_average, ServerOptState};
 use crate::fed::client::{
     clients_from_profiles, round_client_rng, warm_local_train, zo_step_chunks, zo_step_count,
-    ClientState, Resource,
+    Resource,
 };
+use crate::fed::population::{Population, SparseSync};
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
 use crate::model::params::{perturb_axpy_many_sharded, ParamVec};
-use crate::sim::{self, Scenario};
+use crate::sim::{self, CapabilityProfile, Scenario};
 use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
 use crate::zo::{
@@ -55,7 +56,9 @@ use crate::zo::{
 pub struct Federation<'b, B: ModelBackend> {
     pub cfg: FedConfig,
     pub backend: &'b B,
-    pub clients: Vec<ClientState>,
+    /// the client population — materialized (seed-era, O(N) state) or
+    /// lazy (fleet-scale, O(1) state; see `fed::population`)
+    pub pop: Population,
     pub test: Source,
     pub global: ParamVec,
     pub round: usize,
@@ -67,11 +70,21 @@ pub struct Federation<'b, B: ModelBackend> {
     /// server-side checkpoint + compacted seed log (`cfg.ckpt_every`;
     /// inert when 0 — see the `ckpt` module)
     pub ckpt: CheckpointStore,
-    /// per-client sync ledger: `synced[c] = r` means client c can
+    /// per-client sync ledger: `synced.get(c) = r` means client c can
     /// reconstruct the global parameters *entering* round r (it received
     /// every broadcast through round r−1). Everyone starts at 0 (init
-    /// weights). The gap `round − synced[c]` is what catch-up must cover.
-    pub synced: Vec<usize>,
+    /// weights). The gap `round − synced.get(c)` is what catch-up must
+    /// cover. Sparse: only clients that ever deviated from 0 occupy
+    /// memory, so the ledger is O(participants), never O(N).
+    pub synced: SparseSync,
+    /// dense mirror of `synced`, maintained only under `cfg(test)` — and
+    /// only for materialized populations, so test builds of 10^7-client
+    /// lazy federations don't resurrect the O(N) vector the layer
+    /// removes — pinning the sparse fold's equivalence with the seed-era
+    /// `Vec<usize>` ledger on real churn runs
+    /// (`sparse_synced_reproduces_dense_ledger_on_churn`)
+    #[cfg(test)]
+    pub synced_dense_mirror: Option<Vec<usize>>,
     server_opt: ServerOptState,
     issuer: SeedIssuer,
     rng: Xoshiro256,
@@ -101,9 +114,15 @@ pub struct RoundSummary {
 
 /// One sampled ZO participant's resolved pre-round inputs — the unit the
 /// adaptive probe-budget planner works over (see
-/// [`Federation::zo_probe_budgets`]).
+/// [`Federation::zo_probe_budgets`]). Carries the resolved profile and
+/// sample count so the round engine touches the population layer exactly
+/// once per sampled client — the O(sampled) discipline.
 struct ZoCandidate {
     cid: usize,
+    /// the client's capability profile (lazy mode derives it on demand)
+    profile: CapabilityProfile,
+    /// local sample count n_j
+    n: usize,
     /// local `grad_steps` blocks this client actually runs
     steps: usize,
     /// catch-up downlink fronting its download leg (`ckpt` subsystem)
@@ -146,9 +165,11 @@ pub fn assign_resources(k: usize, hi_count: usize, seed: u64) -> Vec<Resource> {
 }
 
 impl<'b, B: ModelBackend> Federation<'b, B> {
-    /// Build a federation from per-client shards and a test source.
-    /// `init` seeds the global weights (callers init via manifest He-init
-    /// for XLA backends, zeros for the linear probe).
+    /// Build a federation from per-client shards and a test source — the
+    /// seed-era **materialized** path, bit-compatible with every
+    /// historical trace. `init` seeds the global weights (callers init
+    /// via manifest He-init for XLA backends, zeros for the linear
+    /// probe).
     pub fn new(
         cfg: FedConfig,
         backend: &'b B,
@@ -156,17 +177,58 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         test: Source,
         init: ParamVec,
     ) -> anyhow::Result<Self> {
+        // validate before hi_count(): its clamp(1, clients) panics on the
+        // clients == 0 configs validate exists to reject (the re-check in
+        // with_population is then a cheap no-op)
         cfg.validate()?;
         anyhow::ensure!(shards.len() == cfg.clients, "shard count != clients");
-        anyhow::ensure!(init.dim() == backend.dim(), "init dim mismatch");
         let cost = backend.cost_model();
         let profiles = cfg
             .scenario
             .sample_profiles(cfg.clients, cfg.hi_count(), cfg.seed, &cost);
         let clients = clients_from_profiles(shards, profiles, &cost);
+        Self::with_population(cfg, backend, Population::materialized(clients), test, init)
+    }
+
+    /// Build a federation over a **lazy** population drawing shards from
+    /// `source`: per-client profiles and data derive on demand, so setup
+    /// is O(1) and every round costs O(sampled) — the fleet-scale path
+    /// (`--clients 10000000`).
+    pub fn new_lazy(
+        cfg: FedConfig,
+        backend: &'b B,
+        source: Source,
+        test: Source,
+        init: ParamVec,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let cost = backend.cost_model();
+        let pop = Population::lazy(
+            cfg.clients,
+            cfg.hi_count(),
+            cfg.seed,
+            cfg.scenario.clone(),
+            cost,
+            source,
+        )?;
+        Self::with_population(cfg, backend, pop, test, init)
+    }
+
+    /// Shared constructor over an already-built [`Population`].
+    pub fn with_population(
+        cfg: FedConfig,
+        backend: &'b B,
+        pop: Population,
+        test: Source,
+        init: ParamVec,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(pop.len() == cfg.clients, "population size != clients");
+        anyhow::ensure!(init.dim() == backend.dim(), "init dim mismatch");
+        let cost = backend.cost_model();
         if cfg.pivot > 0 {
             anyhow::ensure!(
-                clients.iter().any(|c: &ClientState| c.is_high()),
+                pop.any_fo_capable(&cost),
                 "scenario {:?} yields no FO-capable clients but pivot > 0",
                 cfg.scenario.name()
             );
@@ -175,11 +237,12 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let issuer = SeedIssuer::new(cfg.seed ^ 0x5EED_1557);
         let rng = Xoshiro256::seed_from(cfg.seed ^ 0xFED_0_FED);
         let ckpt = CheckpointStore::new(cfg.ckpt_every, &init);
-        let synced = vec![0usize; cfg.clients];
         Ok(Self {
+            #[cfg(test)]
+            synced_dense_mirror: (!pop.is_lazy()).then(|| vec![0usize; cfg.clients]),
             cfg,
             backend,
-            clients,
+            pop,
             test,
             global: init,
             round: 0,
@@ -187,19 +250,24 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             ledger: CommLedger::default(),
             cost,
             ckpt,
-            synced,
+            synced: SparseSync::default(),
             server_opt,
             issuer,
             rng,
         })
     }
 
-    pub fn high_ids(&self) -> Vec<usize> {
-        self.clients
-            .iter()
-            .filter(|c| c.is_high())
-            .map(|c| c.id)
-            .collect()
+    /// Fold `synced[cid] = max(synced[cid], round)` — the single place
+    /// the sync ledger advances, so the `cfg(test)` dense mirror stays a
+    /// faithful replica of the sparse fold.
+    fn mark_synced(&mut self, cid: usize, round: usize) {
+        self.synced.advance(cid, round);
+        #[cfg(test)]
+        if let Some(mirror) = &mut self.synced_dense_mirror {
+            if round > mirror[cid] {
+                mirror[cid] = round;
+            }
+        }
     }
 
     /// Evaluate the current global weights on the server's test set.
@@ -233,47 +301,48 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     /// *before* the fan-out from pure per-(round, client) inputs, so it
     /// cannot perturb the worker-count invariance.
     pub fn warm_round(&mut self) -> anyhow::Result<RoundSummary> {
-        let hi = self.high_ids();
-        anyhow::ensure!(!hi.is_empty(), "no FO-capable clients to warm up");
-        let p = self.cfg.sample_warm.clamp(1, hi.len());
-        let picked: Vec<usize> = self
-            .rng
-            .choose(hi.len(), p)
-            .into_iter()
-            .map(|i| hi[i])
-            .collect();
+        // materialized mode reproduces the seed repo's hi-list choose
+        // stream exactly; lazy mode rejection-samples the FO-capable
+        // sub-population (see Population::sample_high)
+        let picked = self
+            .pop
+            .sample_high(&mut self.rng, self.cfg.sample_warm, &self.cost)?;
+        let p = picked.len();
 
         // simulate each picked client's timeline, then derive survivor
-        // RNGs, all before the fan-out (determinism rule 1)
+        // RNGs and fetch survivor shards, all before the fan-out
+        // (determinism rule 1). Only the O(sampled) picked clients ever
+        // touch the population layer.
         let deadline = self.cfg.scenario.deadline_ms();
         let d4 = (self.backend.dim() * 4) as u64;
-        let mut jobs: Vec<(usize, Xoshiro256)> = Vec::with_capacity(p);
+        let mut jobs: Vec<(usize, usize, ClientData, Xoshiro256)> = Vec::with_capacity(p);
         let (mut up, mut down) = (0u64, 0u64);
         let mut dropped = 0usize;
         for &cid in &picked {
-            let client = &self.clients[cid];
+            let profile = self.pop.profile(cid);
+            let n = self.pop.n_samples(cid);
             // churn trace: late joiners and whole-round absences transmit
             // nothing and stay stale
-            if !sim::is_available(&client.profile, self.cfg.seed, self.round, cid) {
+            if !sim::is_available(&profile, self.cfg.seed, self.round, cid) {
                 dropped += 1;
                 continue;
             }
             let plan = sim::RoundPlan {
                 down_bytes: d4,
-                passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
+                passes: sim::fo_passes(n, self.cfg.local_epochs),
                 up_bytes: d4,
             };
             let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
-            let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+            let o = sim::simulate_round(&profile, &plan, self.cost.params, deadline, &mut trace);
             up += o.up_bytes;
             down += o.down_bytes;
             if o.down_bytes == plan.down_bytes {
                 // a completed full-weight download IS a sync: the client
                 // now holds the global entering this round
-                self.synced[cid] = self.synced[cid].max(self.round);
+                self.mark_synced(cid, self.round);
             }
             if o.survives {
-                jobs.push((cid, self.client_rng(cid)));
+                jobs.push((cid, n, self.pop.data(cid), self.client_rng(cid)));
             } else {
                 dropped += 1;
             }
@@ -282,11 +351,10 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let results = {
             let backend = self.backend;
             let global = &self.global;
-            let clients = &self.clients;
             let cfg = &self.cfg;
-            parallel_map_n(workers, jobs, move |(cid, mut crng)| {
-                warm_local_train(backend, global, &clients[cid].data, cfg, &mut crng)
-                    .map(|out| (cid, out))
+            parallel_map_n(workers, jobs, move |(cid, n, data, mut crng)| {
+                warm_local_train(backend, global, &data, cfg, &mut crng)
+                    .map(|out| (cid, n, out))
             })
         };
 
@@ -294,9 +362,9 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let mut updates: Vec<(ParamVec, f64)> = Vec::with_capacity(p);
         let mut train = LossSums::default();
         for r in results {
-            let (cid, (w, sums)) = r?;
+            let (_cid, n, (w, sums)) = r?;
             train.add(sums);
-            updates.push((w, self.clients[cid].n() as f64));
+            updates.push((w, n as f64));
         }
         // partial/zero transmissions are already folded into up/down
         self.ledger.record_round(up, down);
@@ -330,13 +398,17 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     }
 
     /// One ZO participant's resolved round inputs, gathered before the
-    /// probe-budget planning pass: its local step count, and the catch-up
+    /// probe-budget planning pass: its profile and sample count (one
+    /// population-layer touch), its local step count, and the catch-up
     /// charge fronting its download leg (`ckpt` subsystem).
-    fn zo_candidate(&self, cid: usize, d4: u64) -> ZoCandidate {
-        let catch_plan = self.ckpt.catch_up_plan(self.synced[cid], self.round, d4);
+    fn zo_candidate(&self, cid: usize, profile: CapabilityProfile, d4: u64) -> ZoCandidate {
+        let catch_plan = self.ckpt.catch_up_plan(self.synced.get(cid), self.round, d4);
+        let n = self.pop.n_samples(cid);
         ZoCandidate {
             cid,
-            steps: zo_step_count(self.clients[cid].n(), self.cfg.zo.grad_steps),
+            profile,
+            n,
+            steps: zo_step_count(n, self.cfg.zo.grad_steps),
             catch_bytes: catch_plan.map_or(0, |p| p.bytes),
             replay_items: catch_plan.map_or(0, |p| p.replay_items),
         }
@@ -350,8 +422,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     fn zo_candidate_plan(&self, c: &ZoCandidate, s: usize) -> sim::RoundPlan {
         sim::RoundPlan {
             down_bytes: c.catch_bytes + (s * c.steps * 8) as u64,
-            passes: sim::zo_passes(self.clients[c.cid].n(), s)
-                + sim::replay_passes(c.replay_items),
+            passes: sim::zo_passes(c.n, s) + sim::replay_passes(c.replay_items),
             up_bytes: (s * c.steps * 4) as u64,
         }
     }
@@ -382,7 +453,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 .iter()
                 .map(|c| {
                     sim::plan_time_ms(
-                        &self.clients[c.cid].profile,
+                        &c.profile,
                         &self.zo_candidate_plan(c, s_ref),
                         self.cost.params,
                     )
@@ -393,7 +464,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             .iter()
             .map(|c| {
                 sim::max_affordable_s(
-                    &self.clients[c.cid].profile,
+                    &c.profile,
                     self.cost.params,
                     budget,
                     z.s_min,
@@ -419,13 +490,13 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let d4 = (self.backend.dim() * 4) as u64;
         let cands: Vec<ZoCandidate> = cids
             .iter()
-            .filter(|&&cid| {
-                let client = &self.clients[cid];
-                sim::is_available(&client.profile, self.cfg.seed, self.round, cid)
-                    && !(self.cfg.mixed_step2 && client.is_high())
-                    && client.profile.zo_capable(&self.cost)
+            .filter_map(|&cid| {
+                let profile = self.pop.profile(cid);
+                let eligible = sim::is_available(&profile, self.cfg.seed, self.round, cid)
+                    && !(self.cfg.mixed_step2 && profile.fo_capable(&self.cost))
+                    && profile.zo_capable(&self.cost);
+                eligible.then(|| self.zo_candidate(cid, profile, d4))
             })
-            .map(|&cid| self.zo_candidate(cid, d4))
             .collect();
         let budgets = self.zo_probe_budgets(&cands);
         cands
@@ -480,36 +551,40 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let picked = self.rng.choose(self.cfg.clients, q);
 
         enum Job {
-            Fo { cid: usize, rng: Xoshiro256 },
-            Zo { cid: usize, seeds: Vec<u64>, s_block: usize },
+            Fo { cid: usize, n: usize, data: ClientData, rng: Xoshiro256 },
+            Zo { cid: usize, data: ClientData, seeds: Vec<u64>, s_block: usize },
         }
         enum Out {
-            Fo { cid: usize, w: ParamVec, sums: LossSums },
+            Fo { n: usize, w: ParamVec, sums: LossSums },
             Zo(ZoContribution),
         }
         /// classification-pass verdict per sampled client, in picked order
         enum Pending {
             Dropped,
-            Fo(usize),
+            /// FO participant: (cid, profile, n)
+            Fo(usize, CapabilityProfile, usize),
             /// index into the ZO candidate list
             Zo(usize),
         }
 
         // pass 1 — classification: availability, FO/ZO role, catch-up
-        // charge. Pure reads; no RNG stream is touched.
+        // charge. Pure reads; no RNG stream is touched. The population
+        // layer is consulted once per sampled client (O(sampled), the
+        // fleet-scale contract).
         let deadline = self.cfg.scenario.deadline_ms();
         let d4 = (self.backend.dim() * 4) as u64;
         let mut pendings: Vec<Pending> = Vec::with_capacity(q);
         let mut cands: Vec<ZoCandidate> = Vec::with_capacity(q);
         for &cid in &picked {
-            let client = &self.clients[cid];
+            let profile = self.pop.profile(cid);
             // churn trace: late joiners and whole-round absences transmit
             // nothing and stay stale
-            if !sim::is_available(&client.profile, self.cfg.seed, self.round, cid) {
+            if !sim::is_available(&profile, self.cfg.seed, self.round, cid) {
                 pendings.push(Pending::Dropped);
-            } else if self.cfg.mixed_step2 && client.is_high() {
-                pendings.push(Pending::Fo(cid));
-            } else if client.profile.zo_capable(&self.cost) {
+            } else if self.cfg.mixed_step2 && profile.fo_capable(&self.cost) {
+                let n = self.pop.n_samples(cid);
+                pendings.push(Pending::Fo(cid, profile, n));
+            } else if profile.zo_capable(&self.cost) {
                 // a stale client must first reconstruct the current
                 // global: the server charges the cheaper of snapshot vs
                 // tail replay (ckpt subsystem; nothing when synced or
@@ -517,7 +592,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 // download and the local replay passes lead the
                 // timeline, so a tight deadline can cut either short —
                 // and both shrink the adaptive probe budget.
-                cands.push(self.zo_candidate(cid, d4));
+                cands.push(self.zo_candidate(cid, profile, d4));
                 pendings.push(Pending::Zo(cands.len() - 1));
             } else {
                 // below even the eq. 5 ZO footprint: cannot participate
@@ -543,39 +618,51 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         // fold), decided after the join
         let mut zo_survivors: Vec<usize> = Vec::with_capacity(q);
         for p in &pendings {
-            match *p {
+            match p {
                 Pending::Dropped => dropped += 1,
-                Pending::Fo(cid) => {
-                    let client = &self.clients[cid];
+                Pending::Fo(cid, profile, n) => {
+                    let (cid, n) = (*cid, *n);
                     let mut trace =
                         round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
                     let plan = sim::RoundPlan {
                         down_bytes: d4,
-                        passes: sim::fo_passes(client.n(), self.cfg.local_epochs),
+                        passes: sim::fo_passes(n, self.cfg.local_epochs),
                         up_bytes: d4,
                     };
-                    let o = sim::simulate_round(&client.profile, &plan, self.cost.params, deadline, &mut trace);
+                    let o =
+                        sim::simulate_round(profile, &plan, self.cost.params, deadline, &mut trace);
                     fo_up += o.up_bytes;
                     fo_down += o.down_bytes;
                     if o.down_bytes == plan.down_bytes {
                         // full-weight download = sync to the current round
-                        self.synced[cid] = self.synced[cid].max(self.round);
+                        self.mark_synced(cid, self.round);
                     }
                     if o.survives {
-                        jobs.push(Job::Fo { cid, rng: self.client_rng(cid) });
+                        jobs.push(Job::Fo {
+                            cid,
+                            n,
+                            data: self.pop.data(cid),
+                            rng: self.client_rng(cid),
+                        });
                     } else {
                         dropped += 1;
                     }
                 }
                 Pending::Zo(i) => {
-                    let c = &cands[i];
+                    let c = &cands[*i];
                     let cid = c.cid;
-                    let s_block = budgets[i];
+                    let s_block = budgets[*i];
                     let n_seeds = s_block * c.steps;
                     let plan = self.zo_candidate_plan(c, s_block);
                     let mut trace =
                         round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
-                    let o = sim::simulate_round(&self.clients[cid].profile, &plan, self.cost.params, deadline, &mut trace);
+                    let o = sim::simulate_round(
+                        &c.profile,
+                        &plan,
+                        self.cost.params,
+                        deadline,
+                        &mut trace,
+                    );
                     catch_up_down += o.down_bytes.min(c.catch_bytes);
                     seeds_issued += n_seeds;
                     zo_charges.push(ZoClientCharge {
@@ -584,7 +671,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                         seed_down_bytes: o.down_bytes,
                         survives: o.survives,
                     });
-                    if o.down_bytes >= c.catch_bytes {
+                    let caught_up = o.down_bytes >= c.catch_bytes;
+                    if caught_up {
                         // the download leg is ordered catch-up first, so
                         // receiving at least `catch` bytes means the client
                         // holds the full catch-up payload — even if the seed
@@ -594,7 +682,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                         // round participation, not between-round local
                         // compute), so the client counts as synced and the
                         // catch-up is never re-charged.
-                        self.synced[cid] = self.synced[cid].max(self.round);
+                        self.mark_synced(cid, self.round);
                     }
                     if o.survives {
                         // survivors also receive the end-of-round broadcast;
@@ -604,6 +692,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                         zo_survivors.push(cid);
                         jobs.push(Job::Zo {
                             cid,
+                            data: self.pop.data(cid),
                             seeds: self.issuer.seeds_for(self.round, cid, n_seeds),
                             s_block,
                         });
@@ -618,24 +707,16 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let results = {
             let backend = self.backend;
             let global = &self.global;
-            let clients = &self.clients;
             let cfg = &self.cfg;
             parallel_map_n(workers, jobs, move |job| -> anyhow::Result<Out> {
                 match job {
-                    Job::Fo { cid, mut rng } => {
-                        let (w, sums) = warm_local_train(
-                            backend,
-                            global,
-                            &clients[cid].data,
-                            cfg,
-                            &mut rng,
-                        )?;
-                        Ok(Out::Fo { cid, w, sums })
+                    Job::Fo { cid: _, n, data, mut rng } => {
+                        let (w, sums) = warm_local_train(backend, global, &data, cfg, &mut rng)?;
+                        Ok(Out::Fo { n, w, sums })
                     }
-                    Job::Zo { cid, seeds, s_block } => {
-                        let client = &clients[cid];
+                    Job::Zo { cid, data, seeds, s_block } => {
                         let groups = zo_step_chunks(
-                            &client.data,
+                            &data,
                             backend.batch_size(),
                             cfg.zo.grad_steps,
                         );
@@ -656,7 +737,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                             client: cid,
                             seeds,
                             delta_l: deltas,
-                            n_samples: client.n(),
+                            n_samples: data.n(),
                             s_block,
                         }))
                     }
@@ -670,9 +751,9 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let mut train = LossSums::default();
         for r in results {
             match r? {
-                Out::Fo { cid, w, sums } => {
+                Out::Fo { n, w, sums } => {
                     train.add(sums);
-                    fo_updates.push((w, self.clients[cid].n() as f64));
+                    fo_updates.push((w, n as f64));
                 }
                 Out::Zo(c) => contributions.push(c),
             }
@@ -722,8 +803,9 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         } else {
             // seed-replayable round: the broadcast lets every ZO
             // survivor reconstruct the next round's global
-            for &cid in &zo_survivors {
-                self.synced[cid] = self.synced[cid].max(self.round + 1);
+            let survivors = std::mem::take(&mut zo_survivors);
+            for cid in survivors {
+                self.mark_synced(cid, self.round + 1);
             }
             self.ckpt.record_seed_round(self.round, items, &self.global);
         }
@@ -1031,12 +1113,12 @@ mod tests {
         let init = ParamVec::zeros(be.dim());
         let fed = Federation::new(cfg.clone(), &be, shards, test, init).unwrap();
         let legacy = assign_resources(cfg.clients, cfg.hi_count(), cfg.seed);
-        for (c, l) in fed.clients.iter().zip(&legacy) {
-            assert_eq!(c.resource, *l, "client {}", c.id);
+        for (cid, l) in legacy.iter().enumerate() {
+            assert_eq!(fed.pop.resource(cid, &fed.cost), *l, "client {cid}");
         }
         // every low client can still afford the ZO footprint
-        for c in &fed.clients {
-            assert!(c.profile.zo_capable(&fed.cost));
+        for cid in 0..cfg.clients {
+            assert!(fed.pop.profile(cid).zo_capable(&fed.cost));
         }
     }
 
@@ -1168,7 +1250,10 @@ mod tests {
         for (a, b) in log1.rounds.iter().zip(&log4.rounds) {
             assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
             assert_eq!(a.catch_up_down, b.catch_up_down);
-            assert_eq!((a.bytes_up, a.bytes_down, a.dropped), (b.bytes_up, b.bytes_down, b.dropped));
+            assert_eq!(
+                (a.bytes_up, a.bytes_down, a.dropped),
+                (b.bytes_up, b.bytes_down, b.dropped)
+            );
         }
         assert!(
             led1.catch_up_down_total > 0,
@@ -1205,16 +1290,55 @@ mod tests {
         // pure ZO round: every survivor receives the broadcast and syncs
         // to round 1
         let fed = mk(false);
-        assert!(fed.synced.iter().all(|&s| s == 1), "{:?}", fed.synced);
+        let dense = fed.synced.to_dense(fed.cfg.clients);
+        assert!(dense.iter().all(|&s| s == 1), "{dense:?}");
         // mixed round (binary fleet: half the clients run FO): opaque —
         // nobody may claim the post-fold state
         let fed = mk(true);
         assert_eq!(fed.ckpt.tail_rounds(), 0, "mixed round must be opaque");
         assert_eq!(fed.ckpt.base_round(), 1);
+        let dense = fed.synced.to_dense(fed.cfg.clients);
         assert!(
-            fed.synced.iter().all(|&s| s == 0),
-            "oversynced past an opaque round: {:?}",
-            fed.synced
+            dense.iter().all(|&s| s == 0),
+            "oversynced past an opaque round: {dense:?}"
+        );
+    }
+
+    #[test]
+    fn sparse_synced_reproduces_dense_ledger_on_churn() {
+        // satellite: the sparse sync ledger's folds reproduce the dense
+        // Vec ledger they replaced, on the preset that actually exercises
+        // staleness (late joiners, whole-round absences, rejoins) — the
+        // cfg(test) mirror applies the identical max-fold at every site.
+        let mut cfg = smoke_cfg();
+        cfg.ckpt_every = 2;
+        cfg.scenario = crate::sim::Scenario::preset("churn").unwrap();
+        let (be, shards, test) = build(cfg.clone());
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new(cfg.clone(), &be, shards, test, init).unwrap();
+        fed.run().unwrap();
+        let mirror = fed
+            .synced_dense_mirror
+            .as_ref()
+            .expect("materialized federation keeps the dense mirror");
+        assert_eq!(
+            &fed.synced.to_dense(cfg.clients),
+            mirror,
+            "sparse fold diverged from the dense ledger"
+        );
+        // staleness really occurred, and the ledger stayed sparse: only
+        // clients that deviated from the init default occupy memory
+        assert!(fed.ledger.catch_up_down_total > 0);
+        assert!(fed.synced.deviated() <= cfg.clients);
+        let defaults = fed
+            .synced_dense_mirror
+            .iter()
+            .filter(|&&s| s == 0)
+            .count();
+        assert_eq!(
+            fed.synced.deviated(),
+            cfg.clients - defaults,
+            "exactly the non-default clients may hold entries"
         );
     }
 
@@ -1289,17 +1413,15 @@ mod tests {
         );
         let mut tier_means: Vec<(String, f64)> = Vec::new();
         for &(cid, s) in &counts {
-            let tier = fed.clients[cid].profile.tier.clone();
+            let tier = fed.pop.profile(cid).tier;
             match tier_means.iter_mut().find(|(t, _)| *t == tier) {
                 Some((_, m)) => *m += s as f64,
                 None => tier_means.push((tier, s as f64)),
             }
         }
         for (tier, m) in tier_means.iter_mut() {
-            let n = fed
-                .clients
-                .iter()
-                .filter(|c| c.profile.tier == *tier)
+            let n = (0..cfg.clients)
+                .filter(|&cid| fed.pop.profile(cid).tier == *tier)
                 .count();
             *m /= n as f64;
         }
@@ -1347,6 +1469,53 @@ mod tests {
             led_uniform.seeds_total
         );
         assert!(g1.is_finite());
+    }
+
+    #[test]
+    fn lazy_fleet_federation_runs_both_phases_thread_invariant() {
+        // the fleet-scale path at test scale: lazy population, warm phase
+        // sampling the thin backbone by rejection, ZO phase over keyed
+        // shards — deterministic, thread-invariant, O(1) population state
+        let run_with = |threads: usize| {
+            let mut cfg = smoke_cfg();
+            cfg.clients = 512;
+            cfg.sample_zo = 8;
+            cfg.threads = threads;
+            cfg.population = crate::config::PopulationMode::Lazy;
+            cfg.scenario = crate::sim::Scenario::preset("fleet").unwrap();
+            let (train, test) =
+                crate::data::synthetic::train_test(SynthKind::Synth10, 400, 120, cfg.seed);
+            let be = LinearBackend::pooled(32 * 32 * 3, 2, 10, 32);
+            let init = ParamVec::zeros(be.dim());
+            let mut fed = Federation::new_lazy(
+                cfg,
+                &be,
+                Source::Image(Arc::new(train)),
+                Source::Image(Arc::new(test)),
+                init,
+            )
+            .unwrap();
+            fed.run().unwrap();
+            (fed.global.clone(), fed.log, fed.pop.approx_state_bytes())
+        };
+        let (g1, log1, bytes1) = run_with(1);
+        let (g4, log4, bytes4) = run_with(4);
+        assert_eq!(g1, g4, "lazy-population weights must not depend on threads");
+        assert_eq!(log1.rounds.len(), log4.rounds.len());
+        for (a, b) in log1.rounds.iter().zip(&log4.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(
+                (a.bytes_up, a.bytes_down, a.dropped),
+                (b.bytes_up, b.bytes_down, b.dropped)
+            );
+        }
+        assert!(g1.is_finite());
+        assert!(log1.rounds.iter().any(|r| r.phase == Phase::Warm));
+        assert!(log1.rounds.iter().any(|r| r.phase == Phase::Zo));
+        // no per-client vector anywhere: the population descriptor is
+        // hundreds of bytes regardless of N
+        assert_eq!(bytes1, bytes4);
+        assert!(bytes1 < 4096, "lazy population state is {bytes1} B");
     }
 
     #[test]

@@ -36,10 +36,18 @@ SUBCOMMANDS
                                         results identical for every N)
             --scenario NAME|FILE       (device-capability fleet: binary|
                                         uniform-high|edge-spectrum|
-                                        stragglers|flaky|churn, a JSON spec
-                                        file, or an inline {...} spec —
-                                        schema in README.md and
+                                        stragglers|flaky|churn|fleet, a
+                                        JSON spec file, or an inline {...}
+                                        spec — schema in README.md and
                                         rust/src/exp/README.md)
+            --population MODE          (auto|materialized|lazy: how
+                                        per-client state is backed. auto
+                                        (default) materializes small
+                                        populations byte-identically to
+                                        before and derives lazily past
+                                        2^17 clients, so
+                                        --clients 10000000 costs
+                                        O(sampled) per round)
             --ckpt-every N             (server checkpoint cadence: snapshot
                                         + seed-log compaction every N ZO
                                         rounds; stale/late-joining clients
@@ -61,7 +69,7 @@ SUBCOMMANDS
                                         |dL|-quantile clipping folded into
                                         the fused update; default off)
   exp     regenerate a paper table/figure
-            zowarmup exp <table1..table7|fig3..fig7|ckpt|adaptive|all> [--scale smoke|default|paper]
+            zowarmup exp <table1..table7|fig3..fig7|ckpt|adaptive|fleet|all> [--scale smoke|default|paper]
             [--threads N]              (worker threads for every run in
                                         the sweep; 0 = auto)
             [--scenario NAME|FILE]     (capability fleet for every run in
@@ -127,6 +135,28 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             linear_lrs(&mut cfg);
             // re-apply CLI lr overrides on top of the preset
             cfg.apply_args(args)?;
+            if cfg.lazy_population() {
+                // fleet-scale path: no per-client materialization — the
+                // population derives profiles/shards on demand, so setup
+                // stays O(1) at --clients 10000000
+                warn_lazy_semantics(&cfg, args);
+                let (train, test) = zowarmup::data::synthetic::train_test(
+                    kind,
+                    data.n_train,
+                    data.n_test,
+                    cfg.seed,
+                );
+                let backend = zowarmup::exp::common::probe_backend(kind.classes());
+                let init = ParamVec::zeros(backend.dim());
+                let mut fed = Federation::new_lazy(
+                    cfg,
+                    &backend,
+                    zowarmup::data::loader::Source::Image(std::sync::Arc::new(train)),
+                    zowarmup::data::loader::Source::Image(std::sync::Arc::new(test)),
+                    init,
+                )?;
+                return run_and_report(&mut fed, &out);
+            }
             let s = image_setup(kind, &data, &cfg);
             let init = ParamVec::zeros(s.backend.dim());
             let mut fed = Federation::new(cfg, &s.backend, s.shards, s.test, init)?;
@@ -145,12 +175,55 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 kind.classes()
             );
             cfg.batch = entry.batch;
-            let s = image_setup(kind, &data, &cfg);
             let init = ParamVec::he_init(entry, cfg.seed);
+            if cfg.lazy_population() {
+                warn_lazy_semantics(&cfg, args);
+                let (train, test) = zowarmup::data::synthetic::train_test(
+                    kind,
+                    data.n_train,
+                    data.n_test,
+                    cfg.seed,
+                );
+                let mut fed = Federation::new_lazy(
+                    cfg,
+                    &backend,
+                    zowarmup::data::loader::Source::Image(std::sync::Arc::new(train)),
+                    zowarmup::data::loader::Source::Image(std::sync::Arc::new(test)),
+                    init,
+                )?;
+                return run_and_report(&mut fed, &out);
+            }
+            let s = image_setup(kind, &data, &cfg);
             let mut fed = Federation::new(cfg, &backend, s.shards, s.test, init)?;
             run_and_report(&mut fed, &out)
         }
         other => anyhow::bail!("bad --backend {other:?} (linear|xla)"),
+    }
+}
+
+/// A lazy population is a different *statistical* model, not just a
+/// memory optimization: shards are fixed-size IID keyed draws (the
+/// Dirichlet `--alpha` split does not apply) and tier occupancy is
+/// binomial rather than exact-count. Say so out loud — especially when
+/// `--population auto` flipped the mode on by client count alone.
+fn warn_lazy_semantics(cfg: &FedConfig, args: &Args) {
+    let why = match cfg.population {
+        zowarmup::config::PopulationMode::Lazy => "explicit --population lazy".to_string(),
+        _ => format!(
+            "auto: {} clients exceeds the {} materialization threshold",
+            cfg.clients,
+            zowarmup::config::LAZY_AUTO_THRESHOLD
+        ),
+    };
+    eprintln!(
+        "[population] lazy mode ({why}): per-client shards are fixed-size \
+         keyed draws and tier occupancy is binomial (DESIGN.md \u{a7}10)"
+    );
+    if args.get("alpha").is_some() {
+        eprintln!(
+            "[population] warning: --alpha (Dirichlet non-IID split) does not \
+             apply to lazy populations and is ignored"
+        );
     }
 }
 

@@ -338,31 +338,33 @@ pub struct ScenarioSpec {
 }
 
 /// How the fleet's capabilities are drawn.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub enum Scenario {
     /// The legacy binary High/Low fleet driven by `FedConfig::hi_frac`.
     /// Profile sampling consumes the exact RNG stream of the seed repo's
     /// `assign_resources`, so seed-equivalent configs stay bit-identical.
+    #[default]
     Binary,
     Custom(ScenarioSpec),
 }
 
-impl Default for Scenario {
-    fn default() -> Self {
-        Scenario::Binary
-    }
-}
-
 /// Preset names accepted by `--scenario` (besides a JSON file path or an
 /// inline `{...}` spec).
-pub const PRESETS: [&str; 6] = [
+pub const PRESETS: [&str; 7] = [
     "binary",
     "uniform-high",
     "edge-spectrum",
     "stragglers",
     "flaky",
     "churn",
+    "fleet",
 ];
+
+/// Stream salt of the lazy per-client tier draw ([`Scenario::profile_of`])
+/// — its own domain, decorrelated from the materialized shuffle stream
+/// (`seed ^ 0x4E50_11`), the drop trace ([`SIM_SALT`]) and the churn
+/// trace ([`CHURN_SALT`]).
+pub const PROFILE_SALT: u64 = 0x9_0F11E_0F;
 
 fn binary_tiers() -> Vec<DeviceTier> {
     vec![
@@ -428,6 +430,26 @@ impl Scenario {
                     .into_iter()
                     .map(|t| t.drops(0.25))
                     .collect(),
+                deadline_ms: 0.0,
+            },
+            // the cross-device million-client workload of the related
+            // systems papers: a thin FO-capable backbone (so warm-up
+            // still has someone to sample) over a vast ZO-only edge.
+            // Designed for the lazy population layer — per-client
+            // profiles derive on demand from (scenario, seed, id), so a
+            // 10^7-client federation costs O(sampled) per round.
+            "fleet" => ScenarioSpec {
+                name: name.into(),
+                tiers: vec![
+                    DeviceTier::new("backbone", 0.02, MemBudget::FitsBackprop)
+                        .net(100.0, 100.0)
+                        .speed(8.0),
+                    DeviceTier::new("phone", 0.68, MemBudget::FitsZoOnly).net(5.0, 20.0),
+                    DeviceTier::new("iot", 0.30, MemBudget::FitsZoOnly)
+                        .net(1.0, 4.0)
+                        .speed(0.25)
+                        .drops(0.02),
+                ],
                 deadline_ms: 0.0,
             },
             // the late-join / rejoin workload the ckpt subsystem exists
@@ -621,6 +643,96 @@ impl Scenario {
             }
         }
         out.into_iter().map(|p| p.expect("all clients assigned")).collect()
+    }
+
+    /// Per-tier draw probabilities of the lazy population layer: custom
+    /// tiers use their declared fractions; the Binary fleet reproduces
+    /// its `hi_count / k` split as a probability.
+    fn tier_probs(&self, k: usize, hi_count: usize) -> Vec<f64> {
+        match self {
+            Scenario::Binary => {
+                let p = if k == 0 {
+                    0.0
+                } else {
+                    hi_count.min(k) as f64 / k as f64
+                };
+                vec![p, 1.0 - p]
+            }
+            Scenario::Custom(s) => s.tiers.iter().map(|t| t.frac).collect(),
+        }
+    }
+
+    /// Derive ONE client's capability profile on demand — a pure function
+    /// of `(scenario, seed, cid)` (plus the Binary split parameters), the
+    /// core of the **lazy population layer**: a federation over 10^7
+    /// clients never materializes a profile vector, it evaluates this for
+    /// the O(K) clients a round actually samples.
+    ///
+    /// The tier is a keyed pseudo-random draw over the id space: the
+    /// client id is hashed ([`crate::util::rng::SplitMix64`]) into a
+    /// [`PROFILE_SALT`]-salted stream and one uniform picks the tier by
+    /// cumulative fraction. Unlike the materialized
+    /// [`Self::sample_profiles`] shuffle (kept, bit-compatible, for
+    /// seed-era configs), tier occupancy here is binomial rather than
+    /// exact-count — the correct model for effectively unbounded
+    /// cross-device populations. Equivalence with the materialized *lazy*
+    /// vector ([`Self::sample_profiles_lazy`]) is element-wise exact and
+    /// pinned by `prop_profile_of_matches_lazy_materialization`.
+    pub fn profile_of(
+        &self,
+        k: usize,
+        hi_count: usize,
+        seed: u64,
+        cid: usize,
+        cost: &CostModel,
+    ) -> CapabilityProfile {
+        let mut h = crate::util::rng::SplitMix64(cid as u64);
+        let mut rng = Xoshiro256::seed_from(seed ^ PROFILE_SALT ^ h.next_u64());
+        let u = rng.next_f64();
+        let tiers = self.resolved_tiers();
+        let probs = self.tier_probs(k, hi_count);
+        debug_assert_eq!(tiers.len(), probs.len());
+        let mut acc = 0.0f64;
+        let mut pick = tiers.len() - 1; // guard fp round-off: last tier
+        for (i, p) in probs.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                pick = i;
+                break;
+            }
+        }
+        CapabilityProfile::from_tier(&tiers[pick], cost)
+    }
+
+    /// Materialize the lazy population's profiles for all `k` clients —
+    /// exactly `(0..k).map(profile_of)`. Only sensible at test/reference
+    /// scale; the round engines never call it.
+    pub fn sample_profiles_lazy(
+        &self,
+        k: usize,
+        hi_count: usize,
+        seed: u64,
+        cost: &CostModel,
+    ) -> Vec<CapabilityProfile> {
+        (0..k)
+            .map(|cid| self.profile_of(k, hi_count, seed, cid, cost))
+            .collect()
+    }
+
+    /// Population fraction that is FO-capable under `cost` — the draw
+    /// probability mass of tiers whose memory budget covers the eq. 4
+    /// threshold. The lazy warm-phase sampler uses this to prove its
+    /// rejection loop terminates, and HeteroFL's budget model uses it as
+    /// the expected full-width share.
+    pub fn fo_tier_frac(&self, k: usize, hi_count: usize, cost: &CostModel) -> f64 {
+        let tiers = self.resolved_tiers();
+        let probs = self.tier_probs(k, hi_count);
+        tiers
+            .iter()
+            .zip(&probs)
+            .filter(|(t, _)| t.mem.resolve(cost) >= cost.fo_threshold_bytes())
+            .map(|(_, p)| *p)
+            .sum()
     }
 }
 
@@ -1139,6 +1251,150 @@ mod tests {
                 }
                 if plan_time_ms(&p, &mk(s1 + 1), params) <= b1 {
                     return Err(format!("S={s1} is not maximal"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fleet_preset_has_a_thin_fo_backbone_over_a_zo_edge() {
+        let s = Scenario::preset("fleet").unwrap();
+        s.validate().unwrap();
+        let cost = probe_cost();
+        let fo = s.fo_tier_frac(0, 0, &cost);
+        assert!(fo > 0.0 && fo < 0.1, "thin FO backbone, got {fo}");
+        // every tier can at least run ZO
+        let Scenario::Custom(spec) = &s else { panic!() };
+        for t in &spec.tiers {
+            assert!(t.mem.resolve(&cost) >= cost.zo_mem_bytes(), "tier {}", t.name);
+        }
+        // binary's fo share reproduces the hi split as a probability
+        assert_eq!(Scenario::Binary.fo_tier_frac(20, 6, &cost), 0.3);
+    }
+
+    #[test]
+    fn profile_of_is_pure_and_scales_to_fleet_ids() {
+        // the lazy layer's contract: profile_of is a pure function of
+        // (scenario, seed, cid) — same inputs, same profile, evaluation
+        // order irrelevant, and a 10^7-space id costs O(1)
+        let cost = probe_cost();
+        let s = Scenario::preset("fleet").unwrap();
+        let a = s.profile_of(10_000_000, 0, 7, 9_876_543, &cost);
+        let b = s.profile_of(10_000_000, 0, 7, 9_876_543, &cost);
+        assert_eq!(a, b);
+        let c = s.profile_of(10_000_000, 0, 8, 9_876_543, &cost);
+        let d = s.profile_of(10_000_000, 0, 7, 9_876_544, &cost);
+        // different seed or id *may* land in the same tier; over a spread
+        // of ids the mix must be heterogeneous
+        let _ = (c, d);
+        let mut tiers = std::collections::BTreeSet::new();
+        for cid in 0..500 {
+            tiers.insert(s.profile_of(10_000_000, 0, 7, cid, &cost).tier);
+        }
+        assert!(tiers.len() >= 2, "one draw swallowed the fleet: {tiers:?}");
+    }
+
+    #[test]
+    fn prop_profile_of_matches_lazy_materialization() {
+        // satellite: lazy profile_of matches the materialized lazy vector
+        // element-wise across random scenarios, seeds, and probe orders
+        crate::util::prop::run_prop("lazy_profile_equivalence", 60, |g| {
+            let mut rng = g.rng();
+            let cost = CostModel::generic(1_000 + rng.below(1 << 20) as u64, 32);
+            let scenario = if rng.below(4) == 0 {
+                Scenario::Binary
+            } else {
+                // random custom scenario: 1..5 tiers, normalized fracs
+                let n_tiers = 1 + rng.below(4);
+                let raw: Vec<f64> = (0..n_tiers).map(|_| 0.05 + rng.next_f64()).collect();
+                let z: f64 = raw.iter().sum();
+                let tiers: Vec<DeviceTier> = raw
+                    .iter()
+                    .enumerate()
+                    .map(|(i, f)| {
+                        let mem = if rng.below(2) == 0 {
+                            MemBudget::FitsBackprop
+                        } else {
+                            MemBudget::FitsZoOnly
+                        };
+                        let mut t = DeviceTier::new(&format!("t{i}"), f / z, mem)
+                            .net(0.5 + rng.next_f64() * 50.0, 0.5 + rng.next_f64() * 50.0);
+                        t.compute = 0.1 + rng.next_f64() * 8.0;
+                        t.drop_rate = rng.next_f64() * 0.5;
+                        t
+                    })
+                    .collect();
+                let spec = ScenarioSpec {
+                    name: "rand".into(),
+                    tiers,
+                    deadline_ms: 0.0,
+                };
+                let sc = Scenario::Custom(spec);
+                sc.validate().map_err(|e| e.to_string())?;
+                sc
+            };
+            let k = 1 + rng.below(g.size.max(1) * 2);
+            let hi = rng.below(k + 1);
+            let seed = rng.next_u64();
+            let materialized = scenario.sample_profiles_lazy(k, hi, seed, &cost);
+            if materialized.len() != k {
+                return Err(format!("{} profiles for k={k}", materialized.len()));
+            }
+            // independently-coded reference of the documented draw (NOT
+            // a call back into profile_of): hash the id, seed the
+            // PROFILE_SALT stream, walk the cumulative fractions
+            let reference = |cid: usize| -> CapabilityProfile {
+                let mut h = crate::util::rng::SplitMix64(cid as u64);
+                let u = Xoshiro256::seed_from(seed ^ PROFILE_SALT ^ h.next_u64()).next_f64();
+                let (tiers, probs): (Vec<DeviceTier>, Vec<f64>) = match &scenario {
+                    Scenario::Binary => {
+                        let p = hi.min(k) as f64 / k as f64;
+                        (binary_tiers(), vec![p, 1.0 - p])
+                    }
+                    Scenario::Custom(s) => (
+                        s.tiers.clone(),
+                        s.tiers.iter().map(|t| t.frac).collect(),
+                    ),
+                };
+                let mut acc = 0.0;
+                let mut pick = tiers.len() - 1;
+                for (i, p) in probs.iter().enumerate() {
+                    acc += p;
+                    if u < acc {
+                        pick = i;
+                        break;
+                    }
+                }
+                CapabilityProfile::from_tier(&tiers[pick], &cost)
+            };
+            // probe a random subset in random order: element-wise equal
+            // to both the materialized vector and the reference draw
+            for _ in 0..8.min(k) {
+                let cid = rng.below(k);
+                let lazy = scenario.profile_of(k, hi, seed, cid, &cost);
+                if lazy != materialized[cid] {
+                    return Err(format!(
+                        "profile_of({cid}) != materialized[{cid}]: {lazy:?} vs {:?}",
+                        materialized[cid]
+                    ));
+                }
+                let want = reference(cid);
+                if lazy != want {
+                    return Err(format!(
+                        "profile_of({cid}) diverged from the documented draw: \
+                         {lazy:?} vs {want:?}"
+                    ));
+                }
+            }
+            // tier identity is a real tier of the scenario
+            let names: Vec<String> = match &scenario {
+                Scenario::Binary => vec!["high".into(), "low".into()],
+                Scenario::Custom(s) => s.tiers.iter().map(|t| t.name.clone()).collect(),
+            };
+            for p in &materialized {
+                if !names.contains(&p.tier) {
+                    return Err(format!("unknown tier {:?}", p.tier));
                 }
             }
             Ok(())

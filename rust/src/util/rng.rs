@@ -118,16 +118,34 @@ impl Xoshiro256 {
         g
     }
 
-    /// Sample `m` distinct indices from [0, n) (partial Fisher-Yates).
+    /// Sample `m` distinct indices from [0, n) — a partial Fisher-Yates
+    /// run *sparsely*: instead of materializing the whole `0..n` id
+    /// vector, a displacement map records only the slots a swap has
+    /// touched, so memory is O(m) while the draw sequence (`m` calls to
+    /// [`Self::below`]) and the output stay **bit-identical** to the
+    /// dense array walk for every `(n, m)`. This is the streaming index
+    /// sampler behind O(sampled)-cost rounds over 10^7-client id spaces
+    /// (`choose_sparse_matches_dense_reference` pins the equivalence).
     pub fn choose(&mut self, n: usize, m: usize) -> Vec<usize> {
         assert!(m <= n, "choose({m}) from {n}");
-        let mut idx: Vec<usize> = (0..n).collect();
+        // slot -> displaced value; untouched slots implicitly hold their
+        // own index. Only ever *indexed* by key (no iteration), so the
+        // map's nondeterministic order cannot leak into results.
+        let mut disp: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(m.saturating_mul(2));
+        let mut out = Vec::with_capacity(m);
         for i in 0..m {
             let j = i + self.below(n - i);
-            idx.swap(i, j);
+            let at_j = disp.get(&j).copied().unwrap_or(j);
+            let at_i = disp.get(&i).copied().unwrap_or(i);
+            // dense equivalent: swap(idx[i], idx[j]); out takes idx[i].
+            // Slot i is never probed again (future reads are at > i), so
+            // only the j side of the swap needs recording — and j == i
+            // degenerates to rewriting the slot with its own value.
+            out.push(at_j);
+            disp.insert(j, at_i);
         }
-        idx.truncate(m);
-        idx
+        out
     }
 
     /// Fast-forward the stream by `n` `next_u64` draws.
@@ -437,6 +455,41 @@ mod tests {
             .collect();
         let mean_max = trials.iter().sum::<f64>() / trials.len() as f64;
         assert!(mean_max < 0.2, "alpha=100 should be flat: {mean_max}");
+    }
+
+    #[test]
+    fn choose_sparse_matches_dense_reference() {
+        // the streaming sampler's contract: identical draw consumption
+        // and identical output to the seed repo's dense partial
+        // Fisher-Yates, for every (n, m) — including m == n and m == 0
+        let dense = |rng: &mut Xoshiro256, n: usize, m: usize| -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..m {
+                let j = i + rng.below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(m);
+            idx
+        };
+        for (n, m) in [(1usize, 1usize), (20, 5), (20, 20), (50, 0), (1000, 64), (7, 6)] {
+            for seed in 0..8u64 {
+                let mut a = Xoshiro256::seed_from(seed);
+                let mut b = Xoshiro256::seed_from(seed);
+                assert_eq!(a.choose(n, m), dense(&mut b, n, m), "n={n} m={m} seed={seed}");
+                // and the streams stay aligned afterwards
+                assert_eq!(a.next_u64(), b.next_u64(), "n={n} m={m} seed={seed}");
+            }
+        }
+        // O(sampled) at fleet scale: a 10^7 id space must not be
+        // materialized (this would OOM-or-crawl if it were)
+        let mut r = Xoshiro256::seed_from(3);
+        let picks = r.choose(10_000_000, 64);
+        assert_eq!(picks.len(), 64);
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 64);
+        assert!(picks.iter().all(|&p| p < 10_000_000));
     }
 
     #[test]

@@ -34,9 +34,16 @@ pub struct SeedIssuer {
 }
 
 /// Field widths of the packed seed index (documented protocol limits).
+/// `MAX_CLIENTS` bounds the *compact* packing only: clients at or above
+/// it derive through the wide fleet path ([`SeedIssuer::seed`]), bounded
+/// by `fed::client::MAX_FLEET_CLIENTS` instead.
 pub const MAX_ROUNDS: usize = 1 << 24;
 pub const MAX_CLIENTS: usize = 1 << 24;
 pub const MAX_SEEDS_PER_ROUND: usize = 1 << 16;
+
+/// Domain salt of the wide (fleet-scale) seed derivation, keeping it off
+/// every value the compact 24/24/16 packing can produce.
+const WIDE_ISSUER_SALT: u64 = 0xF1EE7_15_5EED;
 
 impl SeedIssuer {
     pub fn new(root: u64) -> Self {
@@ -61,9 +68,34 @@ impl SeedIssuer {
         )
     }
 
+    /// Derive the (round, client, s) seed. Clients inside the 24-bit
+    /// compact field use the historical packed-index hash unchanged (so
+    /// every pre-fleet trace reproduces); clients at or above it — the
+    /// fleet-scale id space — first hash the client id through
+    /// [`SplitMix64`] and fold it into a salted root, keeping the
+    /// (round, s) packing intact. Both domains are pure functions of
+    /// their inputs, so the protocol's regenerate-from-seed contract is
+    /// untouched.
     pub fn seed(&self, round: usize, client: usize, s: usize) -> u64 {
-        let packed = Self::pack(round, client, s);
-        let mut sm = SplitMix64(self.root ^ packed.wrapping_mul(0xA24B_AED4_963E_E407));
+        if client < MAX_CLIENTS {
+            let packed = Self::pack(round, client, s);
+            let mut sm = SplitMix64(self.root ^ packed.wrapping_mul(0xA24B_AED4_963E_E407));
+            return sm.next_u64();
+        }
+        debug_assert!(
+            client < crate::fed::client::MAX_FLEET_CLIENTS,
+            "client {client} overflows the 40-bit fleet field"
+        );
+        debug_assert!(round < MAX_ROUNDS, "round {round} overflows the 24-bit field");
+        debug_assert!(
+            s < MAX_SEEDS_PER_ROUND,
+            "seed index {s} overflows the 16-bit field"
+        );
+        let mut ch = SplitMix64((client as u64) ^ WIDE_ISSUER_SALT);
+        let client_hash = ch.next_u64();
+        let rs = ((round as u64) << 16) | s as u64;
+        let mut sm =
+            SplitMix64(self.root ^ client_hash ^ rs.wrapping_mul(0xA24B_AED4_963E_E407));
         sm.next_u64()
     }
 
@@ -869,8 +901,36 @@ mod tests {
 
     #[test]
     #[should_panic(expected = "overflows the 24-bit field")]
-    fn seed_issuer_rejects_client_overflow() {
-        SeedIssuer::new(0).seed(0, MAX_CLIENTS, 0);
+    fn seed_issuer_pack_rejects_client_overflow() {
+        // the compact packing still hard-bounds its field; ids past it
+        // take the wide derivation in seed() instead of packing
+        SeedIssuer::pack(0, MAX_CLIENTS, 0);
+    }
+
+    #[test]
+    fn seed_issuer_wide_clients_derive_distinct_deterministic_seeds() {
+        // fleet-scale ids (>= 2^24) derive through the wide path: still
+        // deterministic, still unique across (round, client, s), and the
+        // compact domain is bit-for-bit what it always was
+        let iss = SeedIssuer::new(7);
+        let wide = MAX_CLIENTS + 123;
+        assert_eq!(iss.seed(3, wide, 1), iss.seed(3, wide, 1));
+        let mut all = std::collections::BTreeSet::new();
+        for round in 0..4 {
+            for client in [wide, wide + 1, 9_999_999 + MAX_CLIENTS] {
+                for s in 0..3 {
+                    assert!(all.insert(iss.seed(round, client, s)));
+                }
+            }
+        }
+        // a compact neighbor is untouched by the wide branch existing
+        let legacy = {
+            let packed = SeedIssuer::pack(3, MAX_CLIENTS - 1, 1);
+            let mut sm = SplitMix64(7 ^ packed.wrapping_mul(0xA24B_AED4_963E_E407));
+            sm.next_u64()
+        };
+        assert_eq!(iss.seed(3, MAX_CLIENTS - 1, 1), legacy);
+        assert!(!all.contains(&legacy));
     }
 
     #[test]

@@ -338,6 +338,73 @@ fn checkpointing_is_observational_without_deadlines() {
 }
 
 #[test]
+fn ten_million_client_fleet_round_allocates_o_sampled_not_o_n() {
+    // acceptance: `--scenario fleet --clients 10000000` completes rounds
+    // without allocating any O(N) per-client vector — the population
+    // descriptor stays O(1), the sync ledger only ever holds entries for
+    // clients that actually participated, and results are bit-identical
+    // across worker counts.
+    let run = |threads: usize| {
+        let mut cfg = Scale::Smoke.fed();
+        cfg.lr_client_warm = 0.06;
+        cfg.lr_client_zo = 1.0;
+        cfg.lr_server_zo = 0.01;
+        cfg.zo.eps = 1e-3;
+        cfg.clients = 10_000_000;
+        cfg.sample_zo = 16;
+        cfg.sample_warm = 4;
+        cfg.rounds_total = 6;
+        cfg.pivot = 2;
+        cfg.threads = threads;
+        cfg.scenario = Scenario::preset("fleet").unwrap();
+        assert!(cfg.lazy_population(), "Auto must resolve lazy at 1e7 clients");
+        let (train, test) = train_test(SynthKind::Synth10, 400, 120, cfg.seed);
+        let be = probe();
+        let init = ParamVec::zeros(be.dim());
+        let mut fed = Federation::new_lazy(
+            cfg.clone(),
+            &be,
+            Source::Image(Arc::new(train)),
+            test,
+            init,
+        )
+        .unwrap();
+        fed.run().unwrap();
+        assert!(fed.pop.is_lazy());
+        // the sparse-ledger / lazy-profile acceptance assertions: no O(N)
+        // per-client vector exists anywhere in the federation state
+        let state = fed.pop.approx_state_bytes();
+        assert!(
+            state < 4096,
+            "population layer holds {state} B for 10^7 clients — something materialized"
+        );
+        let max_participants = cfg.rounds_total * cfg.sample_zo.max(cfg.sample_warm);
+        assert!(
+            fed.synced.deviated() <= max_participants,
+            "sync ledger holds {} entries for at most {max_participants} participants",
+            fed.synced.deviated()
+        );
+        // an untouched client reads the population default without allocating
+        assert_eq!(fed.synced.get(9_999_998), 0);
+        assert!(fed.global.is_finite());
+        (fed.global.clone(), fed.log.clone(), fed.ledger.clone())
+    };
+    let (g1, log1, led1) = run(1);
+    assert!(log1.rounds.iter().any(|r| r.train_loss != 0.0));
+    // and the fleet path keeps the engine's determinism contract
+    let (g4, log4, led4) = run(4);
+    assert_eq!(g1, g4, "weights must not depend on threads");
+    assert_eq!(
+        (led1.up_total, led1.down_total),
+        (led4.up_total, led4.down_total)
+    );
+    for (a, b) in log1.rounds.iter().zip(&log4.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!((a.bytes_up, a.bytes_down, a.dropped), (b.bytes_up, b.bytes_down, b.dropped));
+    }
+}
+
+#[test]
 fn default_scenario_reproduces_legacy_assignment_and_results() {
     // acceptance: assign_resources-compatible configs reproduce the
     // seed's exact High/Low assignment through profile sampling
@@ -349,7 +416,9 @@ fn default_scenario_reproduces_legacy_assignment_and_results() {
         let fed =
             Federation::new(cfg.clone(), &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
         let legacy = assign_resources(cfg.clients, cfg.hi_count(), seed);
-        let derived: Vec<_> = fed.clients.iter().map(|c| c.resource).collect();
+        let derived: Vec<_> = (0..cfg.clients)
+            .map(|cid| fed.pop.resource(cid, &fed.cost))
+            .collect();
         assert_eq!(derived, legacy, "seed {seed}");
     }
     // and a default-scenario run never drops anyone

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Diffs the bench-smoke JSON emitted by the `zo_core` / `fed_primitives`
+benches against the committed `BENCH_baseline.json`, row by row, with a
+relative tolerance on `mean_ns` (default +/-30%).
+
+  python3 tools/bench_gate.py BENCH_baseline.json \
+      rust/runs/BENCH_zo_core.json rust/runs/BENCH_fed_primitives.json \
+      [--tolerance 0.30]
+
+Behavior:
+  * rows are compared on `p50_ns` when both sides carry it (robust to
+    the scheduler noise of quick-mode runs on shared CI runners),
+    falling back to `mean_ns`;
+  * while the baseline still carries the `"status": "unmeasured"`
+    sentinel (no toolchain has blessed a first trajectory point yet) the
+    gate auto-skips with a visible notice and exits 0;
+  * a fresh row slower than baseline * (1 + tolerance) is a REGRESSION
+    and fails the gate (exit 1);
+  * a fresh row faster than baseline * (1 - tolerance) is reported as a
+    stale-baseline notice (the win should be committed), not a failure;
+  * rows present on one side only are reported as notices — new benches
+    are expected to appear before their baseline is re-blessed.
+
+Baseline schema: {"status": "measured"|"unmeasured", "groups": [<group>]}
+where each <group> is a `util::bench::Bench::to_json` object:
+{"group": str, "results": [{"name": str, "mean_ns": float, ...}]}.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(groups):
+    """Flatten groups to {(group, name): {"p50_ns": x|None, "mean_ns": y}}."""
+    rows = {}
+    for g in groups:
+        for r in g.get("results", []):
+            rows[(g.get("group", "?"), r["name"])] = {
+                "p50_ns": float(r["p50_ns"]) if "p50_ns" in r else None,
+                "mean_ns": float(r["mean_ns"]),
+            }
+    return rows
+
+
+def metric(base_row, fresh_row):
+    """Pick the comparison metric: p50 when both sides have it, else mean."""
+    if base_row["p50_ns"] is not None and fresh_row["p50_ns"] is not None:
+        return "p50_ns", base_row["p50_ns"], fresh_row["p50_ns"]
+    return "mean_ns", base_row["mean_ns"], fresh_row["mean_ns"]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh", nargs="+", help="per-group bench JSON files")
+    ap.add_argument("--tolerance", type=float, default=0.30)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if baseline.get("status") != "measured":
+        print(
+            "::notice file={}::bench gate SKIPPED — baseline status is "
+            "{!r}; commit a measured baseline (the bench-smoke step prints "
+            "one) to arm the +/-{:.0%} regression gate".format(
+                args.baseline, baseline.get("status"), args.tolerance
+            )
+        )
+        return 0
+
+    base_rows = load_rows(baseline.get("groups", []))
+    fresh_groups = []
+    for path in args.fresh:
+        with open(path) as f:
+            fresh_groups.append(json.load(f))
+    fresh_rows = load_rows(fresh_groups)
+
+    regressions, improvements = [], []
+    for key, fresh_row in sorted(fresh_rows.items()):
+        base_row = base_rows.get(key)
+        if base_row is None:
+            print(f"::notice::new bench row {key} has no baseline yet")
+            continue
+        name, base_ns, fresh_ns = metric(base_row, fresh_row)
+        if base_ns <= 0:
+            continue
+        ratio = fresh_ns / base_ns
+        label = (
+            f"{key[0]} / {key[1]} [{name}]: {base_ns:.0f} ns -> "
+            f"{fresh_ns:.0f} ns ({ratio:.2f}x)"
+        )
+        if ratio > 1.0 + args.tolerance:
+            regressions.append(label)
+        elif ratio < 1.0 - args.tolerance:
+            improvements.append(label)
+    for key in sorted(set(base_rows) - set(fresh_rows)):
+        print(f"::notice::baseline row {key} was not produced by this run")
+
+    for label in improvements:
+        print(f"::notice::bench improved beyond tolerance (re-bless the baseline): {label}")
+    if regressions:
+        for label in regressions:
+            print(f"::error::bench regression beyond +/-{args.tolerance:.0%}: {label}")
+        return 1
+    print(
+        f"bench gate OK: {len(fresh_rows)} rows within +/-{args.tolerance:.0%} "
+        f"of baseline ({len(improvements)} faster-than-tolerance)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
