@@ -152,6 +152,24 @@ fn main() {
             });
         }
 
+        // the buffered-async engine: rounds/second of the event-driven
+        // fold (dispatch + heap + staleness-weighted aggregation) vs the
+        // barrier rows above, at the same fleet shape
+        for threads in [1usize, 4] {
+            let mut c = cfg.clone();
+            c.threads = threads;
+            c.engine = zowarmup::config::EngineKind::Async;
+            c.async_zo.buffer_k = 4;
+            c.scenario = zowarmup::sim::Scenario::preset("edge-spectrum").unwrap();
+            let shards = shards_from_partition(&src, &part);
+            let init = ParamVec::zeros(be.dim());
+            let mut fed =
+                Federation::new(c, &be, shards, test_src.clone(), init).unwrap();
+            b.iter(&format!("async_zo_round k=4 (edge-spectrum) threads={threads}"), || {
+                black_box(fed.async_zo_round().unwrap());
+            });
+        }
+
         // the fleet-scale tentpole: O(sampled) ZO rounds over lazy
         // populations — the N=1e3 and N=1e7 rows must land within noise
         // of each other, because nothing in a round is O(N)

@@ -278,6 +278,8 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 catch_up_down: 0,
                 seeds_issued: 0,
                 eff_var: 0.0,
+                staleness: 0.0,
+                makespan_ms: 0.0,
             });
         }
         let avg = weighted_average(&updates);
@@ -291,6 +293,8 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             catch_up_down: 0,
             seeds_issued: 0,
             eff_var: 0.0,
+            staleness: 0.0,
+            makespan_ms: 0.0,
         })
     }
 
@@ -400,6 +404,10 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             // module docs)
             seeds_issued: 0,
             eff_var: 0.0,
+            // barrier protocol, no event engine: the async columns
+            // (staleness, simulated makespan) are ZOWarmUp-specific
+            staleness: 0.0,
+            makespan_ms: 0.0,
         })
     }
 
@@ -434,6 +442,9 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 seeds_issued: summary.seeds_issued,
                 eff_var: summary.eff_var,
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                staleness: summary.staleness,
+                model_version: 0,
+                makespan_ms: summary.makespan_ms,
             });
         }
         Ok(())

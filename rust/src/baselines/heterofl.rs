@@ -353,6 +353,9 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
             // stay 0 (see the module docs)
             seeds_issued: 0,
             eff_var: 0.0,
+            // barrier protocol, no event engine: the async columns stay 0
+            staleness: 0.0,
+            makespan_ms: 0.0,
         })
     }
 
@@ -382,6 +385,9 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
                 seeds_issued: summary.seeds_issued,
                 eff_var: summary.eff_var,
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                staleness: summary.staleness,
+                model_version: 0,
+                makespan_ms: summary.makespan_ms,
             });
         }
         Ok(())

@@ -68,6 +68,69 @@ impl VarianceGuard {
     }
 }
 
+/// Which round engine drives the run (`--engine sync|async`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// lock-step barrier rounds (`fed::server::{warm_round, zo_round}`) —
+    /// the default, bit-identical to every seed-era trace
+    Sync,
+    /// discrete-event buffered-async ZO rounds (`fed::engine`): clients
+    /// complete on their own simulated timelines and the server folds the
+    /// first `buffer_k` arrivals with staleness-weighted coefficients.
+    /// The warm (FedAvg) phase stays barrier-synchronous either way.
+    Async,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sync" => Some(EngineKind::Sync),
+            "async" => Some(EngineKind::Async),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineKind::Sync => "sync",
+            EngineKind::Async => "async",
+        }
+    }
+}
+
+/// Knobs of the buffered-async engine (`fed::engine`; inert under the
+/// default `EngineKind::Sync`).
+#[derive(Debug, Clone, Copy)]
+pub struct AsyncConfig {
+    /// completions folded per aggregation step (CLI `--buffer-k`;
+    /// 0 = use `sample_zo`)
+    pub buffer_k: usize,
+    /// polynomial staleness-decay exponent α: a contribution computed
+    /// against a model `s` versions old is down-weighted by (1+s)^-α
+    /// before the weight renormalization (CLI `--staleness-decay`;
+    /// 0.0 = no staleness discount)
+    pub staleness_decay: f64,
+    /// in-flight dispatch slots the server keeps filled (CLI
+    /// `--concurrency`; 0 = 2 × effective buffer_k)
+    pub concurrency: usize,
+    /// Poisson arrival rate in dispatches per simulated ms: every
+    /// dispatch is delayed by an Exp(rate) draw before its
+    /// download→compute→upload timeline starts (CLI `--arrival-rate`;
+    /// 0.0 = staggered-immediate, no extra delay)
+    pub arrival_rate: f64,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        Self {
+            buffer_k: 0,
+            staleness_decay: 0.5,
+            concurrency: 0,
+            arrival_rate: 0.0,
+        }
+    }
+}
+
 /// How the client population is backed (`fed::population::Population`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PopulationMode {
@@ -214,6 +277,13 @@ pub struct FedConfig {
     /// path — and derives lazily above it, so `--clients 10000000` costs
     /// O(sampled) per round.
     pub population: PopulationMode,
+    /// round engine (CLI `--engine sync|async`). `Sync` (default) keeps
+    /// the barrier rounds bit-identical to the seed; `Async` drives the
+    /// ZO phase through the discrete-event buffered engine
+    /// (`fed::engine`), deterministic per worker count in its own right.
+    pub engine: EngineKind,
+    /// buffered-async engine knobs (inert under `EngineKind::Sync`)
+    pub async_zo: AsyncConfig,
 }
 
 impl Default for FedConfig {
@@ -240,6 +310,8 @@ impl Default for FedConfig {
             scenario: Scenario::Binary,
             ckpt_every: 0,
             population: PopulationMode::Auto,
+            engine: EngineKind::Sync,
+            async_zo: AsyncConfig::default(),
         }
     }
 }
@@ -259,6 +331,27 @@ impl FedConfig {
             PopulationMode::Lazy => true,
             PopulationMode::Materialized => false,
             PopulationMode::Auto => self.clients > LAZY_AUTO_THRESHOLD,
+        }
+    }
+
+    /// Effective async fold size: `--buffer-k`, defaulting to the sync
+    /// engine's per-round ZO sample (clamped like `zo_round`'s Q).
+    pub fn buffer_k(&self) -> usize {
+        if self.async_zo.buffer_k > 0 {
+            self.async_zo.buffer_k
+        } else {
+            self.sample_zo.clamp(1, self.clients)
+        }
+    }
+
+    /// Effective async in-flight dispatch slots: `--concurrency`,
+    /// defaulting to twice the fold size so slow clients keep computing
+    /// across folds (the source of nonzero staleness).
+    pub fn async_concurrency(&self) -> usize {
+        if self.async_zo.concurrency > 0 {
+            self.async_zo.concurrency
+        } else {
+            2 * self.buffer_k()
         }
     }
 
@@ -344,6 +437,26 @@ impl FedConfig {
                 crate::zo::MAX_SEEDS_PER_ROUND
             );
         }
+        // async-engine knobs: the decay/arrival parameters must be sane
+        // whenever set (they sit in config files even under sync), and
+        // the §A.4 mixed FO step-2 arm requires the synchronous barrier
+        // (its FedAvg fold needs every participant's full weights at one
+        // model version).
+        anyhow::ensure!(
+            self.async_zo.staleness_decay.is_finite() && self.async_zo.staleness_decay >= 0.0,
+            "staleness-decay must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.async_zo.arrival_rate.is_finite() && self.async_zo.arrival_rate >= 0.0,
+            "arrival-rate must be finite and >= 0"
+        );
+        if self.engine == EngineKind::Async {
+            anyhow::ensure!(
+                !self.mixed_step2,
+                "--engine async is incompatible with --mixed-step2 \
+                 (the mixed FO fold needs the synchronous barrier)"
+            );
+        }
         self.scenario.validate()?;
         Ok(())
     }
@@ -378,6 +491,15 @@ impl FedConfig {
         self.mixed_step2 = a.bool_or("mixed-step2", self.mixed_step2)?;
         self.threads = a.usize_or("threads", self.threads)?;
         self.ckpt_every = a.usize_or("ckpt-every", self.ckpt_every)?;
+        if let Some(e) = a.get("engine") {
+            self.engine = EngineKind::parse(e)
+                .ok_or_else(|| anyhow::anyhow!("bad --engine {e:?} (sync|async)"))?;
+        }
+        self.async_zo.buffer_k = a.usize_or("buffer-k", self.async_zo.buffer_k)?;
+        self.async_zo.staleness_decay =
+            a.f64_or("staleness-decay", self.async_zo.staleness_decay)?;
+        self.async_zo.concurrency = a.usize_or("concurrency", self.async_zo.concurrency)?;
+        self.async_zo.arrival_rate = a.f64_or("arrival-rate", self.async_zo.arrival_rate)?;
         if let Some(p) = a.get("population") {
             self.population = PopulationMode::parse(p).ok_or_else(|| {
                 anyhow::anyhow!("bad --population {p:?} (auto|materialized|lazy)")
@@ -663,6 +785,69 @@ mod tests {
         c.zo.s_max = 4096; // exactly 2^16: still representable
         c.zo.s_min = 1;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn engine_knobs_parse_and_validate() {
+        let mut c = FedConfig::default();
+        assert_eq!(c.engine, EngineKind::Sync); // default: seed-compatible
+        assert_eq!(c.async_zo.buffer_k, 0);
+        assert_eq!(c.async_zo.staleness_decay, 0.5);
+        // effective-knob resolution: buffer_k falls back to sample_zo,
+        // concurrency to 2 × buffer_k
+        assert_eq!(c.buffer_k(), c.sample_zo);
+        assert_eq!(c.async_concurrency(), 2 * c.sample_zo);
+        c.async_zo.buffer_k = 3;
+        c.async_zo.concurrency = 11;
+        assert_eq!((c.buffer_k(), c.async_concurrency()), (3, 11));
+
+        let argv: Vec<String> =
+            "--engine async --buffer-k 4 --staleness-decay 1.5 --concurrency 9 --arrival-rate 0.25"
+                .split_whitespace()
+                .map(String::from)
+                .collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.engine, EngineKind::Async);
+        assert_eq!(c.async_zo.buffer_k, 4);
+        assert_eq!(c.async_zo.staleness_decay, 1.5);
+        assert_eq!(c.async_zo.concurrency, 9);
+        assert_eq!(c.async_zo.arrival_rate, 0.25);
+
+        // also flows through JSON configs
+        let j = Json::parse(r#"{"engine": "async", "buffer-k": 2}"#).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.engine, EngineKind::Async);
+        assert_eq!(c.async_zo.buffer_k, 2);
+
+        // bad engine name rejected
+        let bad: Vec<String> = vec!["--engine".into(), "batch".into()];
+        let a = Args::parse(&bad).unwrap();
+        assert!(FedConfig::default().apply_args(&a).is_err());
+        // round-trip
+        for e in [EngineKind::Sync, EngineKind::Async] {
+            assert_eq!(EngineKind::parse(e.as_str()), Some(e));
+        }
+    }
+
+    #[test]
+    fn async_engine_validation() {
+        let mut c = FedConfig::default();
+        c.engine = EngineKind::Async;
+        assert!(c.validate().is_ok());
+        c.mixed_step2 = true;
+        assert!(c.validate().is_err(), "mixed FO step-2 needs the barrier");
+        c.engine = EngineKind::Sync;
+        assert!(c.validate().is_ok(), "mixed stays legal under sync");
+
+        let mut c = FedConfig::default();
+        c.async_zo.staleness_decay = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = FedConfig::default();
+        c.async_zo.arrival_rate = f64::NAN;
+        assert!(c.validate().is_err());
     }
 
     #[test]

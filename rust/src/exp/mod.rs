@@ -6,6 +6,8 @@
 
 pub mod ablations;
 pub mod adaptive;
+// `async` is a reserved word, so the module is `asynch` (exp id "async")
+pub mod asynch;
 pub mod ckpt;
 pub mod common;
 pub mod curves;
@@ -52,10 +54,12 @@ pub fn run(
         "fig7" => ablations::fig7(scale, scenario),
         // repo-native (not paper artifacts, so not in ALL_IDS): the
         // checkpoint-cadence ablation under a churn fleet, the adaptive-S
-        // / variance-guard ablation under a capability spread, and the
-        // population-scaling sweep over the lazy fleet layer
+        // / variance-guard ablation under a capability spread, the
+        // buffered-async staleness ablation, and the population-scaling
+        // sweep over the lazy fleet layer
         "ckpt" => ckpt::run(scale, scenario),
         "adaptive" => adaptive::run(scale, scenario),
+        "async" => asynch::run(scale, scenario),
         "fleet" => fleet::run(scale, scenario),
         "all" => {
             let mut out = String::new();
@@ -68,7 +72,7 @@ pub fn run(
         }
         _ => anyhow::bail!(
             "unknown experiment {id:?}; available: {:?}, \"ckpt\", \"adaptive\", \
-             \"fleet\", or \"all\"",
+             \"async\", \"fleet\", or \"all\"",
             ALL_IDS
         ),
     }

@@ -1,0 +1,489 @@
+//! The buffered-asynchronous round engine: a discrete-event simulation
+//! of FedBuff-style staleness-weighted aggregation over the same
+//! classify→plan→simulate→contribute client path as the sync barrier.
+//!
+//! ## Model
+//!
+//! The sync engine (`Federation::zo_round`) samples a cohort, waits for
+//! the barrier, and folds the survivors. This engine instead keeps up to
+//! `cfg.async_concurrency()` dispatches **in flight** on a simulated
+//! event clock: each dispatch samples one client, runs the exact
+//! [`crate::sim`] timeline the barrier would have run, and schedules a
+//! completion event at `now + arrival_jitter + sim_ms`. One *logical
+//! round* pops completion events in arrival order and folds the first
+//! `cfg.buffer_k()` survivors — stale contributions included, discounted
+//! by the polynomial staleness weight `(1 + s)^(-decay)`
+//! ([`crate::zo::staleness_multipliers`]) where `s` is the number of
+//! parameter-mutating folds since the contribution's dispatch
+//! (`model_version` now − then). Each surviving dispatch evaluates its
+//! seed block against an `Arc`-shared snapshot of the global weights *as
+//! of its dispatch* — the client genuinely computes on stale parameters,
+//! exactly like a real async fleet.
+//!
+//! ## Determinism
+//!
+//! The engine is bit-identical for every worker count, by the same three
+//! rules as the barrier (see `fed::server` module docs) plus one: event
+//! order is decided by `(t_arrive, dispatch seq)` under `f64::total_cmp`
+//! — never by thread scheduling. All per-dispatch randomness (client
+//! pick, capability timeline, arrival jitter, seed block) derives from
+//! the monotone dispatch sequence number, **not** the round counter, so
+//! a client redispatched within one logical round gets a fresh timeline
+//! (round-keyed streams would replay the same drop forever).
+//! [`sim::ASYNC_SIM_SALT`] / [`sim::ARRIVAL_SALT`] keep these streams
+//! disjoint from every sync-engine stream, and seeds are issued under
+//! the dispatch-seq "round" key — collision-free against sync issuance
+//! because an async run never executes a sync ZO round (warm rounds
+//! issue no seeds).
+//!
+//! ## Accounting
+//!
+//! All accounting attributes to the logical round that **pops** the
+//! event: uplink/downlink partial-transmission charges, catch-up bytes,
+//! issued-seed counts, and drop counts ride the popped
+//! [`ZoClientCharge`]s through the same [`zo_round_ledger_outcomes`]
+//! fold the barrier uses. Dispatches refused at classification time
+//! (absent / below the ZO footprint) count as drops in the dispatching
+//! round; dispatches still in flight when the run ends are never
+//! charged. The round's `makespan_ms` is the event-clock span its fold
+//! consumed — the systems metric staleness buys down.
+
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::data::loader::ClientData;
+use crate::fed::client::round_client_rng;
+use crate::fed::server::{run_zo_client, zo_train_signal, ClientClass, Federation, RoundSummary};
+use crate::model::backend::{LossSums, ModelBackend};
+use crate::model::params::{perturb_axpy_many_sharded, ParamVec};
+use crate::sim;
+use crate::zo::{
+    self, staleness_multipliers, zo_round_ledger_outcomes, zo_update_items_weighted,
+    ZoClientCharge, ZoContribution,
+};
+
+/// One folded completion event — the engine's deterministic trace unit.
+/// The async acceptance tests pin runs at different worker counts to
+/// byte-identical traces (`t_ms` compared via `to_bits`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsyncEvent {
+    /// event-clock arrival time (simulated ms since the run began)
+    pub t_ms: f64,
+    /// monotone dispatch sequence number (unique, ties broken by it)
+    pub seq: u64,
+    pub cid: usize,
+    /// server model version the dispatch computed against
+    pub version: usize,
+    /// false when the capability timeline cut the client mid-round
+    pub survived: bool,
+}
+
+/// A surviving dispatch's deferred local computation: everything
+/// [`run_zo_client`] needs, including the `Arc`-shared snapshot of the
+/// global weights the client downloaded at dispatch time.
+struct PendingJob {
+    data: ClientData,
+    seeds: Vec<u64>,
+    s_block: usize,
+    global: Arc<ParamVec>,
+}
+
+/// One in-flight dispatch awaiting its completion event.
+struct InFlight {
+    /// completion time on the event clock
+    t_arrive: f64,
+    /// dispatch sequence number (the RNG/seed key and the tie-breaker)
+    seq: u64,
+    cid: usize,
+    /// model version at dispatch — staleness at fold = now − this
+    version: usize,
+    /// logical round at dispatch — the sync-ledger round a completed
+    /// catch-up download brings the client to
+    dispatch_round: usize,
+    /// catch-up bytes fronting the download leg (`ckpt` subsystem)
+    catch_bytes: u64,
+    /// wire/probe charges, resolved at dispatch from the simulated
+    /// timeline, booked at pop
+    charge: ZoClientCharge,
+    /// `Some` only for survivors
+    job: Option<PendingJob>,
+}
+
+/// Min-heap adapter: `BinaryHeap` is a max-heap, so `Ord` is reversed —
+/// the pop order is ascending `(t_arrive, seq)` under `total_cmp`.
+struct HeapItem(InFlight);
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.seq == other.0.seq
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .0
+            .t_arrive
+            .total_cmp(&self.0.t_arrive)
+            .then_with(|| other.0.seq.cmp(&self.0.seq))
+    }
+}
+
+/// Persistent event-engine state, carried across logical rounds inside
+/// `Federation::async_state` (in-flight dispatches straddle round
+/// boundaries — that is the whole point of the buffered design).
+#[derive(Default)]
+pub(crate) struct AsyncState {
+    heap: BinaryHeap<HeapItem>,
+    /// event clock (simulated ms since the run began)
+    now: f64,
+    /// next dispatch sequence number
+    seq: u64,
+    /// every folded completion event, in pop order
+    trace: Vec<AsyncEvent>,
+    /// live `(model_version, weights)` snapshots shared by in-flight
+    /// survivors; GC'd once no in-flight dispatch can reference them
+    snapshots: Vec<(usize, Arc<ParamVec>)>,
+}
+
+impl AsyncState {
+    /// The shared snapshot of `global` at `version`, created on first
+    /// use. Dispatches at the same version share one allocation, so
+    /// memory is O(distinct live versions), not O(in-flight).
+    fn snapshot(&mut self, version: usize, global: &ParamVec) -> Arc<ParamVec> {
+        if let Some((_, arc)) = self.snapshots.iter().find(|(v, _)| *v == version) {
+            return arc.clone();
+        }
+        let arc = Arc::new(global.clone());
+        self.snapshots.push((version, arc.clone()));
+        arc
+    }
+
+    /// Drop snapshots no in-flight dispatch can still reference.
+    fn gc_snapshots(&mut self) {
+        match self.heap.iter().map(|h| h.0.version).min() {
+            Some(min_live) => self.snapshots.retain(|(v, _)| *v >= min_live),
+            None => self.snapshots.clear(),
+        }
+    }
+}
+
+/// A folded survivor awaiting the round's weighted aggregation.
+struct Buffered {
+    cid: usize,
+    /// model version its snapshot was taken at
+    version: usize,
+    /// whether its download leg covered the full catch-up payload
+    caught_up: bool,
+    job: PendingJob,
+}
+
+impl<'b, B: ModelBackend> Federation<'b, B> {
+    /// The folded completion-event trace of the async engine so far —
+    /// the deterministic inspection surface behind the async acceptance
+    /// tests. Empty for sync runs.
+    pub fn async_trace(&self) -> &[AsyncEvent] {
+        self.async_state.as_ref().map_or(&[], |s| &s.trace)
+    }
+
+    /// One buffered-async logical round: keep the dispatch pipeline
+    /// full, pop completion events in arrival order, fold the first
+    /// `cfg.buffer_k()` survivors with staleness-decayed weights. Public
+    /// because the throughput benches drive it directly.
+    pub fn async_zo_round(&mut self) -> anyhow::Result<RoundSummary> {
+        // take the state out of self so the borrow checker sees the
+        // engine core borrow `self` and the event state independently
+        let mut st = self.async_state.take().unwrap_or_default();
+        let r = self.async_round_inner(&mut st);
+        self.async_state = Some(st);
+        r
+    }
+
+    fn async_round_inner(&mut self, st: &mut AsyncState) -> anyhow::Result<RoundSummary> {
+        let k = self.cfg.buffer_k();
+        let cslots = self.cfg.async_concurrency();
+        let deadline = self.cfg.scenario.deadline_ms();
+        let d4 = (self.backend.dim() * 4) as u64;
+        let round_start = st.now;
+        // deterministic give-up bound: a fleet where every pick drops at
+        // classification (full-churn rounds) must still terminate — the
+        // round then folds whatever arrived, possibly nothing
+        let mut dispatches_left = k * 64 + cslots;
+
+        let mut dropped = 0usize;
+        let mut catch_up_down = 0u64;
+        let mut charges: Vec<ZoClientCharge> = Vec::new();
+        let mut buffer: Vec<Buffered> = Vec::with_capacity(k);
+        loop {
+            // keep the pipeline full
+            while st.heap.len() < cslots && dispatches_left > 0 {
+                dispatches_left -= 1;
+                if !self.dispatch_one(st, d4, deadline)? {
+                    dropped += 1;
+                }
+            }
+            let Some(HeapItem(ev)) = st.heap.pop() else {
+                break; // pipeline dry and no dispatch budget left
+            };
+            st.now = st.now.max(ev.t_arrive);
+            catch_up_down += ev.charge.seed_down_bytes.min(ev.catch_bytes);
+            let caught_up = ev.charge.seed_down_bytes >= ev.catch_bytes;
+            if caught_up {
+                // download legs are ordered catch-up first (see
+                // zo_round): the client now holds the global entering
+                // its dispatch round
+                self.mark_synced(ev.cid, ev.dispatch_round);
+            }
+            st.trace.push(AsyncEvent {
+                t_ms: ev.t_arrive,
+                seq: ev.seq,
+                cid: ev.cid,
+                version: ev.version,
+                survived: ev.charge.survives,
+            });
+            let survived = ev.charge.survives;
+            charges.push(ev.charge);
+            if survived {
+                buffer.push(Buffered {
+                    cid: ev.cid,
+                    version: ev.version,
+                    caught_up,
+                    job: ev.job.expect("survivor carries its deferred job"),
+                });
+                if buffer.len() >= k {
+                    break; // buffer full: fold
+                }
+            } else {
+                dropped += 1;
+            }
+        }
+
+        // staleness per buffered survivor, measured before this fold
+        // can bump the version counter
+        let staleness: Vec<usize> = buffer
+            .iter()
+            .map(|b| self.model_version - b.version)
+            .collect();
+        let survivor_info: Vec<(usize, bool)> =
+            buffer.iter().map(|b| (b.cid, b.caught_up)).collect();
+
+        // the exact client path the barrier runs, against each job's own
+        // dispatch-time snapshot (determinism rules 1–3 hold: inputs are
+        // pre-derived, jobs are pure, the fold is in pop order)
+        let workers = self.workers();
+        let results = {
+            let backend = self.backend;
+            let cfg = &self.cfg;
+            let jobs: Vec<(usize, PendingJob)> =
+                buffer.into_iter().map(|b| (b.cid, b.job)).collect();
+            crate::util::pool::parallel_map_n(workers, jobs, move |(cid, job)| {
+                run_zo_client(
+                    backend, &job.global, cfg, cid, &job.data, job.seeds, job.s_block,
+                )
+            })
+        };
+        let mut contributions: Vec<ZoContribution> = Vec::with_capacity(k);
+        for r in results {
+            contributions.push(r?);
+        }
+
+        // ZOUPDATE with staleness-decayed weights: the polynomial
+        // multiplier discounts each contribution by the folds it missed,
+        // renormalized inside the fold so total step mass is conserved
+        let eff_var = zo::effective_variance(&contributions, &self.cfg.zo);
+        let mults = staleness_multipliers(&staleness, self.cfg.async_zo.staleness_decay);
+        let items = zo_update_items_weighted(
+            &contributions,
+            Some(&mults),
+            &self.cfg.zo,
+            self.cfg.lr_client_zo,
+            self.cfg.lr_server_zo,
+        );
+        perturb_axpy_many_sharded(
+            &mut self.global.0,
+            &items,
+            self.cfg.zo.tau,
+            self.cfg.zo.dist,
+            workers,
+        );
+        if !items.is_empty() {
+            self.model_version += 1;
+        }
+        // fresh (staleness-0), caught-up survivors received every
+        // broadcast between their dispatch and this fold — all identity
+        // rounds by definition of staleness 0 — plus this round's item
+        // list, so they can reconstruct the global entering round+1.
+        // Stale survivors cannot: they missed intermediate item lists.
+        for (i, (cid, caught_up)) in survivor_info.iter().enumerate() {
+            if staleness[i] == 0 && *caught_up {
+                self.mark_synced(*cid, self.round + 1);
+            }
+        }
+        // every async fold is seed-replayable (validate() rejects the
+        // opaque mixed-FO fold under this engine), so the compacted seed
+        // log can always cross it — empty rounds included
+        self.ckpt.record_seed_round(self.round, items, &self.global);
+
+        // book the popped charges through the barrier's ledger fold
+        let seeds_issued: usize = charges.iter().map(|c| c.issued_seeds).sum();
+        let (up, down) = zo_round_ledger_outcomes(&charges, 0, 0);
+        self.ledger.record_round(up, down);
+        self.ledger.record_catch_up(catch_up_down);
+        self.ledger.record_seeds(seeds_issued as u64);
+        st.gc_snapshots();
+
+        let mean_staleness = if staleness.is_empty() {
+            0.0
+        } else {
+            staleness.iter().sum::<usize>() as f64 / staleness.len() as f64
+        };
+        Ok(RoundSummary {
+            train_signal: zo_train_signal(&contributions, &LossSums::default()),
+            dropped,
+            catch_up_down,
+            seeds_issued,
+            eff_var,
+            staleness: mean_staleness,
+            makespan_ms: st.now - round_start,
+        })
+    }
+
+    /// Sample one client and put its dispatch in flight. Returns `false`
+    /// when classification refuses it (absent / below the ZO footprint)
+    /// — a drop charged to the dispatching round. All randomness is
+    /// keyed by the dispatch sequence number, so redispatching a client
+    /// that just dropped rolls a *fresh* timeline.
+    fn dispatch_one(
+        &mut self,
+        st: &mut AsyncState,
+        d4: u64,
+        deadline: f64,
+    ) -> anyhow::Result<bool> {
+        let seq = st.seq;
+        anyhow::ensure!(
+            (seq as usize) < zo::MAX_ROUNDS,
+            "async dispatch counter exhausted the seed issuer's round domain"
+        );
+        st.seq += 1;
+        let cid = self.rng.choose(self.cfg.clients, 1)[0];
+        let profile = self.pop.profile(cid);
+        match self.classify(cid, &profile, self.round) {
+            ClientClass::Dropped => return Ok(false),
+            // unreachable: validate() rejects engine=async + mixed_step2
+            // (the FO fold needs the barrier); refuse defensively
+            ClientClass::Fo { .. } => return Ok(false),
+            ClientClass::Zo => {}
+        }
+        let cand = self.zo_candidate(cid, profile, d4);
+        // adaptive probe budget: with a deadline the planner fits each
+        // dispatch to it exactly as the barrier does; without one there
+        // is no cohort to equalize against (no barrier, no straggler
+        // envelope), so the uniform S applies
+        let z = self.cfg.zo;
+        let s_block = if z.adaptive_s && deadline > 0.0 {
+            sim::max_affordable_s(&cand.profile, self.cost.params, deadline, z.s_min, z.s_max, |s| {
+                self.zo_candidate_plan(&cand, s)
+            })
+        } else {
+            z.s_seeds
+        };
+        let n_seeds = s_block * cand.steps;
+        let plan = self.zo_candidate_plan(&cand, s_block);
+        let mut trace = round_client_rng(self.cfg.seed, sim::ASYNC_SIM_SALT, seq as usize, cid);
+        let o = sim::simulate_round(&cand.profile, &plan, self.cost.params, deadline, &mut trace);
+        let delay =
+            sim::arrival_delay_ms(self.cfg.seed, seq as usize, cid, self.cfg.async_zo.arrival_rate);
+        let job = o.survives.then(|| PendingJob {
+            data: self.pop.data(cid),
+            seeds: self.issuer.seeds_for(seq as usize, cid, n_seeds),
+            s_block,
+            global: st.snapshot(self.model_version, &self.global),
+        });
+        st.heap.push(HeapItem(InFlight {
+            t_arrive: st.now + delay + o.sim_ms,
+            seq,
+            cid,
+            version: self.model_version,
+            dispatch_round: self.round,
+            catch_bytes: cand.catch_bytes,
+            charge: ZoClientCharge {
+                issued_seeds: n_seeds,
+                up_bytes: o.up_bytes,
+                seed_down_bytes: o.down_bytes,
+                survives: o.survives,
+            },
+            job,
+        }));
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(t: f64, seq: u64) -> HeapItem {
+        HeapItem(InFlight {
+            t_arrive: t,
+            seq,
+            cid: 0,
+            version: 0,
+            dispatch_round: 0,
+            catch_bytes: 0,
+            charge: ZoClientCharge {
+                issued_seeds: 0,
+                up_bytes: 0,
+                seed_down_bytes: 0,
+                survives: false,
+            },
+            job: None,
+        })
+    }
+
+    #[test]
+    fn heap_pops_by_arrival_time_then_sequence() {
+        let mut h = BinaryHeap::new();
+        for (t, s) in [(5.0, 0), (1.0, 3), (1.0, 1), (3.0, 2)] {
+            h.push(item(t, s));
+        }
+        let order: Vec<(u64, u64)> = std::iter::from_fn(|| h.pop())
+            .map(|HeapItem(e)| (e.t_arrive.to_bits(), e.seq))
+            .collect();
+        let expect: Vec<(u64, u64)> = vec![
+            (1.0f64.to_bits(), 1),
+            (1.0f64.to_bits(), 3),
+            (3.0f64.to_bits(), 2),
+            (5.0f64.to_bits(), 0),
+        ];
+        assert_eq!(order, expect, "min-heap order must be (t_arrive, seq)");
+    }
+
+    #[test]
+    fn snapshots_are_shared_per_version_and_gc_clears() {
+        let mut st = AsyncState::default();
+        let g = ParamVec::zeros(8);
+        let a = st.snapshot(3, &g);
+        let b = st.snapshot(3, &g);
+        assert!(Arc::ptr_eq(&a, &b), "same version must share one snapshot");
+        let c = st.snapshot(4, &g);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(st.snapshots.len(), 2);
+        // empty heap: nothing in flight can reference any snapshot
+        st.gc_snapshots();
+        assert!(st.snapshots.is_empty());
+        // a live in-flight dispatch at version 4 keeps >= 4 alive only
+        st.snapshot(3, &g);
+        st.snapshot(4, &g);
+        let mut inf = item(1.0, 0);
+        inf.0.version = 4;
+        st.heap.push(inf);
+        st.gc_snapshots();
+        assert_eq!(st.snapshots.len(), 1);
+        assert_eq!(st.snapshots[0].0, 4);
+    }
+}

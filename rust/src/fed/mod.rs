@@ -3,9 +3,11 @@
 
 pub mod aggregate;
 pub mod client;
+pub mod engine;
 pub mod population;
 pub mod server;
 
 pub use client::{clients_from_profiles, ClientState, Resource};
+pub use engine::AsyncEvent;
 pub use population::{Population, SparseSync};
 pub use server::{assign_resources, shards_from_partition, Federation, RoundSummary};

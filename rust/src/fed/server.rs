@@ -33,7 +33,7 @@ use std::time::Instant;
 
 use crate::ckpt::CheckpointStore;
 use crate::comm::{CommLedger, CostModel};
-use crate::config::FedConfig;
+use crate::config::{EngineKind, FedConfig};
 use crate::data::loader::{eval_chunks, ClientData, Source};
 use crate::fed::aggregate::{weighted_average, ServerOptState};
 use crate::fed::client::{
@@ -85,9 +85,17 @@ pub struct Federation<'b, B: ModelBackend> {
     /// (`sparse_synced_reproduces_dense_ledger_on_churn`)
     #[cfg(test)]
     pub synced_dense_mirror: Option<Vec<usize>>,
-    server_opt: ServerOptState,
-    issuer: SeedIssuer,
-    rng: Xoshiro256,
+    /// server model-version counter: increments once per
+    /// parameter-mutating fold (warm aggregate, non-empty ZO fold,
+    /// buffered-async fold). The async engine stamps every dispatch with
+    /// the version it computed against, and `now − v` is its staleness.
+    pub model_version: usize,
+    pub(crate) server_opt: ServerOptState,
+    pub(crate) issuer: SeedIssuer,
+    pub(crate) rng: Xoshiro256,
+    /// discrete-event state of the buffered-async engine (`fed::engine`);
+    /// lazily created on the first async round, `None` under sync
+    pub(crate) async_state: Option<Box<crate::fed::engine::AsyncState>>,
 }
 
 /// One round's outcome as seen by the logger.
@@ -110,6 +118,14 @@ pub struct RoundSummary {
     /// ([`crate::zo::effective_variance`]); always finite, 0.0 in warm
     /// or empty rounds
     pub eff_var: f64,
+    /// mean model-version staleness of the contributions the fold
+    /// accepted (buffered-async engine; 0.0 under the sync barrier)
+    pub staleness: f64,
+    /// simulated wall-clock makespan of the round in scenario ms: under
+    /// the barrier, the slowest simulated participant (dropout cuts
+    /// included); under the async engine, the event-clock span the fold
+    /// consumed
+    pub makespan_ms: f64,
 }
 
 /// One sampled ZO participant's resolved pre-round inputs — the unit the
@@ -117,18 +133,32 @@ pub struct RoundSummary {
 /// [`Federation::zo_probe_budgets`]). Carries the resolved profile and
 /// sample count so the round engine touches the population layer exactly
 /// once per sampled client — the O(sampled) discipline.
-struct ZoCandidate {
-    cid: usize,
+pub(crate) struct ZoCandidate {
+    pub(crate) cid: usize,
     /// the client's capability profile (lazy mode derives it on demand)
-    profile: CapabilityProfile,
+    pub(crate) profile: CapabilityProfile,
     /// local sample count n_j
-    n: usize,
+    pub(crate) n: usize,
     /// local `grad_steps` blocks this client actually runs
-    steps: usize,
+    pub(crate) steps: usize,
     /// catch-up downlink fronting its download leg (`ckpt` subsystem)
-    catch_bytes: u64,
+    pub(crate) catch_bytes: u64,
     /// fused items it replays locally during catch-up
-    replay_items: usize,
+    pub(crate) replay_items: usize,
+}
+
+/// Classification verdict for one sampled client entering a round — the
+/// shared head of the classify→plan→simulate→contribute client path,
+/// used identically by the sync barrier (`zo_round`, `planned_seed_counts`)
+/// and the async event engine (`fed::engine`).
+pub(crate) enum ClientClass {
+    /// absent / not yet joined (churn trace), or below even the eq. 5 ZO
+    /// memory footprint — transmits nothing
+    Dropped,
+    /// runs a local FO update this round (`mixed_step2` high-res arm)
+    Fo { n: usize },
+    /// seed-protocol participant
+    Zo,
 }
 
 /// Clamp a training signal to the finite domain the CSV log expects
@@ -251,16 +281,18 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             cost,
             ckpt,
             synced: SparseSync::default(),
+            model_version: 0,
             server_opt,
             issuer,
             rng,
+            async_state: None,
         })
     }
 
     /// Fold `synced[cid] = max(synced[cid], round)` — the single place
     /// the sync ledger advances, so the `cfg(test)` dense mirror stays a
     /// faithful replica of the sparse fold.
-    fn mark_synced(&mut self, cid: usize, round: usize) {
+    pub(crate) fn mark_synced(&mut self, cid: usize, round: usize) {
         self.synced.advance(cid, round);
         #[cfg(test)]
         if let Some(mirror) = &mut self.synced_dense_mirror {
@@ -287,6 +319,46 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     /// Effective worker count for this run (see module docs).
     pub fn workers(&self) -> usize {
         resolve_workers(self.cfg.threads)
+    }
+
+    /// Classify one sampled client for round `round`: the exact
+    /// availability → FO-role → ZO-capability decision chain both round
+    /// engines share. Consumes no RNG ([`sim::is_available`] derives its
+    /// own keyed stream), so classification order is invisible to every
+    /// trace stream.
+    pub(crate) fn classify(
+        &self,
+        cid: usize,
+        profile: &CapabilityProfile,
+        round: usize,
+    ) -> ClientClass {
+        // churn trace: late joiners and whole-round absences transmit
+        // nothing and stay stale
+        if !sim::is_available(profile, self.cfg.seed, round, cid) {
+            return ClientClass::Dropped;
+        }
+        if self.cfg.mixed_step2 && profile.fo_capable(&self.cost) {
+            return ClientClass::Fo {
+                n: self.pop.n_samples(cid),
+            };
+        }
+        if profile.zo_capable(&self.cost) {
+            ClientClass::Zo
+        } else {
+            // below even the eq. 5 ZO footprint: cannot participate
+            ClientClass::Dropped
+        }
+    }
+
+    /// An FO participant's planned round timeline: full weights down,
+    /// `local_epochs` backprop passes, full weights up — shared by the
+    /// warm engine and the mixed-step-2 arm.
+    fn fo_plan(&self, n: usize, d4: u64) -> sim::RoundPlan {
+        sim::RoundPlan {
+            down_bytes: d4,
+            passes: sim::fo_passes(n, self.cfg.local_epochs),
+            up_bytes: d4,
+        }
     }
 
     /// One warm round (Algorithm 1 lines 2-8). Sampled clients train in
@@ -318,6 +390,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let mut jobs: Vec<(usize, usize, ClientData, Xoshiro256)> = Vec::with_capacity(p);
         let (mut up, mut down) = (0u64, 0u64);
         let mut dropped = 0usize;
+        let mut makespan_ms = 0.0f64;
         for &cid in &picked {
             let profile = self.pop.profile(cid);
             let n = self.pop.n_samples(cid);
@@ -327,15 +400,14 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 dropped += 1;
                 continue;
             }
-            let plan = sim::RoundPlan {
-                down_bytes: d4,
-                passes: sim::fo_passes(n, self.cfg.local_epochs),
-                up_bytes: d4,
-            };
+            let plan = self.fo_plan(n, d4);
             let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
             let o = sim::simulate_round(&profile, &plan, self.cost.params, deadline, &mut trace);
             up += o.up_bytes;
             down += o.down_bytes;
+            // barrier semantics: the round lasts until its slowest
+            // simulated participant finishes (or is cut)
+            makespan_ms = makespan_ms.max(o.sim_ms);
             if o.down_bytes == plan.down_bytes {
                 // a completed full-weight download IS a sync: the client
                 // now holds the global entering this round
@@ -379,6 +451,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 catch_up_down: 0,
                 seeds_issued: 0,
                 eff_var: 0.0,
+                staleness: 0.0,
+                makespan_ms,
             });
         }
         let avg = weighted_average(&updates);
@@ -386,6 +460,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         delta.axpy(-1.0, &self.global);
         self.server_opt
             .apply(&mut self.global, &delta, self.cfg.lr_server_warm);
+        self.model_version += 1;
         // a FedAvg step cannot be replayed from seeds: snapshot after it
         self.ckpt.record_opaque(self.round, &self.global);
         Ok(RoundSummary {
@@ -394,6 +469,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             catch_up_down: 0,
             seeds_issued: 0,
             eff_var: 0.0,
+            staleness: 0.0,
+            makespan_ms,
         })
     }
 
@@ -401,7 +478,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     /// probe-budget planning pass: its profile and sample count (one
     /// population-layer touch), its local step count, and the catch-up
     /// charge fronting its download leg (`ckpt` subsystem).
-    fn zo_candidate(&self, cid: usize, profile: CapabilityProfile, d4: u64) -> ZoCandidate {
+    pub(crate) fn zo_candidate(&self, cid: usize, profile: CapabilityProfile, d4: u64) -> ZoCandidate {
         let catch_plan = self.ckpt.catch_up_plan(self.synced.get(cid), self.round, d4);
         let n = self.pop.n_samples(cid);
         ZoCandidate {
@@ -419,7 +496,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     /// catch-up replay, ΔL scalars up — the exact plan
     /// [`sim::simulate_round`] runs, which is what makes the planner's
     /// inversion honest.
-    fn zo_candidate_plan(&self, c: &ZoCandidate, s: usize) -> sim::RoundPlan {
+    pub(crate) fn zo_candidate_plan(&self, c: &ZoCandidate, s: usize) -> sim::RoundPlan {
         sim::RoundPlan {
             down_bytes: c.catch_bytes + (s * c.steps * 8) as u64,
             passes: sim::zo_passes(c.n, s) + sim::replay_passes(c.replay_items),
@@ -492,10 +569,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             .iter()
             .filter_map(|&cid| {
                 let profile = self.pop.profile(cid);
-                let eligible = sim::is_available(&profile, self.cfg.seed, self.round, cid)
-                    && !(self.cfg.mixed_step2 && profile.fo_capable(&self.cost))
-                    && profile.zo_capable(&self.cost);
-                eligible.then(|| self.zo_candidate(cid, profile, d4))
+                matches!(self.classify(cid, &profile, self.round), ClientClass::Zo)
+                    .then(|| self.zo_candidate(cid, profile, d4))
             })
             .collect();
         let budgets = self.zo_probe_budgets(&cands);
@@ -577,26 +652,20 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let mut cands: Vec<ZoCandidate> = Vec::with_capacity(q);
         for &cid in &picked {
             let profile = self.pop.profile(cid);
-            // churn trace: late joiners and whole-round absences transmit
-            // nothing and stay stale
-            if !sim::is_available(&profile, self.cfg.seed, self.round, cid) {
-                pendings.push(Pending::Dropped);
-            } else if self.cfg.mixed_step2 && profile.fo_capable(&self.cost) {
-                let n = self.pop.n_samples(cid);
-                pendings.push(Pending::Fo(cid, profile, n));
-            } else if profile.zo_capable(&self.cost) {
-                // a stale client must first reconstruct the current
-                // global: the server charges the cheaper of snapshot vs
-                // tail replay (ckpt subsystem; nothing when synced or
-                // when checkpointing is disabled). Both the catch-up
-                // download and the local replay passes lead the
-                // timeline, so a tight deadline can cut either short —
-                // and both shrink the adaptive probe budget.
-                cands.push(self.zo_candidate(cid, profile, d4));
-                pendings.push(Pending::Zo(cands.len() - 1));
-            } else {
-                // below even the eq. 5 ZO footprint: cannot participate
-                pendings.push(Pending::Dropped);
+            match self.classify(cid, &profile, self.round) {
+                ClientClass::Dropped => pendings.push(Pending::Dropped),
+                ClientClass::Fo { n } => pendings.push(Pending::Fo(cid, profile, n)),
+                ClientClass::Zo => {
+                    // a stale client must first reconstruct the current
+                    // global: the server charges the cheaper of snapshot vs
+                    // tail replay (ckpt subsystem; nothing when synced or
+                    // when checkpointing is disabled). Both the catch-up
+                    // download and the local replay passes lead the
+                    // timeline, so a tight deadline can cut either short —
+                    // and both shrink the adaptive probe budget.
+                    cands.push(self.zo_candidate(cid, profile, d4));
+                    pendings.push(Pending::Zo(cands.len() - 1));
+                }
             }
         }
         // planning — per-candidate probe budgets (uniform s_seeds with
@@ -613,6 +682,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let mut dropped = 0usize;
         let mut catch_up_down = 0u64;
         let mut seeds_issued = 0usize;
+        let mut makespan_ms = 0.0f64;
         // ZO survivors whose sync ledger may advance to round+1 — only
         // once the round is known to be seed-replayable (no mixed-FO
         // fold), decided after the join
@@ -624,15 +694,12 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                     let (cid, n) = (*cid, *n);
                     let mut trace =
                         round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
-                    let plan = sim::RoundPlan {
-                        down_bytes: d4,
-                        passes: sim::fo_passes(n, self.cfg.local_epochs),
-                        up_bytes: d4,
-                    };
+                    let plan = self.fo_plan(n, d4);
                     let o =
                         sim::simulate_round(profile, &plan, self.cost.params, deadline, &mut trace);
                     fo_up += o.up_bytes;
                     fo_down += o.down_bytes;
+                    makespan_ms = makespan_ms.max(o.sim_ms);
                     if o.down_bytes == plan.down_bytes {
                         // full-weight download = sync to the current round
                         self.mark_synced(cid, self.round);
@@ -665,6 +732,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                     );
                     catch_up_down += o.down_bytes.min(c.catch_bytes);
                     seeds_issued += n_seeds;
+                    makespan_ms = makespan_ms.max(o.sim_ms);
                     zo_charges.push(ZoClientCharge {
                         issued_seeds: n_seeds,
                         up_bytes: o.up_bytes,
@@ -714,33 +782,9 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                         let (w, sums) = warm_local_train(backend, global, &data, cfg, &mut rng)?;
                         Ok(Out::Fo { n, w, sums })
                     }
-                    Job::Zo { cid, data, seeds, s_block } => {
-                        let groups = zo_step_chunks(
-                            &data,
-                            backend.batch_size(),
-                            cfg.zo.grad_steps,
-                        );
-                        debug_assert_eq!(groups.len() * s_block, seeds.len());
-                        // the client evaluates its own heterogeneous probe
-                        // budget: same ZO hyperparameters, its planned S_j
-                        let mut zcfg = cfg.zo;
-                        zcfg.s_seeds = s_block;
-                        let deltas = zoopt(
-                            backend,
-                            global,
-                            &groups,
-                            &seeds,
-                            &zcfg,
-                            cfg.lr_client_zo,
-                        )?;
-                        Ok(Out::Zo(ZoContribution {
-                            client: cid,
-                            seeds,
-                            delta_l: deltas,
-                            n_samples: data.n(),
-                            s_block,
-                        }))
-                    }
+                    Job::Zo { cid, data, seeds, s_block } => Ok(Out::Zo(run_zo_client(
+                        backend, global, cfg, cid, &data, seeds, s_block,
+                    )?)),
                 }
             })
         };
@@ -784,6 +828,12 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             workers,
         );
 
+        if !items.is_empty() || !fo_updates.is_empty() {
+            // the global moved: bump the server's model-version counter
+            // (identity rounds — all-drop, all-zero-weight — hold it flat)
+            self.model_version += 1;
+        }
+
         // mixed step-2: fold FO updates in afterwards (weighted FedAvg step)
         if !fo_updates.is_empty() {
             let avg = weighted_average(&fo_updates);
@@ -826,14 +876,21 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             catch_up_down,
             seeds_issued,
             eff_var,
+            staleness: 0.0,
+            makespan_ms,
         })
     }
 
     /// Run one round (phase chosen by the pivot), with eval + logging.
+    /// The warm phase always runs the synchronous barrier (its FedAvg
+    /// fold needs every participant's full weights at one version); the
+    /// ZO phase routes through the engine `--engine` selects.
     pub fn step(&mut self) -> anyhow::Result<()> {
         let t0 = Instant::now();
         let (phase, summary) = if self.round < self.cfg.pivot {
             (Phase::Warm, self.warm_round()?)
+        } else if self.cfg.engine == EngineKind::Async {
+            (Phase::Zo, self.async_zo_round()?)
         } else {
             (Phase::Zo, self.zo_round()?)
         };
@@ -860,6 +917,9 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             seeds_issued: summary.seeds_issued,
             eff_var: summary.eff_var,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            staleness: summary.staleness,
+            model_version: self.model_version,
+            makespan_ms: summary.makespan_ms,
         });
         self.round += 1;
         Ok(())
@@ -896,6 +956,36 @@ pub fn zo_train_signal(contributions: &[ZoContribution], fo_train: &LossSums) ->
     } else {
         0.0
     }
+}
+
+/// One ZO participant's local computation: evaluate the issued seed
+/// block against a global snapshot and return the ΔL contribution. A
+/// pure function of its inputs (no shared mutable state), shared verbatim
+/// by the sync fan-out (`zo_round`) and the async event engine
+/// (`fed::engine`) — both engines execute the byte-identical client path.
+pub(crate) fn run_zo_client<B: ModelBackend>(
+    backend: &B,
+    global: &ParamVec,
+    cfg: &FedConfig,
+    cid: usize,
+    data: &ClientData,
+    seeds: Vec<u64>,
+    s_block: usize,
+) -> anyhow::Result<ZoContribution> {
+    let groups = zo_step_chunks(data, backend.batch_size(), cfg.zo.grad_steps);
+    debug_assert_eq!(groups.len() * s_block, seeds.len());
+    // the client evaluates its own heterogeneous probe budget: same ZO
+    // hyperparameters, its planned S_j
+    let mut zcfg = cfg.zo;
+    zcfg.s_seeds = s_block;
+    let deltas = zoopt(backend, global, &groups, &seeds, &zcfg, cfg.lr_client_zo)?;
+    Ok(ZoContribution {
+        client: cid,
+        seeds,
+        delta_l: deltas,
+        n_samples: data.n(),
+        s_block,
+    })
 }
 
 /// Build per-client shards from a Dirichlet partition over a source.

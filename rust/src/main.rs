@@ -68,8 +68,22 @@ SUBCOMMANDS
                                         inverse-variance reweighting or
                                         |dL|-quantile clipping folded into
                                         the fused update; default off)
+            --engine sync|async        (ZO round engine. sync (default) =
+                                        the paper's barrier, bit-identical
+                                        to before; async = buffered
+                                        event-driven aggregation with
+                                        staleness-decayed weights,
+                                        deterministic at every --threads)
+            --buffer-k N               (async: fold after N arrivals;
+                                        0 = --sample-zo, the default)
+            --staleness-decay D        (async: stale contributions weigh
+                                        (1+s)^-D; default 0.5)
+            --concurrency N            (async: max dispatches in flight;
+                                        0 = 2*buffer-k, the default)
+            --arrival-rate R           (async: Poisson arrival jitter in
+                                        events/ms; 0 = off, the default)
   exp     regenerate a paper table/figure
-            zowarmup exp <table1..table7|fig3..fig7|ckpt|adaptive|fleet|all> [--scale smoke|default|paper]
+            zowarmup exp <table1..table7|fig3..fig7|ckpt|adaptive|async|fleet|all> [--scale smoke|default|paper]
             [--threads N]              (worker threads for every run in
                                         the sweep; 0 = auto)
             [--scenario NAME|FILE]     (capability fleet for every run in

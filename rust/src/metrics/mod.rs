@@ -44,6 +44,20 @@ pub struct RoundRecord {
     /// (`zo::effective_variance`; always finite, 0.0 when undefined)
     pub eff_var: f64,
     pub wall_ms: f64,
+    // New columns are appended AFTER wall_ms: the CI thread-bit-identity
+    // steps diff `cut -d, -f1-11` (everything before wall_ms), so the
+    // prefix layout is load-bearing.
+    /// mean model-version staleness of the contributions this round's
+    /// fold accepted (`fed::engine`; 0.0 under the sync barrier, where
+    /// every contribution is fresh by construction)
+    pub staleness: f64,
+    /// server model-version counter after the round (increments only on
+    /// parameter-mutating folds, so all-drop rounds hold it flat)
+    pub model_version: usize,
+    /// simulated wall-clock makespan of the round in scenario ms: the
+    /// slowest simulated participant under the sync barrier, the span of
+    /// event-clock time the async engine's fold consumed
+    pub makespan_ms: f64,
 }
 
 /// Full run history.
@@ -103,6 +117,24 @@ impl RunLog {
         crate::util::stats::mean(&vals)
     }
 
+    /// Mean fold staleness over the ZO rounds (async-engine view; 0.0
+    /// for sync runs, whose folds are fresh by construction).
+    pub fn mean_staleness(&self) -> f64 {
+        let vals: Vec<f64> = self
+            .rounds
+            .iter()
+            .filter(|r| r.phase == Phase::Zo)
+            .map(|r| r.staleness)
+            .collect();
+        crate::util::stats::mean(&vals)
+    }
+
+    /// Total simulated wall-clock makespan of the run in scenario ms —
+    /// the systems metric the async engine trades staleness against.
+    pub fn total_makespan_ms(&self) -> f64 {
+        self.rounds.iter().map(|r| r.makespan_ms).sum()
+    }
+
     pub fn total_bytes(&self) -> (u64, u64) {
         (
             self.rounds.iter().map(|r| r.bytes_up).sum(),
@@ -125,7 +157,7 @@ impl RunLog {
             &[
                 "round", "phase", "train_loss", "test_acc", "test_loss", "bytes_up",
                 "bytes_down", "dropped", "catch_up_down", "seeds_issued", "eff_var",
-                "wall_ms",
+                "wall_ms", "staleness", "model_version", "makespan_ms",
             ],
         )?;
         for r in &self.rounds {
@@ -142,6 +174,9 @@ impl RunLog {
                 r.seeds_issued.to_string(),
                 format!("{:.6e}", r.eff_var),
                 format!("{:.3}", r.wall_ms),
+                format!("{:.3}", r.staleness),
+                r.model_version.to_string(),
+                format!("{:.3}", r.makespan_ms),
             ])?;
         }
         w.flush()
@@ -205,6 +240,9 @@ mod tests {
             seeds_issued: 0,
             eff_var: 0.0,
             wall_ms: 1.0,
+            staleness: 0.0,
+            model_version: 0,
+            makespan_ms: 2.5,
         }
     }
 
@@ -234,9 +272,39 @@ mod tests {
         log.write_csv(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("round,phase,"));
-        assert!(text.contains(",seeds_issued,eff_var,wall_ms"));
+        assert!(text.contains(",seeds_issued,eff_var,wall_ms,staleness,model_version,makespan_ms"));
         assert!(text.contains("0,warm,1.000000,0.250000"));
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_header_and_rows_agree_on_field_count() {
+        // satellite: the header list and the per-row field pushes are
+        // hand-synced in write_csv (widened three times across PRs 3–6);
+        // parse the emitted file so a drifting column count fails loudly
+        let mut log = RunLog::default();
+        log.push(rec(0, 0.25));
+        log.push(rec(1, f64::NAN));
+        let path = std::env::temp_dir().join("zow_metrics_arity_test.csv");
+        log.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let header_cols = lines.next().unwrap().split(',').count();
+        let mut rows = 0;
+        for line in lines {
+            assert_eq!(
+                line.split(',').count(),
+                header_cols,
+                "row field count drifted from the {header_cols}-column header: {line}"
+            );
+            rows += 1;
+        }
+        assert_eq!(rows, 2);
+        // the layout contract the CI diff steps rely on: wall_ms is f12,
+        // the async columns sit strictly after it
+        let header: Vec<&str> = text.lines().next().unwrap().split(',').collect();
+        assert_eq!(header[11], "wall_ms");
+        assert_eq!(&header[12..], ["staleness", "model_version", "makespan_ms"]);
     }
 
     #[test]

@@ -63,6 +63,18 @@ pub const SIM_SALT: u64 = 0x51D_7E57;
 /// scenarios.
 pub const CHURN_SALT: u64 = 0xC4_0E11;
 
+/// Salt for the async engine's per-dispatch timeline trace
+/// (`fed::engine`). Keyed by the monotone *dispatch sequence* rather than
+/// the round number, so a client redispatched after a drop draws a fresh
+/// timeline instead of replaying the identical failure — and so the
+/// sync engine's [`SIM_SALT`] streams are untouched by the async path.
+pub const ASYNC_SIM_SALT: u64 = 0xA51_C51D;
+
+/// Salt for the async engine's Poisson arrival draws
+/// ([`arrival_delay_ms`]) — its own stream so turning arrival jitter on
+/// or off never perturbs the dispatch timeline draws.
+pub const ARRIVAL_SALT: u64 = 0xA88_14A1;
+
 /// ms per sample-pass per million parameters at `compute = 1.0`.
 pub const MS_PER_MPARAM_PASS: f64 = 0.1;
 
@@ -831,6 +843,28 @@ pub fn max_affordable_s(
     lo
 }
 
+/// Poisson arrival model of the async engine: the simulated delay (ms)
+/// between a dispatch being issued and the client actually starting its
+/// download→compute→upload timeline — an Exp(`rate_per_ms`) draw via
+/// inverse CDF from a dedicated per-(dispatch, client) stream
+/// ([`ARRIVAL_SALT`]). `rate_per_ms <= 0` models staggered-immediate
+/// arrivals (delay 0) and consumes no randomness, so the default
+/// `--arrival-rate 0` leaves every other stream untouched.
+pub fn arrival_delay_ms(
+    master_seed: u64,
+    dispatch_seq: usize,
+    cid: usize,
+    rate_per_ms: f64,
+) -> f64 {
+    if rate_per_ms <= 0.0 {
+        return 0.0;
+    }
+    let mut rng =
+        crate::fed::client::round_client_rng(master_seed, ARRIVAL_SALT, dispatch_seq, cid);
+    let u = rng.next_f64(); // in [0, 1) — so 1-u is in (0, 1] and ln is finite
+    -(1.0 - u).ln() / rate_per_ms
+}
+
 /// Simulate one client's round against its profile, the scenario deadline
 /// (`0.0` = none) and its availability trace. `trace` must be the
 /// per-(round, client) RNG salted with [`SIM_SALT`]; exactly two draws are
@@ -1255,6 +1289,90 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_timeline_is_monotone_and_survivor_exact() {
+        // satellite: the timeline model the async event queue trusts —
+        // plan_time_ms/leg_times_ms are monotone nondecreasing in probe
+        // count S, payload bytes, and catch-up charge, and a survivor's
+        // sim_ms is bit-exactly the leg sum
+        crate::util::prop::run_prop("timeline_monotone", 300, |g| {
+            let mut rng = g.rng();
+            let p = CapabilityProfile {
+                tier: "rand".into(),
+                mem_bytes: u64::MAX,
+                up_mbps: 0.01 + rng.next_f64() * 50.0,
+                down_mbps: 0.01 + rng.next_f64() * 50.0,
+                compute: 0.05 + rng.next_f64() * 8.0,
+                drop_rate: rng.next_f64() * 0.5,
+                join_round: 0,
+                absent_rate: 0.0,
+            };
+            let params = 1_000 + rng.below(1_000_000) as u64;
+            let n = 1 + rng.below(200);
+            let steps = 1 + rng.below(3);
+            let catch = rng.below(1 << 18) as u64;
+            let mk = probe_zo_plan(n, steps, catch);
+            let s = 1 + rng.below(48);
+            let ds = 1 + rng.below(16);
+            // monotone in S
+            if plan_time_ms(&p, &mk(s + ds), params) < plan_time_ms(&p, &mk(s), params) {
+                return Err(format!("not monotone in S at S={s}+{ds}"));
+            }
+            // monotone in payload bytes, leg by leg
+            let base = mk(s);
+            let extra = 1 + rng.below(1 << 20) as u64;
+            let mut fat = base;
+            fat.down_bytes += extra;
+            fat.up_bytes += extra;
+            let (d0, c0, u0) = leg_times_ms(&p, &base, params);
+            let (d1, c1, u1) = leg_times_ms(&p, &fat, params);
+            if d1 < d0 || u1 < u0 || c1 != c0 {
+                return Err(format!("payload bytes shrank a leg: {d0}->{d1}, {u0}->{u1}"));
+            }
+            // monotone in the catch-up charge (it fronts the download)
+            let heavier = probe_zo_plan(n, steps, catch + extra);
+            if plan_time_ms(&p, &heavier(s), params) < plan_time_ms(&p, &base, params) {
+                return Err("catch-up charge shortened the timeline".into());
+            }
+            // a survivor's sim_ms is exactly the deterministic leg sum
+            let deadline = if rng.next_f64() < 0.5 { 0.0 } else { rng.next_f64() * 50.0 };
+            let mut trace = Xoshiro256::seed_from(rng.next_u64());
+            let o = simulate_round(&p, &base, params, deadline, &mut trace);
+            if o.survives && o.sim_ms.to_bits() != plan_time_ms(&p, &base, params).to_bits() {
+                return Err(format!(
+                    "survivor sim_ms {} != planned {}",
+                    o.sim_ms,
+                    plan_time_ms(&p, &base, params)
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn arrival_delays_are_deterministic_and_rate_scaled() {
+        // rate 0 = staggered-immediate: exactly zero, no stream consumed
+        assert_eq!(arrival_delay_ms(7, 3, 5, 0.0), 0.0);
+        // pure function of (seed, seq, cid, rate)
+        let a = arrival_delay_ms(7, 3, 5, 0.5);
+        assert_eq!(a, arrival_delay_ms(7, 3, 5, 0.5));
+        assert!(a >= 0.0 && a.is_finite());
+        // distinct dispatches draw distinct delays (fresh streams)
+        assert_ne!(a, arrival_delay_ms(7, 4, 5, 0.5));
+        // the empirical mean tracks 1/rate (Exp inverse-CDF sanity)
+        for rate in [0.1, 1.0, 4.0] {
+            let n = 4000;
+            let mean: f64 = (0..n)
+                .map(|seq| arrival_delay_ms(42, seq, 1, rate))
+                .sum::<f64>()
+                / n as f64;
+            assert!(
+                (mean * rate - 1.0).abs() < 0.1,
+                "mean {mean} at rate {rate} far from 1/rate"
+            );
+        }
     }
 
     #[test]

@@ -15,15 +15,30 @@
 //! exactly this contract — see the crate-level "Threading model" docs.
 
 /// Number of worker threads to use (respects `ZOWARMUP_THREADS`).
+///
+/// An unparseable override is ignored with a one-time stderr warning
+/// naming the offending value — silently falling back to autodetect made
+/// `ZOWARMUP_THREADS=four` indistinguishable from no override at all.
 pub fn worker_count() -> usize {
     if let Ok(v) = std::env::var("ZOWARMUP_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+        match v.parse::<usize>() {
+            Ok(n) => return n.max(1),
+            Err(_) => warn_bad_threads_once(&v),
         }
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+fn warn_bad_threads_once(value: &str) {
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    WARNED.call_once(|| {
+        eprintln!(
+            "warning: ignoring unparseable ZOWARMUP_THREADS={value:?} \
+             (expected a thread count); using available parallelism"
+        );
+    });
 }
 
 /// Resolve a config-level thread count: `0` means "auto" (the
@@ -112,6 +127,26 @@ mod tests {
         assert!(worker_count() >= 1);
         assert_eq!(resolve_workers(3), 3);
         assert!(resolve_workers(0) >= 1);
+    }
+
+    #[test]
+    fn env_override_parse_paths() {
+        // single test covering both parse outcomes sequentially — the
+        // env var is process-global, so splitting these across tests
+        // would race. Every other test here is count-agnostic by design.
+        let prev = std::env::var("ZOWARMUP_THREADS").ok();
+        std::env::set_var("ZOWARMUP_THREADS", "5");
+        assert_eq!(resolve_workers(0), 5, "valid override drives auto");
+        assert_eq!(resolve_workers(2), 2, "explicit count beats the env");
+        std::env::set_var("ZOWARMUP_THREADS", "not-a-number");
+        // unparseable: warned once on stderr, falls back to autodetect
+        assert!(resolve_workers(0) >= 1);
+        std::env::set_var("ZOWARMUP_THREADS", "0");
+        assert_eq!(resolve_workers(0), 1, "0 clamps to 1, not autodetect");
+        match prev {
+            Some(v) => std::env::set_var("ZOWARMUP_THREADS", v),
+            None => std::env::remove_var("ZOWARMUP_THREADS"),
+        }
     }
 
     #[test]

@@ -419,6 +419,39 @@ pub fn zo_update_items(
     lr_client: f32,
     lr_server: f32,
 ) -> Vec<(u64, f32)> {
+    zo_update_items_weighted(contributions, None, cfg, lr_client, lr_server)
+}
+
+/// Per-contribution staleness multipliers of the buffered-async engine's
+/// polynomial decay: `m_j = (1 + staleness_j)^(-decay)`, where
+/// `staleness_j` counts model versions between the snapshot the client
+/// computed against and the version the fold lands on (FedBuff-style).
+/// `decay = 0` yields exactly 1.0 for every entry — no discount.
+pub fn staleness_multipliers(staleness: &[usize], decay: f64) -> Vec<f64> {
+    staleness
+        .iter()
+        .map(|&s| (1.0 + s as f64).powf(-decay))
+        .collect()
+}
+
+/// [`zo_update_items`] with optional per-contribution multipliers layered
+/// over the guarded [`contribution_weights`] — the buffered-async
+/// engine's staleness discount ([`staleness_multipliers`]). Multiplied
+/// weights are renormalized to sum 1 so the discount redistributes trust
+/// across the fold without shrinking the overall step; if every multiplied
+/// weight is zero or non-finite the raw products are kept (an all-zero
+/// list then yields the identity update, like an all-drop round).
+///
+/// `multipliers: None` takes the exact code path of the historical
+/// unweighted fold — bit-identical, which is what keeps the sync engine's
+/// golden trace untouched.
+pub fn zo_update_items_weighted(
+    contributions: &[ZoContribution],
+    multipliers: Option<&[f64]>,
+    cfg: &ZoConfig,
+    lr_client: f32,
+    lr_server: f32,
+) -> Vec<(u64, f32)> {
     for c in contributions {
         assert!(
             c.s_block > 0,
@@ -440,7 +473,29 @@ pub fn zo_update_items(
             c.s_block
         );
     }
-    let weights = contribution_weights(contributions, cfg);
+    let weights = match multipliers {
+        None => contribution_weights(contributions, cfg),
+        Some(m) => {
+            assert_eq!(
+                m.len(),
+                contributions.len(),
+                "{} multipliers for {} contributions",
+                m.len(),
+                contributions.len()
+            );
+            let scaled: Vec<f64> = contribution_weights(contributions, cfg)
+                .iter()
+                .zip(m)
+                .map(|(w, m)| w * m)
+                .collect();
+            let z: f64 = scaled.iter().sum();
+            if z.is_finite() && z > 0.0 {
+                scaled.iter().map(|w| w / z).collect()
+            } else {
+                scaled
+            }
+        }
+    };
     if weights.iter().all(|&w| w == 0.0) {
         return Vec::new();
     }
@@ -642,6 +697,47 @@ mod tests {
         }
         let l1 = be.fwd_loss(&global, &batch).unwrap().mean_loss();
         assert!(l1 < 0.8 * l0, "ZO rounds must learn: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn staleness_decay_discounts_and_renormalizes() {
+        // m_j = (1+s)^-α: decay 0 is exactly no-op, fresh beats stale
+        assert_eq!(staleness_multipliers(&[0, 3, 7], 0.0), vec![1.0, 1.0, 1.0]);
+        let m = staleness_multipliers(&[0, 1, 3], 1.0);
+        assert!((m[0] - 1.0).abs() < 1e-12);
+        assert!((m[1] - 0.5).abs() < 1e-12);
+        assert!((m[2] - 0.25).abs() < 1e-12);
+        assert!(m.windows(2).all(|w| w[0] > w[1]));
+
+        let mk = |seed: u64, dl: f64, n: usize| ZoContribution {
+            client: 0,
+            seeds: vec![seed, seed + 1, seed + 2],
+            delta_l: vec![dl; 3],
+            n_samples: n,
+            s_block: 3,
+        };
+        let cfg = ZoConfig::default();
+        let contribs = vec![mk(10, 0.4, 8), mk(20, 0.4, 8)];
+        // None is bit-identical to the unweighted API
+        let plain = zo_update_items(&contribs, &cfg, 1.0, 0.05);
+        let none = zo_update_items_weighted(&contribs, None, &cfg, 1.0, 0.05);
+        assert_eq!(plain, none);
+        // all-fresh multipliers renormalize back to the plain fold
+        let fresh = staleness_multipliers(&[0, 0], 2.0);
+        let items = zo_update_items_weighted(&contribs, Some(&fresh), &cfg, 1.0, 0.05);
+        assert_eq!(plain, items);
+        // a stale second client shifts coefficient mass to the fresh one
+        let mixed = staleness_multipliers(&[0, 4], 1.0);
+        let items = zo_update_items_weighted(&contribs, Some(&mixed), &cfg, 1.0, 0.05);
+        assert!(items[0].1.abs() > plain[0].1.abs(), "fresh client gained weight");
+        assert!(items[3].1.abs() < plain[3].1.abs(), "stale client lost weight");
+        // renormalization preserves the total coefficient mass (up to the
+        // f32 rounding of the stored coefficients)
+        let sum = |v: &[(u64, f32)]| v.iter().map(|(_, c)| *c as f64).sum::<f64>();
+        assert!((sum(&items) - sum(&plain)).abs() < 1e-3 * sum(&plain).abs().max(1.0));
+        // all-zero multipliers degrade to the identity update
+        assert!(zo_update_items_weighted(&contribs, Some(&[0.0, 0.0]), &cfg, 1.0, 0.05)
+            .is_empty());
     }
 
     #[test]

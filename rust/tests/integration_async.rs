@@ -1,0 +1,178 @@
+//! Integration tests for the buffered-async round engine: deterministic
+//! event traces and bit-identical results at every worker count, real
+//! staleness under a heterogeneous fleet, and the sync default left
+//! untouched.
+
+use std::sync::Arc;
+
+use zowarmup::config::{EngineKind, FedConfig, Scale};
+use zowarmup::data::dirichlet::dirichlet_split;
+use zowarmup::data::loader::Source;
+use zowarmup::data::synthetic::{train_test, SynthKind};
+use zowarmup::fed::server::{shards_from_partition, Federation};
+use zowarmup::fed::AsyncEvent;
+use zowarmup::metrics::Phase;
+use zowarmup::model::backend::{LinearBackend, ModelBackend};
+use zowarmup::model::params::ParamVec;
+use zowarmup::sim::Scenario;
+
+fn probe() -> LinearBackend {
+    LinearBackend::pooled(32 * 32 * 3, 2, 10, 32)
+}
+
+fn setup(cfg: &FedConfig) -> (Vec<zowarmup::data::loader::ClientData>, Source) {
+    let (train, test) = train_test(SynthKind::Synth10, 400, 120, cfg.seed);
+    let part = dirichlet_split(&train, cfg.clients, 0.5, cfg.seed);
+    let src = Source::Image(Arc::new(train));
+    (
+        shards_from_partition(&src, &part),
+        Source::Image(Arc::new(test)),
+    )
+}
+
+/// Pinned async scenario: a wide compute spread (8–10x) with no
+/// deadline, so slow dispatches straddle several logical rounds and
+/// arrive genuinely stale, and a small failure rate so the drop path is
+/// exercised without starving the buffer.
+fn async_scenario() -> Scenario {
+    Scenario::load(
+        r#"{"name": "async-mix", "deadline_ms": 0,
+            "tiers": [
+              {"name": "fast", "frac": 0.5, "mem": "backprop",
+               "up_mbps": 80, "down_mbps": 80, "compute": 4.0},
+              {"name": "slow", "frac": 0.5, "mem": "zo",
+               "up_mbps": 4, "down_mbps": 8, "compute": 0.4,
+               "drop_rate": 0.15}
+            ]}"#,
+    )
+    .unwrap()
+}
+
+fn async_cfg(threads: usize) -> FedConfig {
+    let mut cfg = Scale::Smoke.fed();
+    cfg.lr_client_warm = 0.06;
+    cfg.lr_client_zo = 1.0;
+    cfg.lr_server_zo = 0.01;
+    cfg.zo.eps = 1e-3;
+    cfg.threads = threads;
+    cfg.rounds_total = 20;
+    cfg.pivot = 2;
+    cfg.eval_every = 4;
+    cfg.ckpt_every = 2;
+    cfg.engine = EngineKind::Async;
+    cfg.async_zo.buffer_k = 3;
+    cfg.async_zo.arrival_rate = 0.05;
+    cfg.scenario = async_scenario();
+    cfg
+}
+
+fn run_async(threads: usize) -> (
+    ParamVec,
+    Vec<AsyncEvent>,
+    zowarmup::metrics::RunLog,
+    zowarmup::comm::CommLedger,
+) {
+    let cfg = async_cfg(threads);
+    let (shards, test) = setup(&cfg);
+    let be = probe();
+    let init = ParamVec::zeros(be.dim());
+    let mut fed = Federation::new(cfg, &be, shards, test, init).unwrap();
+    fed.run().unwrap();
+    (
+        fed.global.clone(),
+        fed.async_trace().to_vec(),
+        fed.log.clone(),
+        fed.ledger.clone(),
+    )
+}
+
+#[test]
+fn async_engine_is_bit_identical_across_workers() {
+    // acceptance: the event-driven engine is deterministic because event
+    // *ordering* decides everything — worker counts {1, 2, 4} must yield
+    // byte-identical event traces, logs, ledgers, and final parameters.
+    let (g1, tr1, log1, led1) = run_async(1);
+    let (g2, tr2, log2, led2) = run_async(2);
+    let (g4, tr4, log4, led4) = run_async(4);
+
+    assert!(!tr1.is_empty(), "async rounds must fold completion events");
+    for (trace, tag) in [(&tr2, "2"), (&tr4, "4")] {
+        assert_eq!(trace.len(), tr1.len(), "trace length (threads {tag})");
+        for (a, b) in tr1.iter().zip(trace.iter()) {
+            assert_eq!(a.t_ms.to_bits(), b.t_ms.to_bits(), "event time (threads {tag})");
+            assert_eq!(
+                (a.seq, a.cid, a.version, a.survived),
+                (b.seq, b.cid, b.version, b.survived),
+                "event identity (threads {tag})"
+            );
+        }
+    }
+    assert_eq!(g1, g2, "weights must not depend on threads");
+    assert_eq!(g1, g4, "weights must not depend on threads");
+    for (led, tag) in [(&led2, "2"), (&led4, "4")] {
+        assert_eq!((led1.up_total, led1.down_total), (led.up_total, led.down_total), "threads {tag}");
+        assert_eq!(led1.catch_up_down_total, led.catch_up_down_total, "threads {tag}");
+        assert_eq!(led1.seeds_total, led.seeds_total, "threads {tag}");
+    }
+    for (log, tag) in [(&log2, "2"), (&log4, "4")] {
+        assert_eq!(log1.rounds.len(), log.rounds.len());
+        for (a, b) in log1.rounds.iter().zip(&log.rounds) {
+            // everything except the host wall clock must be bit-equal
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "threads {tag}");
+            assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "threads {tag}");
+            assert_eq!(
+                (a.bytes_up, a.bytes_down, a.dropped, a.catch_up_down, a.seeds_issued),
+                (b.bytes_up, b.bytes_down, b.dropped, b.catch_up_down, b.seeds_issued),
+                "threads {tag}"
+            );
+            assert_eq!(a.eff_var.to_bits(), b.eff_var.to_bits(), "threads {tag}");
+            assert_eq!(a.staleness.to_bits(), b.staleness.to_bits(), "threads {tag}");
+            assert_eq!(a.model_version, b.model_version, "threads {tag}");
+            assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits(), "threads {tag}");
+        }
+    }
+
+    // the scenario must actually exercise the async semantics:
+    // out-of-version arrivals, a moving version counter, event-clock time
+    let event_clock_monotone = tr1.windows(2).all(|w| w[0].t_ms <= w[1].t_ms);
+    assert!(event_clock_monotone, "completion events must pop in time order");
+    assert!(
+        log1.rounds.iter().any(|r| r.phase == Phase::Zo && r.staleness > 0.0),
+        "the compute spread must produce at least one stale fold"
+    );
+    assert!(
+        log1.rounds.last().unwrap().model_version > 2,
+        "parameter-mutating folds must advance the version counter"
+    );
+    assert!(
+        log1.rounds.iter().any(|r| r.phase == Phase::Zo && r.makespan_ms > 0.0),
+        "folds must consume event-clock time"
+    );
+    assert!(log1.total_dropped() > 0, "the flaky tier should drop someone");
+    assert!(led1.catch_up_down_total > 0, "stale dispatches must pay catch-up");
+    assert!(g1.is_finite());
+    assert!(log1.final_accuracy() > 0.2, "async training should still learn");
+}
+
+#[test]
+fn sync_default_is_untouched_by_the_async_engine() {
+    // the default engine stays the barrier: no async state, no trace, a
+    // zero staleness column — the golden-trace fixture pins the full
+    // bit-identity, this pins the engine selection itself.
+    assert_eq!(FedConfig::default().engine, EngineKind::Sync);
+    let mut cfg = Scale::Smoke.fed();
+    cfg.lr_client_warm = 0.06;
+    cfg.lr_client_zo = 1.0;
+    cfg.lr_server_zo = 0.01;
+    cfg.zo.eps = 1e-3;
+    cfg.rounds_total = 4;
+    cfg.pivot = 1;
+    let (shards, test) = setup(&cfg);
+    let be = probe();
+    let mut fed =
+        Federation::new(cfg, &be, shards, test, ParamVec::zeros(be.dim())).unwrap();
+    fed.run().unwrap();
+    assert!(fed.async_trace().is_empty(), "sync runs must not build event state");
+    assert!(fed.log.rounds.iter().all(|r| r.staleness == 0.0));
+    assert!(fed.log.mean_staleness() == 0.0);
+}
