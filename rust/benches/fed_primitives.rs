@@ -2,17 +2,19 @@
 //! Dirichlet partitioning, data generation, batch assembly (§Perf L3).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use zowarmup::baselines::heterofl::{heterofl_aggregate, SliceMap};
-use zowarmup::config::{FedConfig, ServerOpt};
+use zowarmup::config::{FedConfig, KernelKind, ServerOpt};
 use zowarmup::data::dirichlet::dirichlet_split;
 use zowarmup::data::loader::{ClientData, Source};
 use zowarmup::data::synthetic::{generate, train_test, GenConfig, SynthKind};
 use zowarmup::fed::aggregate::{weighted_average, ServerOptState};
 use zowarmup::fed::server::{shards_from_partition, Federation};
 use zowarmup::model::backend::LinearBackend;
-use zowarmup::model::params::ParamVec;
-use zowarmup::util::bench::{black_box, Bench};
+use zowarmup::model::params::{perturb_axpy_many_sharded_kernel, ParamVec};
+use zowarmup::util::bench::{black_box, quick, Bench};
+use zowarmup::util::rng::Distribution;
 
 fn main() {
     let mut b = Bench::new("fed_primitives");
@@ -25,6 +27,43 @@ fn main() {
         b.iter_with_items("weighted_average P=10 d=175k", (d * 10) as f64, || {
             black_box(weighted_average(&updates));
         });
+    }
+
+    // the server-side ZOUPDATE fold at ResNet18 scale d=11M: the raw
+    // (seed, coeff) sweep the coordinator runs once per round, scalar vs
+    // lane-split kernel. Required by name in the CI gate (--require), so
+    // the rows are emitted in quick mode too — at a floor-of-one
+    // iteration budget to keep the bench-smoke step fast.
+    {
+        let d = 11_173_962;
+        let items: Vec<(u64, f32)> = (0..30).map(|i| (i as u64, 1e-4)).collect();
+        let saved = (b.min_time, b.min_iters, b.warmup_iters);
+        if quick() {
+            b.min_time = Duration::from_millis(0);
+            b.min_iters = 1;
+            b.warmup_iters = 0;
+        }
+        for kernel in [KernelKind::Scalar, KernelKind::Lanes] {
+            for workers in [1usize, 4] {
+                let mut w = vec![0.1f32; d];
+                b.iter_with_items(
+                    &format!("zo_fold d=11M x30 kernel={} w={workers}", kernel.as_str()),
+                    (d * 30) as f64,
+                    || {
+                        perturb_axpy_many_sharded_kernel(
+                            &mut w,
+                            &items,
+                            0.75,
+                            Distribution::Rademacher,
+                            workers,
+                            kernel,
+                        );
+                        black_box(&w[0]);
+                    },
+                );
+            }
+        }
+        (b.min_time, b.min_iters, b.warmup_iters) = saved;
     }
 
     // server optimizers

@@ -3,8 +3,10 @@
 //! (seed, ΔL) pair per round on every participant, so its throughput caps
 //! feasible model size (§Perf L3).
 
+use std::time::Duration;
+
 use zowarmup::ckpt::CheckpointStore;
-use zowarmup::config::{VarianceGuard, ZoConfig};
+use zowarmup::config::{KernelKind, VarianceGuard, ZoConfig};
 use zowarmup::model::params::ParamVec;
 use zowarmup::util::bench::{black_box, quick, Bench};
 use zowarmup::util::rng::{Distribution, PerturbStream, Xoshiro256};
@@ -111,6 +113,48 @@ fn main() {
         }
     }
 
+    // the kernel matchup: one full ZOUPDATE (Q=10 x S=3) at ResNet18
+    // scale d=11M, scalar vs lane-split kernel, sequential and 4-way
+    // sharded. These four rows are the §Perf speedup evidence for the
+    // lanes kernel and the CI gate requires them by name (--require),
+    // so they run in quick mode too — at a floor-of-one iteration
+    // budget to keep the bench-smoke step fast.
+    {
+        let d = 11_173_962;
+        let contribs: Vec<ZoContribution> = (0..10)
+            .map(|c| ZoContribution {
+                client: c,
+                seeds: vec![c as u64 * 3, c as u64 * 3 + 1, c as u64 * 3 + 2],
+                delta_l: vec![0.01, -0.02, 0.005],
+                n_samples: 100,
+                s_block: 3,
+            })
+            .collect();
+        let saved = (b.min_time, b.min_iters, b.warmup_iters);
+        if !full {
+            b.min_time = Duration::from_millis(0);
+            b.min_iters = 1;
+            b.warmup_iters = 0;
+        }
+        for kernel in [KernelKind::Scalar, KernelKind::Lanes] {
+            let kcfg = ZoConfig { kernel, ..ZoConfig::default() };
+            for workers in [1usize, 4] {
+                let mut g = ParamVec(vec![0.1f32; d]);
+                b.iter_with_items(
+                    &format!("apply_zo_update d=11M kernel={} w={workers}", kernel.as_str()),
+                    (d * 30) as f64,
+                    || {
+                        zowarmup::zo::apply_zo_update_sharded(
+                            &mut g, &contribs, &kcfg, 1.0, 0.01, workers,
+                        );
+                        black_box(&g.0[0]);
+                    },
+                );
+            }
+        }
+        (b.min_time, b.min_iters, b.warmup_iters) = saved;
+    }
+
     // the fused single-pass variant actually used by apply_zo_update
     {
         let d = 1_000_000;
@@ -184,7 +228,13 @@ fn main() {
                     (d * 30 * rounds) as f64,
                     || {
                         let p = store
-                            .reconstruct(rounds, 0.75, Distribution::Rademacher, workers)
+                            .reconstruct(
+                                rounds,
+                                0.75,
+                                Distribution::Rademacher,
+                                workers,
+                                KernelKind::Scalar,
+                            )
                             .unwrap();
                         black_box(&p.0[0]);
                     },

@@ -41,7 +41,8 @@
 //! repo's implicit free-rejoin accounting, preserved so default configs
 //! reproduce the existing golden trace unchanged.
 
-use crate::model::params::{perturb_axpy_many_sharded, ParamVec};
+use crate::config::KernelKind;
+use crate::model::params::{perturb_axpy_many_sharded_kernel, ParamVec};
 use crate::util::rng::Distribution;
 
 /// Wire bytes per replayed (seed, ΔL) pair — 8-byte seed + 4-byte f32,
@@ -237,13 +238,16 @@ impl CheckpointStore {
     /// Rebuild the global parameters entering round `target` from the
     /// snapshot plus tail replay, through the identical sharded fused
     /// pass the live server applies — bit-identical to continuous
-    /// participation for every `workers` count.
+    /// participation for every `workers` count. `kernel` must be the
+    /// run's `ZoConfig::kernel`: the seed log only replays to the live
+    /// state through the same perturbation stream the live fold used.
     pub fn reconstruct(
         &self,
         target: usize,
         tau: f32,
         dist: Distribution,
         workers: usize,
+        kernel: KernelKind,
     ) -> anyhow::Result<ParamVec> {
         let snap = self
             .snapshot
@@ -257,7 +261,7 @@ impl CheckpointStore {
         );
         let mut p = snap.params.clone();
         for e in &self.tail[..target - snap.at] {
-            perturb_axpy_many_sharded(&mut p.0, &e.items, tau, dist, workers);
+            perturb_axpy_many_sharded_kernel(&mut p.0, &e.items, tau, dist, workers, kernel);
         }
         Ok(p)
     }
@@ -270,6 +274,7 @@ mod tests {
 
     const TAU: f32 = 0.75;
     const DIST: Distribution = Distribution::Rademacher;
+    const KERNEL: KernelKind = KernelKind::Scalar;
 
     fn items(rng: &mut Xoshiro256, n: usize) -> Vec<(u64, f32)> {
         (0..n)
@@ -282,7 +287,7 @@ mod tests {
     fn replay_all(init: &ParamVec, rounds: &[Vec<(u64, f32)>], upto: usize) -> ParamVec {
         let mut p = init.clone();
         for r in &rounds[..upto] {
-            perturb_axpy_many_sharded(&mut p.0, r, TAU, DIST, 1);
+            perturb_axpy_many_sharded_kernel(&mut p.0, r, TAU, DIST, 1, KERNEL);
         }
         p
     }
@@ -296,7 +301,7 @@ mod tests {
         s.record_opaque(1, &init);
         assert_eq!(s.catch_up_bytes(0, 5, 1024), 0);
         assert_eq!(s.tail_rounds(), 0);
-        assert!(s.reconstruct(0, TAU, DIST, 1).is_err());
+        assert!(s.reconstruct(0, TAU, DIST, 1, KERNEL).is_err());
     }
 
     #[test]
@@ -308,12 +313,12 @@ mod tests {
         let mut all_rounds: Vec<Vec<(u64, f32)>> = Vec::new();
         for round in 0..8 {
             let it = items(&mut rng, 1 + round % 4);
-            perturb_axpy_many_sharded(&mut live.0, &it, TAU, DIST, 1);
+            perturb_axpy_many_sharded_kernel(&mut live.0, &it, TAU, DIST, 1, KERNEL);
             all_rounds.push(it.clone());
             store.record_seed_round(round, it, &live);
             // every reconstructable prefix equals the never-left replay
             for target in store.base_round()..=store.base_round() + store.tail_rounds() {
-                let rec = store.reconstruct(target, TAU, DIST, 1).unwrap();
+                let rec = store.reconstruct(target, TAU, DIST, 1, KERNEL).unwrap();
                 assert_eq!(rec, replay_all(&init, &all_rounds, target), "target {target}");
             }
         }
@@ -331,7 +336,7 @@ mod tests {
         let mut rng = Xoshiro256::seed_from(4);
         let mut live = init.clone();
         let it = items(&mut rng, 3);
-        perturb_axpy_many_sharded(&mut live.0, &it, TAU, DIST, 1);
+        perturb_axpy_many_sharded_kernel(&mut live.0, &it, TAU, DIST, 1, KERNEL);
         store.record_seed_round(0, it, &live);
         // an opaque (warm/mixed) round: pretend a full-weight fold happened
         live.0[7] += 1.0;
@@ -350,8 +355,8 @@ mod tests {
         assert_eq!(sealed.replay_rounds, 0);
         assert_eq!(sealed.replay_items, 0);
         // and reconstruct at the new base is exactly the live state
-        assert_eq!(store.reconstruct(2, TAU, DIST, 1).unwrap(), live);
-        assert!(store.reconstruct(1, TAU, DIST, 1).is_err());
+        assert_eq!(store.reconstruct(2, TAU, DIST, 1, KERNEL).unwrap(), live);
+        assert!(store.reconstruct(1, TAU, DIST, 1, KERNEL).is_err());
     }
 
     #[test]
@@ -363,7 +368,7 @@ mod tests {
         let mut live = init.clone();
         for round in 0..6 {
             let it = items(&mut rng, 5); // 5 items = 60 B per round
-            perturb_axpy_many_sharded(&mut live.0, &it, TAU, DIST, 1);
+            perturb_axpy_many_sharded_kernel(&mut live.0, &it, TAU, DIST, 1, KERNEL);
             store.record_seed_round(round, it, &live);
         }
         assert_eq!(store.base_round(), 3);
@@ -422,7 +427,7 @@ mod tests {
                     // the live server logs
                     let n_items = rng.below(6);
                     let it = items(&mut rng, n_items);
-                    perturb_axpy_many_sharded(&mut live.0, &it, 0.75, DIST, 1);
+                    perturb_axpy_many_sharded_kernel(&mut live.0, &it, 0.75, DIST, 1, KERNEL);
                     store.record_seed_round(round, it, &live);
                 }
                 entering.push(live.clone());
@@ -434,7 +439,7 @@ mod tests {
             let top = base + store.tail_rounds();
             for target in base..=top {
                 let rec = store
-                    .reconstruct(target, 0.75, DIST, 1)
+                    .reconstruct(target, 0.75, DIST, 1, KERNEL)
                     .map_err(|e| e.to_string())?;
                 if rec != entering[target] {
                     return Err(format!("reconstruct({target}) != live state"));
@@ -481,13 +486,13 @@ mod tests {
         let mut live = init.clone();
         for round in 0..5 {
             let it = items(&mut rng, 4);
-            perturb_axpy_many_sharded(&mut live.0, &it, TAU, DIST, 1);
+            perturb_axpy_many_sharded_kernel(&mut live.0, &it, TAU, DIST, 1, KERNEL);
             store.record_seed_round(round, it, &live);
         }
-        let w1 = store.reconstruct(5, TAU, DIST, 1).unwrap();
+        let w1 = store.reconstruct(5, TAU, DIST, 1, KERNEL).unwrap();
         for workers in [2usize, 4, 8] {
             assert_eq!(
-                store.reconstruct(5, TAU, DIST, workers).unwrap(),
+                store.reconstruct(5, TAU, DIST, workers, KERNEL).unwrap(),
                 w1,
                 "workers={workers}"
             );

@@ -98,6 +98,44 @@ impl EngineKind {
     }
 }
 
+/// Which ZOUPDATE kernel regenerates perturbations from seeds
+/// (`--kernel scalar|lanes`; DESIGN.md §12). The kernel is part of the
+/// *protocol*, not just an implementation detail: it defines the
+/// perturbation stream z(seed), so client probing, the live server fold,
+/// catch-up replay and checkpoint reconstruction must all run the same
+/// kind — which is why it lives in [`ZoConfig`] and flows through every
+/// replay path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// one Xoshiro stream per seed — byte-identical to every historical
+    /// trace including the golden fixture (the default)
+    Scalar,
+    /// four independent Xoshiro lanes per seed
+    /// (`model::params::LANES_DEFAULT`), interleaved per 64-element
+    /// block: a *different* perturbation stream with its own golden
+    /// fixture, bit-identical across worker counts within the mode.
+    /// Rademacher-only (lane fast-forward needs the one-u64-per-block
+    /// consumption contract).
+    Lanes,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(KernelKind::Scalar),
+            "lanes" => Some(KernelKind::Lanes),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Lanes => "lanes",
+        }
+    }
+}
+
 /// Knobs of the buffered-async engine (`fed::engine`; inert under the
 /// default `EngineKind::Sync`).
 #[derive(Debug, Clone, Copy)]
@@ -200,6 +238,9 @@ pub struct ZoConfig {
     /// variance-guard mode for the server aggregation (CLI
     /// `--guard off|invvar|clip`)
     pub guard: VarianceGuard,
+    /// which ZOUPDATE kernel generates z(seed) on *both* protocol sides
+    /// (CLI `--kernel scalar|lanes`; default scalar = seed-compatible)
+    pub kernel: KernelKind,
 }
 
 impl Default for ZoConfig {
@@ -214,6 +255,7 @@ impl Default for ZoConfig {
             s_min: 1,
             s_max: 16,
             guard: VarianceGuard::Off,
+            kernel: KernelKind::Scalar,
         }
     }
 }
@@ -457,6 +499,17 @@ impl FedConfig {
                  (the mixed FO fold needs the synchronous barrier)"
             );
         }
+        // the lanes kernel fast-forwards each lane by a block count, which
+        // requires the Rademacher one-u64-per-64-block consumption
+        // contract; Gaussian draws are data-dependent and cannot be lane
+        // split (same reason the sharded scalar pass falls back).
+        if self.zo.kernel == KernelKind::Lanes {
+            anyhow::ensure!(
+                self.zo.dist == Distribution::Rademacher,
+                "--kernel lanes requires --dist rademacher \
+                 (Gaussian streams cannot be lane-split)"
+            );
+        }
         self.scenario.validate()?;
         Ok(())
     }
@@ -485,6 +538,10 @@ impl FedConfig {
         if let Some(g) = a.get("guard") {
             self.zo.guard = VarianceGuard::parse(g)
                 .ok_or_else(|| anyhow::anyhow!("bad --guard {g:?} (off|invvar|clip)"))?;
+        }
+        if let Some(k) = a.get("kernel") {
+            self.zo.kernel = KernelKind::parse(k)
+                .ok_or_else(|| anyhow::anyhow!("bad --kernel {k:?} (scalar|lanes)"))?;
         }
         self.eval_every = a.usize_or("eval-every", self.eval_every)?;
         self.seed = a.usize_or("seed", self.seed as usize)? as u64;
@@ -848,6 +905,44 @@ mod tests {
         let mut c = FedConfig::default();
         c.async_zo.arrival_rate = f64::NAN;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_knob_parses_and_validates() {
+        let mut c = FedConfig::default();
+        assert_eq!(c.zo.kernel, KernelKind::Scalar); // default: seed-compatible
+        let argv: Vec<String> = "--kernel lanes"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+        let a = Args::parse(&argv).unwrap();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.zo.kernel, KernelKind::Lanes);
+        // also flows through JSON configs
+        let j = Json::parse(r#"{"kernel": "lanes"}"#).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.zo.kernel, KernelKind::Lanes);
+        // bad kernel name rejected
+        let bad: Vec<String> = vec!["--kernel".into(), "simd".into()];
+        let a = Args::parse(&bad).unwrap();
+        assert!(FedConfig::default().apply_args(&a).is_err());
+        // lanes is Rademacher-only: the Gaussian combination must die in
+        // validation, in either flag order
+        let mut c = FedConfig::default();
+        c.zo.kernel = KernelKind::Lanes;
+        c.zo.dist = Distribution::Gaussian;
+        assert!(c.validate().is_err());
+        let argv: Vec<String> = "--kernel lanes --dist gaussian"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+        let a = Args::parse(&argv).unwrap();
+        assert!(FedConfig::default().apply_args(&a).is_err());
+        // round-trip
+        for k in [KernelKind::Scalar, KernelKind::Lanes] {
+            assert_eq!(KernelKind::parse(k.as_str()), Some(k));
+        }
     }
 
     #[test]

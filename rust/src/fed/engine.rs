@@ -55,7 +55,7 @@ use crate::data::loader::ClientData;
 use crate::fed::client::round_client_rng;
 use crate::fed::server::{run_zo_client, zo_train_signal, ClientClass, Federation, RoundSummary};
 use crate::model::backend::{LossSums, ModelBackend};
-use crate::model::params::{perturb_axpy_many_sharded, ParamVec};
+use crate::model::params::{perturb_axpy_many_sharded_kernel, ParamVec};
 use crate::sim;
 use crate::zo::{
     self, staleness_multipliers, zo_round_ledger_outcomes, zo_update_items_weighted,
@@ -249,14 +249,22 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             let survived = ev.charge.survives;
             charges.push(ev.charge);
             if survived {
-                buffer.push(Buffered {
-                    cid: ev.cid,
-                    version: ev.version,
-                    caught_up,
-                    job: ev.job.expect("survivor carries its deferred job"),
-                });
-                if buffer.len() >= k {
-                    break; // buffer full: fold
+                // a malformed survivor event with no deferred job used to
+                // abort the whole fleet run via expect(); degrade it to a
+                // counted drop instead (warned once on stderr)
+                match take_survivor_job(ev.job, ev.seq, ev.cid) {
+                    Some(job) => {
+                        buffer.push(Buffered {
+                            cid: ev.cid,
+                            version: ev.version,
+                            caught_up,
+                            job,
+                        });
+                        if buffer.len() >= k {
+                            break; // buffer full: fold
+                        }
+                    }
+                    None => dropped += 1,
                 }
             } else {
                 dropped += 1;
@@ -304,12 +312,13 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             self.cfg.lr_client_zo,
             self.cfg.lr_server_zo,
         );
-        perturb_axpy_many_sharded(
+        perturb_axpy_many_sharded_kernel(
             &mut self.global.0,
             &items,
             self.cfg.zo.tau,
             self.cfg.zo.dist,
             workers,
+            self.cfg.zo.kernel,
         );
         if !items.is_empty() {
             self.model_version += 1;
@@ -423,6 +432,25 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     }
 }
 
+/// Unwrap a survivor's deferred job. Every dispatch that simulates as a
+/// survivor attaches one ([`Federation::dispatch_one`]), so `None` here is
+/// a malformed event — but one bad event must not panic an entire fleet
+/// run. It degrades to `None` (the caller books it in the round's
+/// `dropped` column) with a one-line stderr warning, emitted once per
+/// process like `util::pool`'s bad-threads warning.
+fn take_survivor_job(job: Option<PendingJob>, seq: u64, cid: usize) -> Option<PendingJob> {
+    if job.is_none() {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            eprintln!(
+                "zowarmup: survivor event (seq {seq}, client {cid}) carries no deferred \
+                 job — malformed; counting it as a drop (warning shown once)"
+            );
+        });
+    }
+    job
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -461,6 +489,41 @@ mod tests {
             (5.0f64.to_bits(), 0),
         ];
         assert_eq!(order, expect, "min-heap order must be (t_arrive, seq)");
+    }
+
+    #[test]
+    fn jobless_survivor_degrades_to_drop_not_panic() {
+        // the malformed event: charge says "survived" but no deferred job
+        // is attached — the shape that used to panic the fold loop via
+        // expect(). The unwrap helper must degrade it to None (the loop
+        // books that as a drop) and pass real jobs through untouched.
+        let mut bad = item(1.0, 7);
+        bad.0.charge.survives = true;
+        assert!(bad.0.charge.survives && bad.0.job.is_none(), "malformed by construction");
+        let mut dropped = 0usize;
+        match take_survivor_job(bad.0.job, bad.0.seq, bad.0.cid) {
+            Some(_) => panic!("jobless survivor must not yield a job"),
+            None => dropped += 1,
+        }
+        assert_eq!(dropped, 1, "the malformed event books as a drop");
+        // a well-formed survivor's job passes through intact
+        let empty = crate::data::synthetic::Dataset {
+            x: Vec::new(),
+            y: Vec::new(),
+            classes: 2,
+        };
+        let job = PendingJob {
+            data: ClientData {
+                source: crate::data::loader::Source::Image(Arc::new(empty)),
+                indices: Vec::new(),
+            },
+            seeds: vec![1, 2, 3],
+            s_block: 3,
+            global: Arc::new(ParamVec::zeros(4)),
+        };
+        let out = take_survivor_job(Some(job), 8, 1).expect("real job passes through");
+        assert_eq!(out.seeds, vec![1, 2, 3]);
+        assert_eq!(out.s_block, 3);
     }
 
     #[test]

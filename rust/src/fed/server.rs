@@ -43,7 +43,7 @@ use crate::fed::client::{
 use crate::fed::population::{Population, SparseSync};
 use crate::metrics::{Phase, RoundRecord, RunLog};
 use crate::model::backend::{LossSums, ModelBackend};
-use crate::model::params::{perturb_axpy_many_sharded, ParamVec};
+use crate::model::params::{perturb_axpy_many_sharded_kernel, ParamVec};
 use crate::sim::{self, CapabilityProfile, Scenario};
 use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
@@ -820,12 +820,13 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             self.cfg.lr_client_zo,
             self.cfg.lr_server_zo,
         );
-        perturb_axpy_many_sharded(
+        perturb_axpy_many_sharded_kernel(
             &mut self.global.0,
             &items,
             self.cfg.zo.tau,
             self.cfg.zo.dist,
             workers,
+            self.cfg.zo.kernel,
         );
 
         if !items.is_empty() || !fo_updates.is_empty() {

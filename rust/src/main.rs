@@ -68,6 +68,14 @@ SUBCOMMANDS
                                         inverse-variance reweighting or
                                         |dL|-quantile clipping folded into
                                         the fused update; default off)
+            --kernel scalar|lanes      (ZOUPDATE perturbation kernel.
+                                        scalar (default) = the historical
+                                        one-stream-per-seed sweep, byte-
+                                        identical to every existing trace;
+                                        lanes = 4-lane split streams fused
+                                        across the round's seeds — its own
+                                        seed schedule, bit-identical at any
+                                        --threads. requires rademacher)
             --engine sync|async        (ZO round engine. sync (default) =
                                         the paper's barrier, bit-identical
                                         to before; async = buffered

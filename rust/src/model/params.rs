@@ -1,8 +1,9 @@
 //! Flat parameter vector: init, axpy, and the seeded-perturbation ops that
 //! implement the ZOUPDATE reconstruction of Algorithm 1.
 
+use crate::config::KernelKind;
 use crate::model::manifest::ModelEntry;
-use crate::util::rng::{Distribution, PerturbStream, Xoshiro256};
+use crate::util::rng::{lane_keys, Distribution, PerturbStream, Xoshiro256};
 
 /// The global model state: a single flat `f32` vector whose layout is
 /// defined by the manifest. All federated arithmetic happens here.
@@ -62,6 +63,32 @@ impl ParamVec {
         perturb_axpy_slice(&mut self.0, &mut stream, coeff);
     }
 
+    /// Kernel-aware single-seed axpy: the client-side twin of the server's
+    /// fused fold. Both protocol sides must generate the *same* z(seed) —
+    /// the client measures ΔL against it, the server replays it — so
+    /// `zoopt`/`apply_seed_block` route through this with the run's
+    /// [`KernelKind`]. `Scalar` is byte-identical to [`Self::perturb_axpy`].
+    pub fn perturb_axpy_kernel(
+        &mut self,
+        seed: u64,
+        tau: f32,
+        dist: Distribution,
+        coeff: f32,
+        kernel: KernelKind,
+    ) {
+        match kernel {
+            KernelKind::Scalar => self.perturb_axpy(seed, tau, dist, coeff),
+            KernelKind::Lanes => {
+                debug_assert_eq!(
+                    dist,
+                    Distribution::Rademacher,
+                    "--kernel lanes is Rademacher-only (config validation enforces this)"
+                );
+                perturb_axpy_many_lanes(&mut self.0, &[(seed, coeff)], tau, LANES_DEFAULT);
+            }
+        }
+    }
+
     /// out = self + coeff*z(seed) without touching self (SPSA's w ± εz).
     pub fn perturbed(&self, seed: u64, tau: f32, dist: Distribution, coeff: f32) -> ParamVec {
         let mut out = self.clone();
@@ -73,8 +100,18 @@ impl ParamVec {
         self.0.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 
+    /// NaN-propagating max |w_i|: a blown-up model must read as NaN, not
+    /// as the "healthy" 0.0 that a plain `f32::max` fold reports (IEEE max
+    /// discards NaN operands, so an all-NaN vector used to fold to the
+    /// 0.0 init — divergence monitoring never saw it).
     pub fn max_abs(&self) -> f32 {
-        self.0.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+        self.0.iter().fold(0.0f32, |m, &x| {
+            if m.is_nan() || x.is_nan() {
+                f32::NAN
+            } else {
+                m.max(x.abs())
+            }
+        })
     }
 
     pub fn is_finite(&self) -> bool {
@@ -175,8 +212,13 @@ pub fn perturb_axpy_many_sharded(
     dist: Distribution,
     workers: usize,
 ) {
+    // NB: single-item calls shard too — the block-aligned `discard`
+    // contract makes sharding bit-exact for one stream exactly as for
+    // many, and d=11M single-item applies (one-survivor async folds,
+    // single-seed ckpt tail replays) are worth parallelizing. An earlier
+    // `items.len() <= 1` guard silently serialized them.
     if workers <= 1
-        || items.len() <= 1
+        || items.is_empty()
         || dist != Distribution::Rademacher
         || w.len() < SHARD_MIN_DIM
     {
@@ -197,6 +239,153 @@ pub fn perturb_axpy_many_sharded(
             });
         }
     });
+}
+
+/// Lane count of the `--kernel lanes` mode. Fixed, not a knob: the lane
+/// count is part of the stream definition (block b is served by lane
+/// `b % LANES_DEFAULT`), so changing it would define a third kernel, not
+/// tune this one. The kernel internals are parametric over the count
+/// (the tail-block property tests also run 8 lanes).
+pub const LANES_DEFAULT: usize = 4;
+
+/// One item's lane-split stream state for the lanes kernel: `rngs[j]`
+/// serves exactly the absolute 64-element blocks `b` with
+/// `b % lanes == j`, drawing one u64 per owned block.
+struct LaneStreams {
+    rngs: Vec<Xoshiro256>,
+    ct_bits: u32,
+}
+
+/// Build the lane-split stream set for the fused lanes pass, with every
+/// lane fast-forwarded to absolute block `start_block` (64-aligned shard
+/// offsets only, like the scalar kernel's `skip_blocks`). Lane keys come
+/// from [`lane_keys`] — the seed → per-lane-key derivation mirroring the
+/// Pallas kernel's seed → PRNGKey → bits flow. Lane j owns every
+/// `lanes`-th block, so among blocks `[0, start_block)` it has drawn
+/// `start_block / lanes` u64s, plus one if the remainder has passed its
+/// slot — a worker-count-independent closed form, which is what makes
+/// 64-block-aligned sharding bit-exact within the mode.
+fn rademacher_lane_streams(
+    items: &[(u64, f32)],
+    tau: f32,
+    lanes: usize,
+    start_block: u64,
+) -> Vec<LaneStreams> {
+    let l = lanes as u64;
+    items
+        .iter()
+        .map(|&(seed, coeff)| {
+            let rngs = lane_keys(seed, lanes)
+                .iter()
+                .enumerate()
+                .map(|(j, &key)| {
+                    let mut rng = Xoshiro256::seed_from(key);
+                    let owned = start_block / l + u64::from(start_block % l > j as u64);
+                    rng.discard(owned);
+                    rng
+                })
+                .collect();
+            LaneStreams {
+                rngs,
+                ct_bits: (coeff * tau).to_bits(),
+            }
+        })
+        .collect()
+}
+
+/// The fused lanes inner kernel: per 64-element block, each stream draws
+/// one u64 from the block's *owning lane* (`(start_block + k) % lanes`)
+/// and applies the signed constant branchlessly, LSB-first — the same
+/// inner loop as [`fused_rademacher_axpy`], but consecutive blocks pull
+/// from independent generators, breaking the serial state-update
+/// dependency chain that caps the scalar kernel's throughput when few
+/// streams are in flight (the single-seed replay case).
+fn fused_rademacher_axpy_lanes(
+    w: &mut [f32],
+    streams: &mut [LaneStreams],
+    start_block: u64,
+    lanes: usize,
+) {
+    for (k, chunk) in w.chunks_mut(64).enumerate() {
+        let lane = ((start_block + k as u64) % lanes as u64) as usize;
+        for st in streams.iter_mut() {
+            let mut bits = st.rngs[lane].next_u64();
+            let ct = st.ct_bits;
+            for x in chunk.iter_mut() {
+                *x += f32::from_bits(ct ^ (((bits & 1) as u32) << 31));
+                bits >>= 1;
+            }
+        }
+    }
+}
+
+/// Unsharded lanes-kernel fold: `w += Σ_k coeff_k · z_lanes(seed_k)` in
+/// one pass. This is the reference the sharded variant and the
+/// single-seed client path ([`ParamVec::perturb_axpy_kernel`]) are
+/// bit-identical to. Rademacher-only by construction (config validation
+/// rejects `--kernel lanes --dist gaussian`).
+pub fn perturb_axpy_many_lanes(w: &mut [f32], items: &[(u64, f32)], tau: f32, lanes: usize) {
+    if items.is_empty() {
+        return;
+    }
+    let mut streams = rademacher_lane_streams(items, tau, lanes, 0);
+    fused_rademacher_axpy_lanes(w, &mut streams, 0, lanes);
+}
+
+/// Sharded lanes-kernel fold: the same 64-block-aligned chunking as
+/// [`perturb_axpy_many_sharded`], with each worker fast-forwarding every
+/// lane of every stream to its chunk's start block. Bit-identical to
+/// [`perturb_axpy_many_lanes`] for every worker count (the lanes golden
+/// trace pins this end to end).
+pub fn perturb_axpy_many_lanes_sharded(
+    w: &mut [f32],
+    items: &[(u64, f32)],
+    tau: f32,
+    lanes: usize,
+    workers: usize,
+) {
+    if workers <= 1 || items.is_empty() || w.len() < SHARD_MIN_DIM {
+        return perturb_axpy_many_lanes(w, items, tau, lanes);
+    }
+    let blocks = w.len().div_ceil(64);
+    let shards = workers.min(blocks);
+    let blocks_per = blocks.div_ceil(shards);
+    let chunk_len = blocks_per * 64;
+    std::thread::scope(|scope| {
+        for (i, chunk) in w.chunks_mut(chunk_len).enumerate() {
+            scope.spawn(move || {
+                let start_block = (i * blocks_per) as u64;
+                let mut streams = rademacher_lane_streams(items, tau, lanes, start_block);
+                fused_rademacher_axpy_lanes(chunk, &mut streams, start_block, lanes);
+            });
+        }
+    });
+}
+
+/// The kernel dispatcher every replay path calls — live fold
+/// (`fed::server::zo_round`, `fed::engine`), catch-up replay and
+/// checkpoint reconstruction (`ckpt::CheckpointStore::reconstruct`) all
+/// route their fused (seed, coeff) items through here with the run's
+/// [`KernelKind`], so one `--kernel` flag switches the whole protocol.
+pub fn perturb_axpy_many_sharded_kernel(
+    w: &mut [f32],
+    items: &[(u64, f32)],
+    tau: f32,
+    dist: Distribution,
+    workers: usize,
+    kernel: KernelKind,
+) {
+    match kernel {
+        KernelKind::Scalar => perturb_axpy_many_sharded(w, items, tau, dist, workers),
+        KernelKind::Lanes => {
+            debug_assert_eq!(
+                dist,
+                Distribution::Rademacher,
+                "--kernel lanes is Rademacher-only (config validation enforces this)"
+            );
+            perturb_axpy_many_lanes_sharded(w, items, tau, LANES_DEFAULT, workers);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -377,6 +566,20 @@ mod tests {
         perturb_axpy_many(&mut a, &items, 0.5, Distribution::Gaussian);
         perturb_axpy_many_sharded(&mut b, &items, 0.5, Distribution::Gaussian, 4);
         assert_eq!(a, b);
+        // single-item lists shard too (one-survivor async folds,
+        // single-seed ckpt tail replays): the sharded pass must stay
+        // bit-identical to the sequential single-stream apply, which used
+        // to be guaranteed only by falling back to it
+        let one = &items[..1];
+        for &d in &dims {
+            let mut base = vec![0.25f32; d];
+            perturb_axpy_many(&mut base, one, 0.75, Distribution::Rademacher);
+            for workers in [1usize, 2, 3, 4, 7, 64] {
+                let mut sharded = vec![0.25f32; d];
+                perturb_axpy_many_sharded(&mut sharded, one, 0.75, Distribution::Rademacher, workers);
+                assert_eq!(sharded, base, "single item d={d} workers={workers}");
+            }
+        }
     }
 
     #[test]
@@ -386,5 +589,148 @@ mod tests {
         assert_eq!(p.max_abs(), 4.0);
         assert!(p.is_finite());
         assert!(!ParamVec(vec![f32::NAN]).is_finite());
+    }
+
+    #[test]
+    fn max_abs_propagates_nan() {
+        // the divergence-monitoring regression: IEEE max discards NaN, so
+        // the old fold read an all-NaN (blown-up) model as a healthy 0.0
+        assert!(ParamVec(vec![f32::NAN; 8]).max_abs().is_nan(), "all-NaN");
+        assert!(
+            ParamVec(vec![1.0, f32::NAN, -7.0]).max_abs().is_nan(),
+            "mixed NaN, interior"
+        );
+        assert!(
+            ParamVec(vec![f32::NAN, 3.0]).max_abs().is_nan(),
+            "mixed NaN, leading"
+        );
+        // non-NaN behavior unchanged (negatives, infinities, empty)
+        assert_eq!(ParamVec(vec![-9.0, 2.0]).max_abs(), 9.0);
+        assert_eq!(ParamVec(vec![f32::NEG_INFINITY]).max_abs(), f32::INFINITY);
+        assert_eq!(ParamVec(Vec::new()).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn lanes_sharded_matches_unsharded_across_boundaries() {
+        // the lanes-kernel bit-identity contract: for dims with tail
+        // blocks (d % 64 != 0) and lane-misaligned block counts
+        // (d % (64·lanes) != 0), every worker count reproduces the
+        // unsharded lanes reference bit for bit, at 4 and 8 lanes.
+        let items: Vec<(u64, f32)> =
+            (0..9).map(|i| (777 + i, 2e-3 * (i as f32 - 4.0))).collect();
+        for &lanes in &[4usize, 8] {
+            let dims = [
+                1usize,
+                63,                      // d % 64 != 0, single partial block
+                64,
+                65,
+                64 * lanes,              // exactly one lane cycle
+                64 * lanes + 32,         // tail block, partial lane cycle
+                SHARD_MIN_DIM - 1,       // fallback edge
+                SHARD_MIN_DIM + 63,      // sharded, tail block
+                SHARD_MIN_DIM + 64 * 5,  // sharded, blocks % lanes != 0
+                3 * SHARD_MIN_DIM + 17,  // multi-shard, tail block
+            ];
+            for &d in &dims {
+                let mut base = vec![0.25f32; d];
+                perturb_axpy_many_lanes(&mut base, &items, 0.75, lanes);
+                for workers in [1usize, 2, 4, 7] {
+                    let mut sharded = vec![0.25f32; d];
+                    perturb_axpy_many_lanes_sharded(&mut sharded, &items, 0.75, lanes, workers);
+                    assert_eq!(sharded, base, "lanes={lanes} d={d} workers={workers}");
+                }
+                // single item too (the client-side single-seed shape)
+                let mut base1 = vec![0.25f32; d];
+                perturb_axpy_many_lanes(&mut base1, &items[..1], 0.75, lanes);
+                for workers in [2usize, 7] {
+                    let mut sharded = vec![0.25f32; d];
+                    perturb_axpy_many_lanes_sharded(&mut sharded, &items[..1], 0.75, lanes, workers);
+                    assert_eq!(sharded, base1, "lanes={lanes} d={d} workers={workers} single");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_stream_is_valid_and_distinct_from_scalar() {
+        // z_lanes is a proper Rademacher perturbation: entries are ±c·τ,
+        // roughly balanced, deterministic per seed, sign-exact under
+        // cancellation — and a *different* stream than the scalar kernel's
+        // (which is why the mode is opt-in with its own golden trace).
+        let d = 4096;
+        let mut z = vec![0.0f32; d];
+        perturb_axpy_many_lanes(&mut z, &[(42, 1.0)], 1.0, LANES_DEFAULT);
+        assert!(z.iter().all(|&v| v == 1.0 || v == -1.0));
+        let mean: f64 = z.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        let mut z2 = vec![0.0f32; d];
+        perturb_axpy_many_lanes(&mut z2, &[(42, 1.0)], 1.0, LANES_DEFAULT);
+        assert_eq!(z, z2, "deterministic per seed");
+        let mut scalar = vec![0.0f32; d];
+        perturb_axpy_many(&mut scalar, &[(42, 1.0)], 1.0, Distribution::Rademacher);
+        assert_ne!(z, scalar, "lanes must not alias the scalar stream");
+        // round-trip cancellation (exactly representable ±c·τ)
+        let mut p = ParamVec(vec![0.25f32; 1000]);
+        let orig = p.clone();
+        p.perturb_axpy_kernel(99, 0.75, Distribution::Rademacher, 0.5, KernelKind::Lanes);
+        assert_ne!(p, orig);
+        p.perturb_axpy_kernel(99, 0.75, Distribution::Rademacher, -0.5, KernelKind::Lanes);
+        assert_eq!(p, orig);
+    }
+
+    #[test]
+    fn lanes_fused_matches_sequential_single_seed_applies() {
+        // protocol self-consistency: the server's fused multi-item lanes
+        // fold applies, per element, the same additions in the same order
+        // as the client's one-seed-at-a-time applies
+        // (ParamVec::perturb_axpy_kernel) — bit-identical, so client ΔL
+        // measurement and server replay see the same z under lanes.
+        let items: Vec<(u64, f32)> = (0..7).map(|i| (100 + i, 0.01 * (i as f32 - 3.0))).collect();
+        for d in [1usize, 63, 64, 65, 1000, 4097] {
+            let mut fused = ParamVec(vec![0.5f32; d]);
+            perturb_axpy_many_lanes(&mut fused.0, &items, 0.75, LANES_DEFAULT);
+            let mut seq = ParamVec(vec![0.5f32; d]);
+            for &(seed, coeff) in &items {
+                seq.perturb_axpy_kernel(
+                    seed,
+                    0.75,
+                    Distribution::Rademacher,
+                    coeff,
+                    KernelKind::Lanes,
+                );
+            }
+            assert_eq!(fused.0, seq.0, "d={d}");
+        }
+    }
+
+    #[test]
+    fn kernel_dispatcher_routes_both_modes() {
+        let items: Vec<(u64, f32)> = (0..5).map(|i| (50 + i, 1e-3 * (i as f32 + 1.0))).collect();
+        let d = SHARD_MIN_DIM + 77;
+        let mut scalar_direct = vec![0.1f32; d];
+        perturb_axpy_many_sharded(&mut scalar_direct, &items, 0.75, Distribution::Rademacher, 4);
+        let mut scalar_via = vec![0.1f32; d];
+        perturb_axpy_many_sharded_kernel(
+            &mut scalar_via,
+            &items,
+            0.75,
+            Distribution::Rademacher,
+            4,
+            KernelKind::Scalar,
+        );
+        assert_eq!(scalar_via, scalar_direct);
+        let mut lanes_direct = vec![0.1f32; d];
+        perturb_axpy_many_lanes_sharded(&mut lanes_direct, &items, 0.75, LANES_DEFAULT, 4);
+        let mut lanes_via = vec![0.1f32; d];
+        perturb_axpy_many_sharded_kernel(
+            &mut lanes_via,
+            &items,
+            0.75,
+            Distribution::Rademacher,
+            4,
+            KernelKind::Lanes,
+        );
+        assert_eq!(lanes_via, lanes_direct);
+        assert_ne!(lanes_via, scalar_via, "the two kernels are different streams");
     }
 }

@@ -272,6 +272,26 @@ fn jump_powers() -> &'static [JumpMatrix] {
     })
 }
 
+/// Domain-separation salt for per-lane key derivation. Arbitrary odd
+/// constant, fixed forever: it is part of the `--kernel lanes` stream
+/// definition (DESIGN.md §12), exactly like the xoshiro constants are part
+/// of the scalar stream's.
+pub const LANE_KEY_SALT: u64 = 0xA5A5_5EED_1A4E_5107;
+
+/// Derive `lanes` independent generator keys for one perturbation seed —
+/// the keying step of the lane-parallel ZOUPDATE kernel. Mirrors the
+/// Pallas exemplar's seed → PRNGKey → bits flow
+/// (`python/compile/kernels/perturb.py`): one SplitMix64 chain keyed by
+/// `seed ^ LANE_KEY_SALT`, one draw per lane, each draw seeding its own
+/// [`Xoshiro256`]. SplitMix64 steps are a bijection, so lane keys never
+/// collide within a seed; the salt decorrelates lane 0's generator from
+/// the scalar kernel's `seed_from(seed)` state (the two kernels must not
+/// share prefixes — they are *different* perturbation streams).
+pub fn lane_keys(seed: u64, lanes: usize) -> Vec<u64> {
+    let mut sm = SplitMix64(seed ^ LANE_KEY_SALT);
+    (0..lanes).map(|_| sm.next_u64()).collect()
+}
+
 /// The seeded perturbation stream of the SPSA protocol (§3.1).
 ///
 /// `Rademacher`: ±τ with equal probability — the paper's preferred,
@@ -620,6 +640,32 @@ mod tests {
         d.discard(n);
         assert_eq!(c.s, d.s);
         assert_eq!(c.next_u64(), d.next_u64());
+    }
+
+    #[test]
+    fn lane_keys_deterministic_distinct_and_salted() {
+        // the lanes-kernel keying contract: reproducible per seed,
+        // pairwise-distinct within a seed, disjoint across seeds, and a
+        // strict prefix relation between lane counts (lane j's key does
+        // not depend on how many lanes follow it).
+        for seed in [0u64, 1, 7, u64::MAX] {
+            let k4 = lane_keys(seed, 4);
+            assert_eq!(k4, lane_keys(seed, 4));
+            let k8 = lane_keys(seed, 8);
+            assert_eq!(&k8[..4], &k4[..]);
+            let mut sorted = k8.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8, "lane-key collision for seed {seed}");
+        }
+        assert_ne!(lane_keys(1, 4), lane_keys(2, 4));
+        // the salt keeps lane 0 off the scalar kernel's stream: seeding
+        // from key 0 must not reproduce seed_from(seed)'s first draw
+        let k = lane_keys(42, 1)[0];
+        assert_ne!(
+            Xoshiro256::seed_from(k).next_u64(),
+            Xoshiro256::seed_from(42).next_u64()
+        );
     }
 
     #[test]

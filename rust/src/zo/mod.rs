@@ -159,16 +159,17 @@ pub fn zoopt<B: ModelBackend>(
         for &seed in step_seeds {
             let mut count = 0.0f64;
             let mut delta = 0.0f64;
-            // w + εz
+            // w + εz — through the run's kernel: the client must measure
+            // ΔL against the exact z the server's fold will replay
             let mut wp = w.clone();
-            wp.perturb_axpy(seed, cfg.tau, cfg.dist, cfg.eps);
+            wp.perturb_axpy_kernel(seed, cfg.tau, cfg.dist, cfg.eps, cfg.kernel);
             for b in chunks {
                 let s = backend.fwd_loss(&wp, b)?;
                 delta += s.loss_sum;
                 count += s.count;
             }
             // flip to w − εz in place
-            wp.perturb_axpy(seed, cfg.tau, cfg.dist, -2.0 * cfg.eps);
+            wp.perturb_axpy_kernel(seed, cfg.tau, cfg.dist, -2.0 * cfg.eps, cfg.kernel);
             for b in chunks {
                 let s = backend.fwd_loss(&wp, b)?;
                 delta -= s.loss_sum;
@@ -191,7 +192,7 @@ fn apply_seed_block(w: &mut ParamVec, seeds: &[u64], deltas: &[f64], cfg: &ZoCon
     for (&seed, &dl) in seeds.iter().zip(deltas) {
         let ghat = dl / (2.0 * cfg.eps as f64);
         let coeff = -(lr as f64) * ghat / seeds.len() as f64;
-        w.perturb_axpy(seed, cfg.tau, cfg.dist, coeff as f32);
+        w.perturb_axpy_kernel(seed, cfg.tau, cfg.dist, coeff as f32, cfg.kernel);
     }
 }
 
@@ -226,8 +227,10 @@ pub fn apply_zo_update(
 }
 
 /// [`apply_zo_update`] with the weight vector sharded across `workers`
-/// threads (`model::params::perturb_axpy_many_sharded`). Bit-identical to
-/// the single-threaded path for every worker count.
+/// threads through the run's kernel
+/// (`model::params::perturb_axpy_many_sharded_kernel`). Bit-identical to
+/// the single-threaded path for every worker count, within either kernel
+/// mode.
 pub fn apply_zo_update_sharded(
     global: &mut ParamVec,
     contributions: &[ZoContribution],
@@ -237,12 +240,13 @@ pub fn apply_zo_update_sharded(
     workers: usize,
 ) {
     let items = zo_update_items(contributions, cfg, lr_client, lr_server);
-    crate::model::params::perturb_axpy_many_sharded(
+    crate::model::params::perturb_axpy_many_sharded_kernel(
         &mut global.0,
         &items,
         cfg.tau,
         cfg.dist,
         workers,
+        cfg.kernel,
     );
 }
 
@@ -697,6 +701,67 @@ mod tests {
         }
         let l1 = be.fwd_loss(&global, &batch).unwrap().mean_loss();
         assert!(l1 < 0.8 * l0, "ZO rounds must learn: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn lanes_kernel_learns_and_replay_matches() {
+        // --kernel lanes end to end at the zo layer: the client measures
+        // ΔL against the lane-split z, the server folds the same stream,
+        // and the protocol still optimizes. Also pins the ckpt contract
+        // under lanes: item replay through the dispatcher is bit-identical
+        // to apply_zo_update itself.
+        use crate::config::KernelKind;
+        let be = LinearBackend::new(8, 2, 16);
+        let mut global = ParamVec::zeros(be.dim());
+        let batch = sep_batch(16, 8, 0);
+        let cfg = ZoConfig {
+            eps: 1e-3,
+            tau: 0.75,
+            s_seeds: 4,
+            dist: Distribution::Rademacher,
+            grad_steps: 1,
+            kernel: KernelKind::Lanes,
+            ..ZoConfig::default()
+        };
+        let iss = SeedIssuer::new(0);
+        let l0 = be.fwd_loss(&global, &batch).unwrap().mean_loss();
+        for round in 0..30 {
+            let seeds = iss.seeds_for(round, 0, cfg.s_seeds);
+            let deltas =
+                zoopt(&be, &global, &[vec![batch.clone()]], &seeds, &cfg, 1.0).unwrap();
+            let contrib = ZoContribution {
+                client: 0,
+                seeds,
+                delta_l: deltas,
+                n_samples: 16,
+                s_block: cfg.s_seeds,
+            };
+            apply_zo_update(&mut global, &[contrib], &cfg, 1.0, 0.3);
+        }
+        let l1 = be.fwd_loss(&global, &batch).unwrap().mean_loss();
+        assert!(l1 < 0.8 * l0, "lanes-kernel ZO rounds must learn: {l0} -> {l1}");
+
+        // replay-matches-apply under lanes (the ckpt/catch-up contract)
+        let contribs = vec![ZoContribution {
+            client: 0,
+            seeds: vec![5, 6, 7],
+            delta_l: vec![0.4, -0.2, 0.1],
+            n_samples: 10,
+            s_block: 3,
+        }];
+        let mut a = ParamVec(vec![0.1f32; 2048]);
+        let mut b = a.clone();
+        apply_zo_update(&mut a, &contribs, &cfg, 0.7, 0.3);
+        let items = zo_update_items(&contribs, &cfg, 0.7, 0.3);
+        crate::model::params::perturb_axpy_many_sharded_kernel(
+            &mut b.0, &items, cfg.tau, cfg.dist, 1, cfg.kernel,
+        );
+        assert_eq!(a.0, b.0);
+        // and the lanes fold is a genuinely different stream than scalar
+        let mut c = ParamVec(vec![0.1f32; 2048]);
+        let scalar_cfg = ZoConfig { kernel: KernelKind::Scalar, ..cfg };
+        apply_zo_update(&mut c, &contribs, &scalar_cfg, 0.7, 0.3);
+        assert_ne!(a.0, c.0);
     }
 
     #[test]

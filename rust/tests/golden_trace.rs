@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use zowarmup::config::{FedConfig, Scale};
+use zowarmup::config::{FedConfig, KernelKind, Scale};
 use zowarmup::data::dirichlet::dirichlet_split;
 use zowarmup::data::loader::Source;
 use zowarmup::data::synthetic::{train_test, SynthKind};
@@ -25,6 +25,14 @@ use zowarmup::sim::Scenario;
 const FIXTURE: &str = concat!(
     env!("CARGO_MANIFEST_DIR"),
     "/tests/fixtures/golden_trace.txt"
+);
+
+/// The lanes kernel defines its own perturbation stream (per-lane
+/// split keys), so it gets its own fixture — pinned with the same
+/// bless-once protocol as the scalar one.
+const FIXTURE_LANES: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/tests/fixtures/golden_trace_lanes.txt"
 );
 
 /// The pinned scenario is spelled inline (not a preset) so future preset
@@ -66,7 +74,12 @@ fn golden_cfg(threads: usize) -> FedConfig {
 }
 
 fn run(threads: usize) -> (ParamVec, RunLog, u64, u64) {
-    let cfg = golden_cfg(threads);
+    run_kernel(threads, KernelKind::Scalar)
+}
+
+fn run_kernel(threads: usize, kernel: KernelKind) -> (ParamVec, RunLog, u64, u64) {
+    let mut cfg = golden_cfg(threads);
+    cfg.zo.kernel = kernel;
     let (train, test) = train_test(SynthKind::Synth10, 400, 120, cfg.seed);
     let part = dirichlet_split(&train, cfg.clients, 0.5, cfg.seed);
     let src = Source::Image(Arc::new(train));
@@ -120,18 +133,57 @@ fn golden_trace_is_thread_invariant_and_pinned() {
         );
     }
 
-    let line = format!("fnv64:{h1:016x}");
-    match std::fs::read_to_string(FIXTURE).ok().as_deref().map(str::trim) {
+    pin_against(FIXTURE, h1);
+}
+
+/// Compare `hash` against the committed fixture at `path`, blessing it
+/// in place (for a later commit) while the file still says `unblessed`.
+fn pin_against(path: &str, hash: u64) {
+    let line = format!("fnv64:{hash:016x}");
+    match std::fs::read_to_string(path).ok().as_deref().map(str::trim) {
         Some(committed) if committed.starts_with("fnv64:") => {
             assert_eq!(
                 committed, line,
                 "golden trace drifted from the committed fixture; if the \
-                 change is intentional, reset {FIXTURE} to `unblessed`"
+                 change is intentional, reset {path} to `unblessed`"
             );
         }
         _ => {
-            std::fs::write(FIXTURE, format!("{line}\n")).unwrap();
-            eprintln!("blessed golden trace fixture: {line} (commit {FIXTURE})");
+            std::fs::write(path, format!("{line}\n")).unwrap();
+            eprintln!("blessed golden trace fixture: {line} (commit {path})");
         }
     }
+}
+
+/// The opt-in lanes kernel is a different (but fixed) stream: it must be
+/// thread-invariant and pinned like the scalar path, and must NOT
+/// reproduce the scalar trace — if the two hashes ever collide, the
+/// kernels have silently merged and the opt-in knob is dead.
+#[test]
+fn golden_trace_lanes_is_thread_invariant_and_pinned() {
+    let (g1, log1, up1, down1) = run_kernel(1, KernelKind::Lanes);
+    let dropped: usize = log1.rounds.iter().map(|r| r.dropped).sum();
+    assert!(dropped > 0, "golden scenario should drop clients");
+    assert!(g1.is_finite());
+    assert!(log1.rounds.iter().all(|r| r.train_loss.is_finite()));
+
+    let h1 = trace_hash(&g1, &log1, up1, down1);
+    for threads in [2usize, 4] {
+        let (g, log, up, down) = run_kernel(threads, KernelKind::Lanes);
+        assert_eq!(g1, g, "lanes weights diverged at threads={threads}");
+        assert_eq!(
+            h1,
+            trace_hash(&g, &log, up, down),
+            "lanes trace diverged at threads={threads}"
+        );
+    }
+
+    let (gs, logs, ups, downs) = run(1);
+    assert_ne!(
+        h1,
+        trace_hash(&gs, &logs, ups, downs),
+        "lanes kernel reproduced the scalar trace — streams must differ"
+    );
+
+    pin_against(FIXTURE_LANES, h1);
 }

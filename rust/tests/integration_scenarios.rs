@@ -171,7 +171,7 @@ fn rejoin_after_drop_reconstructs_bit_identical_to_continuous() {
         for target in base..=top {
             let rebuilt = fed
                 .ckpt
-                .reconstruct(target, cfg.zo.tau, cfg.zo.dist, threads)
+                .reconstruct(target, cfg.zo.tau, cfg.zo.dist, threads, cfg.zo.kernel)
                 .unwrap();
             assert_eq!(
                 rebuilt, entering[target],
@@ -237,7 +237,7 @@ fn rejoin_with_heterogeneous_s_reconstructs_bit_identical_to_continuous() {
         for target in base..=top {
             let rebuilt = fed
                 .ckpt
-                .reconstruct(target, cfg.zo.tau, cfg.zo.dist, threads)
+                .reconstruct(target, cfg.zo.tau, cfg.zo.dist, threads, cfg.zo.kernel)
                 .unwrap();
             assert_eq!(
                 rebuilt, entering[target],

@@ -7,12 +7,17 @@ relative tolerance on `mean_ns` (default +/-30%).
 
   python3 tools/bench_gate.py BENCH_baseline.json \
       rust/runs/BENCH_zo_core.json rust/runs/BENCH_fed_primitives.json \
-      [--tolerance 0.30]
+      [--tolerance 0.30] [--require SUBSTRING ...]
 
 Behavior:
   * rows are compared on `p50_ns` when both sides carry it (robust to
     the scheduler noise of quick-mode runs on shared CI runners),
     falling back to `mean_ns`;
+  * every `--require SUBSTRING` must match at least one fresh row name
+    (case-sensitive substring). This runs BEFORE the unmeasured-baseline
+    skip below, so load-bearing rows (e.g. the d=11M kernel matchup)
+    cannot silently vanish from a bench while the baseline is still a
+    placeholder;
   * while the baseline still carries the `"status": "unmeasured"`
     sentinel (no toolchain has blessed a first trajectory point yet) the
     gate auto-skips with a visible notice and exits 0;
@@ -57,10 +62,34 @@ def main():
     ap.add_argument("baseline")
     ap.add_argument("fresh", nargs="+", help="per-group bench JSON files")
     ap.add_argument("--tolerance", type=float, default=0.30)
+    ap.add_argument(
+        "--require",
+        action="append",
+        default=[],
+        metavar="SUBSTRING",
+        help="fail unless some fresh row name contains SUBSTRING "
+        "(checked even while the baseline is unmeasured)",
+    )
     args = ap.parse_args()
 
     with open(args.baseline) as f:
         baseline = json.load(f)
+    fresh_groups = []
+    for path in args.fresh:
+        with open(path) as f:
+            fresh_groups.append(json.load(f))
+    fresh_rows = load_rows(fresh_groups)
+
+    missing = [
+        req
+        for req in args.require
+        if not any(req in name for _, name in fresh_rows)
+    ]
+    if missing:
+        for req in missing:
+            print(f"::error::required bench row missing: no fresh row name contains {req!r}")
+        return 1
+
     if baseline.get("status") != "measured":
         print(
             "::notice file={}::bench gate SKIPPED — baseline status is "
@@ -72,11 +101,6 @@ def main():
         return 0
 
     base_rows = load_rows(baseline.get("groups", []))
-    fresh_groups = []
-    for path in args.fresh:
-        with open(path) as f:
-            fresh_groups.append(json.load(f))
-    fresh_rows = load_rows(fresh_groups)
 
     regressions, improvements = [], []
     for key, fresh_row in sorted(fresh_rows.items()):
