@@ -237,6 +237,32 @@ fn main() {
             });
         }
 
+        // the two-tier topology's overhead: the keyed edge partition,
+        // the per-edge partial fold + in-order merge, and the per-edge
+        // ledger rows on top of the flat fold — must land within noise
+        // of the N=1e3 flat row above (the fold output is bit-identical;
+        // only the grouping and attribution are extra work)
+        {
+            let mut c = cfg.clone();
+            c.clients = 1_000;
+            c.sample_zo = 64;
+            c.edges = 16;
+            c.population = zowarmup::config::PopulationMode::Lazy;
+            c.scenario = zowarmup::sim::Scenario::preset("fleet").unwrap();
+            let init = ParamVec::zeros(be.dim());
+            let mut fed = Federation::new_lazy(
+                c,
+                &be,
+                src.clone(),
+                test_src.clone(),
+                init,
+            )
+            .unwrap();
+            b.iter("zo_round N=1e3 K=64 E=16 (two-tier)", || {
+                black_box(fed.zo_round().unwrap());
+            });
+        }
+
         // adaptive probe budgets: the planner's O(Q log S) inversion plus
         // the heterogeneous-S round itself, vs the uniform row above
         {

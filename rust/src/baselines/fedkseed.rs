@@ -280,6 +280,7 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 eff_var: 0.0,
                 staleness: 0.0,
                 makespan_ms: 0.0,
+                edge_drops: 0,
             });
         }
         let avg = weighted_average(&updates);
@@ -295,6 +296,7 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             eff_var: 0.0,
             staleness: 0.0,
             makespan_ms: 0.0,
+            edge_drops: 0,
         })
     }
 
@@ -408,6 +410,8 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
             // (staleness, simulated makespan) are ZOWarmUp-specific
             staleness: 0.0,
             makespan_ms: 0.0,
+            // flat topology: baselines never model edge aggregators
+            edge_drops: 0,
         })
     }
 
@@ -445,6 +449,7 @@ impl<'a, B: ModelBackend> FedKSeedRun<'a, B> {
                 staleness: summary.staleness,
                 model_version: 0,
                 makespan_ms: summary.makespan_ms,
+                edge_drops: summary.edge_drops,
             });
         }
         Ok(())

@@ -356,6 +356,8 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
             // barrier protocol, no event engine: the async columns stay 0
             staleness: 0.0,
             makespan_ms: 0.0,
+            // flat topology: baselines never model edge aggregators
+            edge_drops: 0,
         })
     }
 
@@ -388,6 +390,7 @@ impl<'a, BF: ModelBackend, BH: ModelBackend> HeteroFlRun<'a, BF, BH> {
                 staleness: summary.staleness,
                 model_version: 0,
                 makespan_ms: summary.makespan_ms,
+                edge_drops: summary.edge_drops,
             });
         }
         Ok(())

@@ -40,6 +40,20 @@
 //! byte-inert: no snapshots, no log, `catch_up_bytes` is 0 — the seed
 //! repo's implicit free-rejoin accounting, preserved so default configs
 //! reproduce the existing golden trace unchanged.
+//!
+//! ## Edge-local caches (two-tier topology)
+//!
+//! Under the two-tier topology (DESIGN.md §13, `--edges E`) every edge
+//! aggregator mirrors the root's snapshot + tail: the root broadcasts
+//! each snapshot and each round's fused items to its E edges, so a stale
+//! client's catch-up downlink is served from **its own edge's cache** and
+//! charged at the edge link's rate. The store itself stays singular —
+//! the mirrors are byte-identical replicas, so the simulation keeps one
+//! `CheckpointStore` and the per-edge attribution lives entirely in
+//! [`crate::comm::CommLedger::record_edge_catch_up`].
+//! [`CheckpointStore::tail_log`] exposes the live tail so the
+//! cross-mode equivalence harness (`tests/integration_matrix.rs`) can
+//! assert the two-tier fold leaves the seed log bit-identical to flat.
 
 use crate::config::KernelKind;
 use crate::model::params::{perturb_axpy_many_sharded_kernel, ParamVec};
@@ -132,6 +146,14 @@ impl CheckpointStore {
     /// Seed-replayable rounds currently in the live log.
     pub fn tail_rounds(&self) -> usize {
         self.tail.len()
+    }
+
+    /// The live (post-snapshot) seed log, in round order — the exact
+    /// fused items the server applied. The equivalence harness diffs
+    /// this across topologies: a two-tier fold that is bit-identical to
+    /// the flat fold must leave an identical tail.
+    pub fn tail_log(&self) -> &[SeedRoundLog] {
+        &self.tail
     }
 
     fn take_snapshot(&mut self, at: usize, global: &ParamVec) {

@@ -148,6 +148,23 @@ pub struct CommLedger {
     /// `rounds · Q · S · steps`, adaptive runs whatever the per-client
     /// planner affords)
     pub seeds_total: u64,
+    /// per-edge attribution under the two-tier topology (`--edges E`):
+    /// indexed by edge, grown on demand, empty for flat runs. Every byte
+    /// here is a *sub-attribution* of the flat totals above — the sums
+    /// over edges reduce to `up_total` / `down_total` /
+    /// `catch_up_down_total` bit-exactly (all-integer arithmetic; pinned
+    /// by the `zo_ledger_additivity` property).
+    pub per_edge: Vec<EdgeLedger>,
+}
+
+/// One edge aggregator's slice of the round traffic: what crossed *its*
+/// backhaul, including the catch-up payloads served from its local
+/// checkpoint cache (charged at edge rates by the `sim` layer).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EdgeLedger {
+    pub up: u64,
+    pub down: u64,
+    pub catch_up_down: u64,
 }
 
 impl CommLedger {
@@ -165,6 +182,37 @@ impl CommLedger {
     /// Count probes issued this round (seed derivations, not bytes).
     pub fn record_seeds(&mut self, seeds: u64) {
         self.seeds_total += seeds;
+    }
+
+    /// Attribute `(up, down)` of already-recorded round traffic to
+    /// `edge`, growing the per-edge table on demand. Does NOT touch the
+    /// flat totals — callers book the flat round once via
+    /// [`record_round`](Self::record_round) and then split it here.
+    pub fn record_edge_round(&mut self, edge: usize, up: u64, down: u64) {
+        self.edge_mut(edge).up += up;
+        self.edge_mut(edge).down += down;
+    }
+
+    /// Attribute `bytes` of already-recorded catch-up downlink to the
+    /// edge whose local checkpoint cache served it.
+    pub fn record_edge_catch_up(&mut self, edge: usize, bytes: u64) {
+        self.edge_mut(edge).catch_up_down += bytes;
+    }
+
+    fn edge_mut(&mut self, edge: usize) -> &mut EdgeLedger {
+        if edge >= self.per_edge.len() {
+            self.per_edge.resize(edge + 1, EdgeLedger::default());
+        }
+        &mut self.per_edge[edge]
+    }
+
+    /// Sum of the per-edge attributions `(up, down, catch_up_down)` —
+    /// equals the flat totals whenever the caller attributed every round
+    /// (i.e. any two-tier run; flat runs leave the table empty).
+    pub fn edge_totals(&self) -> (u64, u64, u64) {
+        self.per_edge.iter().fold((0, 0, 0), |acc, e| {
+            (acc.0 + e.up, acc.1 + e.down, acc.2 + e.catch_up_down)
+        })
     }
 
     pub fn rounds(&self) -> usize {
@@ -257,5 +305,28 @@ mod tests {
         l.record_seeds(9);
         assert_eq!(l.seeds_total, 21);
         assert_eq!((l.up_total, l.down_total), (11, 22));
+    }
+
+    #[test]
+    fn per_edge_attribution_grows_and_reduces() {
+        let mut l = CommLedger::default();
+        // flat runs never touch the table
+        l.record_round(10, 20);
+        assert!(l.per_edge.is_empty());
+        assert_eq!(l.edge_totals(), (0, 0, 0));
+        // two-tier: the flat round is split across edges out of order,
+        // growing the table on demand and leaving gaps zeroed
+        l.record_edge_round(2, 6, 15);
+        l.record_edge_round(0, 4, 5);
+        assert_eq!(l.per_edge.len(), 3);
+        assert_eq!(l.per_edge[1], EdgeLedger::default());
+        assert_eq!(l.edge_totals(), (10, 20, 0));
+        // edge attribution is a split, not extra bytes
+        assert_eq!((l.up_total, l.down_total), (10, 20));
+        // catch-up sub-attributes the same way
+        l.record_catch_up(7);
+        l.record_edge_catch_up(2, 7);
+        assert_eq!(l.edge_totals(), (10, 20, 7));
+        assert_eq!(l.edge_totals().2, l.catch_up_down_total);
     }
 }

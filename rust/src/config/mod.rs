@@ -207,6 +207,11 @@ impl PopulationMode {
 /// materialized semantics, fleet-scale ones never pay O(N) setup.
 pub const LAZY_AUTO_THRESHOLD: usize = 1 << 17;
 
+/// Upper bound on `--edges`: the per-edge tables (ledger attribution,
+/// partial-fold headers) are O(E), so a fat-fingered E can't allocate
+/// unboundedly. 2^16 regional aggregators is far beyond any deployment.
+pub const MAX_EDGES: usize = 1 << 16;
+
 /// ZO-phase hyperparameters (§A.5 defaults: ε=1e-4, S=3, τ=0.75).
 #[derive(Debug, Clone, Copy)]
 pub struct ZoConfig {
@@ -326,6 +331,16 @@ pub struct FedConfig {
     pub engine: EngineKind,
     /// buffered-async engine knobs (inert under `EngineKind::Sync`)
     pub async_zo: AsyncConfig,
+    /// edge aggregators E in the two-tier topology (CLI `--edges`):
+    /// clients partition across E regional aggregators via
+    /// `sim::edge_of`, each edge partially folds its cohort, and the root
+    /// merges the partials in edge-index order — bit-identical to the
+    /// flat fold for every E (see `zo::zo_update_items_two_tier`).
+    /// 1 (default) short-circuits the partition entirely, byte-identical
+    /// to every historical trace. Edge *rate/failure* modeling only
+    /// engages when the scenario declares `"edges": [...]` profiles
+    /// (`geo-iot` / `geo-phones` presets).
+    pub edges: usize,
 }
 
 impl Default for FedConfig {
@@ -354,6 +369,7 @@ impl Default for FedConfig {
             population: PopulationMode::Auto,
             engine: EngineKind::Sync,
             async_zo: AsyncConfig::default(),
+            edges: 1,
         }
     }
 }
@@ -510,6 +526,16 @@ impl FedConfig {
                  (Gaussian streams cannot be lane-split)"
             );
         }
+        // two-tier topology: at least one aggregator; the cap is far
+        // above any plausible deployment and keeps the per-edge tables
+        // (ledger attribution, partial-fold headers) trivially small.
+        anyhow::ensure!(self.edges >= 1, "edges must be >= 1");
+        anyhow::ensure!(
+            self.edges <= MAX_EDGES,
+            "edges {} exceeds the topology limit {}",
+            self.edges,
+            MAX_EDGES
+        );
         self.scenario.validate()?;
         Ok(())
     }
@@ -548,6 +574,7 @@ impl FedConfig {
         self.mixed_step2 = a.bool_or("mixed-step2", self.mixed_step2)?;
         self.threads = a.usize_or("threads", self.threads)?;
         self.ckpt_every = a.usize_or("ckpt-every", self.ckpt_every)?;
+        self.edges = a.usize_or("edges", self.edges)?;
         if let Some(e) = a.get("engine") {
             self.engine = EngineKind::parse(e)
                 .ok_or_else(|| anyhow::anyhow!("bad --engine {e:?} (sync|async)"))?;
@@ -982,6 +1009,29 @@ mod tests {
         let mut c = FedConfig::default();
         c.apply_json(&j).unwrap();
         assert_eq!(c.ckpt_every, 3);
+    }
+
+    #[test]
+    fn edges_override_and_bounds() {
+        let argv: Vec<String> = "--edges 4".split_whitespace().map(String::from).collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = FedConfig::default();
+        assert_eq!(c.edges, 1); // default: flat topology (trace-compatible)
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.edges, 4);
+        // also flows through JSON configs
+        let j = Json::parse(r#"{"edges": 16}"#).unwrap();
+        let mut c = FedConfig::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.edges, 16);
+        // 0 edges is meaningless, and E is capped
+        let mut c = FedConfig::default();
+        c.edges = 0;
+        assert!(c.validate().is_err());
+        c.edges = MAX_EDGES;
+        assert!(c.validate().is_ok());
+        c.edges = MAX_EDGES + 1;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -144,5 +144,9 @@ mod tests {
             probes[1] > probes[0],
             "adaptive must issue more probes than uniform: {probes:?}"
         );
+        // schema drift: the csv's rows match its header arity
+        let rows =
+            crate::exp::common::check_csv_arity("runs/adaptive_ablation.csv").unwrap();
+        assert!(rows > 0, "adaptive_ablation.csv has no data rows");
     }
 }

@@ -148,5 +148,9 @@ mod tests {
             async_stales.iter().any(|&s| s > 0.0),
             "the edge-spectrum fleet must produce stale folds: {async_stales:?}"
         );
+        // schema drift: the csv's rows match its header arity
+        let rows =
+            crate::exp::common::check_csv_arity("runs/async_ablation.csv").unwrap();
+        assert!(rows > 0, "async_ablation.csv has no data rows");
     }
 }

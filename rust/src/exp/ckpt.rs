@@ -120,5 +120,8 @@ mod tests {
             let cells: Vec<&str> = line.split('|').map(str::trim).collect();
             assert_eq!(cells[3], "0.0000", "off row must charge no catch-up: {line}");
         }
+        // schema drift: the csv's rows match its 9-column header
+        let rows = crate::exp::common::check_csv_arity("runs/ckpt_ablation.csv").unwrap();
+        assert!(rows > 0, "ckpt_ablation.csv has no data rows");
     }
 }

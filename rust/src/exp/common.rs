@@ -257,6 +257,32 @@ pub fn run_path(name: &str) -> String {
     format!("runs/{name}")
 }
 
+/// Schema-drift check shared by the runner smoke tests: parse an emitted
+/// CSV artifact and require every data row to carry exactly the header's
+/// field count. Returns the data-row count so callers can also assert the
+/// file is non-trivial. Fields are split naively on ','; the runners'
+/// emitted values (names, labels, numbers) never contain embedded commas,
+/// and a quoted-escape sneaking in would fail here — which is the point.
+pub fn check_csv_arity(path: &str) -> anyhow::Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("{path}: empty csv"))?;
+    let cols = header.split(',').count();
+    anyhow::ensure!(cols >= 2, "{path}: degenerate {cols}-column header");
+    let mut rows = 0;
+    for line in lines {
+        let got = line.split(',').count();
+        anyhow::ensure!(
+            got == cols,
+            "{path}: row has {got} fields, header has {cols}: {line}"
+        );
+        rows += 1;
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

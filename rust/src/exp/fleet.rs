@@ -210,6 +210,10 @@ mod tests {
             !md.contains("| 10000000 | materialized |"),
             "the 1e7 materialized row must not exist"
         );
+        // schema drift: the csv's rows match its header arity
+        let rows =
+            crate::exp::common::check_csv_arity("runs/fleet_scaling.csv").unwrap();
+        assert!(rows > 0, "fleet_scaling.csv has no data rows");
         let csv = std::fs::read_to_string("runs/fleet_scaling.csv").unwrap();
         assert!(csv.starts_with("clients,mode,setup_ms,round_ms_mean,pop_state_bytes"));
         assert!(csv.contains("10000000,lazy,"));

@@ -16,6 +16,7 @@ pub mod fleet;
 pub mod table1;
 pub mod table2;
 pub mod table5;
+pub mod topo;
 
 use crate::config::Scale;
 use crate::data::synthetic::SynthKind;
@@ -55,12 +56,14 @@ pub fn run(
         // repo-native (not paper artifacts, so not in ALL_IDS): the
         // checkpoint-cadence ablation under a churn fleet, the adaptive-S
         // / variance-guard ablation under a capability spread, the
-        // buffered-async staleness ablation, and the population-scaling
-        // sweep over the lazy fleet layer
+        // buffered-async staleness ablation, the population-scaling
+        // sweep over the lazy fleet layer, and the two-tier topology
+        // sweep over edge-aggregator counts
         "ckpt" => ckpt::run(scale, scenario),
         "adaptive" => adaptive::run(scale, scenario),
         "async" => asynch::run(scale, scenario),
         "fleet" => fleet::run(scale, scenario),
+        "topo" => topo::run(scale, scenario),
         "all" => {
             let mut out = String::new();
             for id in ALL_IDS {
@@ -72,7 +75,7 @@ pub fn run(
         }
         _ => anyhow::bail!(
             "unknown experiment {id:?}; available: {:?}, \"ckpt\", \"adaptive\", \
-             \"async\", \"fleet\", or \"all\"",
+             \"async\", \"fleet\", \"topo\", or \"all\"",
             ALL_IDS
         ),
     }

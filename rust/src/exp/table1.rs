@@ -111,5 +111,14 @@ mod tests {
         assert!(md.contains("44.7"));
         assert!(md.contains("89.4"));
         assert!(md.contains("reduction"));
+        // schema drift for the CSV-less runner: every rendered markdown
+        // table row carries the 4-column header's cell count
+        for line in md.lines().filter(|l| l.starts_with('|') && !l.starts_with("|-")) {
+            assert_eq!(
+                line.matches('|').count(),
+                5,
+                "table row drifted from the 4-column header: {line}"
+            );
+        }
     }
 }

@@ -135,8 +135,10 @@ mod tests {
         assert!(md.contains("High Res Only"));
         assert!(md.contains("HeteroFL"));
         assert!(md.contains("10/90"));
-        // csv written
-        assert!(std::path::Path::new("runs/table2.csv").exists());
+        // csv written, and every row matches the 5-column header (schema
+        // drift between the header list and the row pushes fails loudly)
+        let rows = crate::exp::common::check_csv_arity("runs/table2.csv").unwrap();
+        assert!(rows > 0, "table2.csv has no data rows");
     }
 
     #[test]

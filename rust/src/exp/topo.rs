@@ -1,0 +1,216 @@
+//! Topology-scaling run (`zowarmup exp topo`): sweep the edge-aggregator
+//! count E ∈ {1, 4, 16} across population sizes N up to 10⁷ (lazy fleet
+//! path) under a geo-distributed scenario, and measure what the two-tier
+//! topology costs and loses — per-round wall time, the per-edge traffic
+//! split, and the cohort drops a dark edge inflicts (DESIGN.md §13).
+//!
+//! Expected shape: the E=1 column is the flat baseline (bit-identical to
+//! the historical engine — the equivalence harness in
+//! `tests/integration_matrix.rs` pins that, this sweep only reports it);
+//! growing E leaves total bytes intact on plain fleets (the two-tier
+//! fold is bit-identical, only attribution changes) while geo scenarios
+//! diverge: edge deadline overrides cut stragglers, edge outages drop
+//! whole cohorts (`edge_drops`), and the per-edge ledger shows which
+//! region's backhaul carries the round. Every row asserts the per-edge
+//! ledger sums back to the flat totals — the reduction invariant the
+//! attribution layer guarantees.
+
+use std::sync::Arc;
+
+use crate::config::Scale;
+use crate::data::loader::Source;
+use crate::data::synthetic::{train_test, SynthKind};
+use crate::exp::common::{linear_lrs, probe_backend, run_path};
+use crate::fed::server::Federation;
+use crate::metrics::MdTable;
+use crate::model::params::ParamVec;
+use crate::sim::Scenario;
+use crate::util::csv::CsvWriter;
+
+/// Population sizes swept (N ∈ {1e3, 1e5, 1e7}; all lazy — the topology
+/// layer rides on the O(sampled) fleet path).
+pub const TOPO_NS: [usize; 3] = [1_000, 100_000, 10_000_000];
+
+/// Edge-aggregator counts swept.
+pub const TOPO_ES: [usize; 3] = [1, 4, 16];
+
+/// ZO participants per round in the sweep.
+const TOPO_K: usize = 64;
+
+/// Rounds measured per cell (pure ZO; wall time is the per-round mean).
+const TOPO_ROUNDS: usize = 4;
+
+pub fn run(scale: Scale, scenario: &Scenario) -> anyhow::Result<String> {
+    run_sweep(scale, scenario, &TOPO_NS, &TOPO_ES)
+}
+
+/// The sweep body, parameterized over the population and edge counts so
+/// the smoke test can run a genuinely reduced sweep through the
+/// identical code path.
+fn run_sweep(
+    scale: Scale,
+    scenario: &Scenario,
+    ns: &[usize],
+    es: &[usize],
+) -> anyhow::Result<String> {
+    // the topology run needs per-edge links/deadlines/failures; an
+    // unset/binary --scenario substitutes the geo preset, out loud, like
+    // exp fleet does for its composition
+    let scenario = if *scenario == Scenario::Binary {
+        eprintln!(
+            "[exp topo] binary fleet declares no edges — substituting the \
+             `geo-iot` preset (pass a custom --scenario to override)"
+        );
+        Scenario::preset("geo-iot").expect("bundled preset")
+    } else {
+        scenario.clone()
+    };
+    let data_cfg = scale.data();
+    let backend = probe_backend(SynthKind::Synth10.classes());
+    let mut out = format!(
+        "## Topology scaling — two-tier edge aggregation vs E (fleet: {})\n\n",
+        scenario.name()
+    );
+    let mut t = MdTable::new(&[
+        "clients",
+        "edges",
+        "round ms (mean)",
+        "MB up",
+        "MB down",
+        "dropped",
+        "edge drops",
+    ]);
+    let mut csv = CsvWriter::create(
+        run_path("topo_scaling.csv"),
+        &[
+            "clients", "edges", "scenario", "round_ms_mean", "bytes_up", "bytes_down",
+            "catch_up_down", "dropped", "edge_drops", "edge_up_sum", "edge_down_sum",
+        ],
+    )?;
+    for &n in ns {
+        for &e in es {
+            let mut cfg = scale.fed();
+            linear_lrs(&mut cfg);
+            cfg.clients = n;
+            cfg.scenario = scenario.clone();
+            cfg.edges = e;
+            cfg.population = crate::config::PopulationMode::Lazy;
+            cfg.pivot = 0; // pure ZO: the two-tier fold is the subject
+            cfg.rounds_total = TOPO_ROUNDS;
+            cfg.sample_zo = TOPO_K.min(n);
+            cfg.eval_every = TOPO_ROUNDS + 1; // eval only at round 0
+            let (train, test) = train_test(
+                SynthKind::Synth10,
+                data_cfg.n_train,
+                data_cfg.n_test,
+                cfg.seed,
+            );
+            let init = ParamVec::zeros(backend.dim());
+            let mut fed = Federation::new_lazy(
+                cfg,
+                &backend,
+                Source::Image(Arc::new(train)),
+                Source::Image(Arc::new(test)),
+                init,
+            )?;
+            fed.run()?;
+            let round_ms: f64 = fed.log.rounds.iter().map(|r| r.wall_ms).sum::<f64>()
+                / fed.log.rounds.len().max(1) as f64;
+            let (up, down) = fed.log.total_bytes();
+            let dropped = fed.log.total_dropped();
+            let edge_drops = fed.log.total_edge_drops();
+            let (edge_up, edge_down, edge_catch) = fed.ledger.edge_totals();
+            // the attribution invariant: per-edge ledgers are an exact
+            // partition of the flat totals (empty for the E=1 flat path)
+            if e > 1 {
+                anyhow::ensure!(
+                    edge_up == fed.ledger.up_total && edge_down == fed.ledger.down_total,
+                    "per-edge ledger ({edge_up}, {edge_down}) != flat totals \
+                     ({}, {}) at N={n} E={e}",
+                    fed.ledger.up_total,
+                    fed.ledger.down_total,
+                );
+                anyhow::ensure!(
+                    edge_catch == fed.ledger.catch_up_down_total,
+                    "per-edge catch-up {edge_catch} != flat {} at N={n} E={e}",
+                    fed.ledger.catch_up_down_total,
+                );
+            }
+            t.row(vec![
+                n.to_string(),
+                e.to_string(),
+                format!("{round_ms:.1}"),
+                format!("{:.3}", up as f64 / 1e6),
+                format!("{:.3}", down as f64 / 1e6),
+                dropped.to_string(),
+                edge_drops.to_string(),
+            ]);
+            csv.row(&[
+                n.to_string(),
+                e.to_string(),
+                scenario.name().to_string(),
+                format!("{round_ms:.3}"),
+                up.to_string(),
+                down.to_string(),
+                fed.log.total_catch_up_down().to_string(),
+                dropped.to_string(),
+                edge_drops.to_string(),
+                edge_up.to_string(),
+                edge_down.to_string(),
+            ])?;
+            eprintln!(
+                "[exp topo] N={n} E={e}: round {round_ms:.1} ms, \
+                 up {up} B, down {down} B, edge drops {edge_drops}"
+            );
+        }
+    }
+    csv.flush()?;
+    out.push_str(&t.render());
+    out.push_str(
+        "\nExpected shape: E=1 is the flat baseline; under geo scenarios \
+         larger E trades whole-cohort edge outages (edge drops) against \
+         per-region deadlines and backhaul attribution, while the per-edge \
+         ledger always sums exactly to the flat totals. \
+         CSV: runs/topo_scaling.csv.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topo_scaling_smoke_covers_flat_and_two_tier_rows() {
+        // a genuinely reduced sweep through the production code path:
+        // the flat baseline, a two-tier cell, and the tentpole 1e7 cell
+        let md = run_sweep(
+            Scale::Smoke,
+            &Scenario::default(),
+            &[1_000, 10_000_000],
+            &[1, 4],
+        )
+        .unwrap();
+        assert!(md.contains("| 1000 | 1 |"));
+        assert!(md.contains("| 1000 | 4 |"));
+        assert!(md.contains("| 10000000 | 4 |"));
+        let csv = std::fs::read_to_string("runs/topo_scaling.csv").unwrap();
+        assert!(csv.starts_with(
+            "clients,edges,scenario,round_ms_mean,bytes_up,bytes_down"
+        ));
+        assert!(csv.contains("10000000,4,geo-iot,"));
+        // schema drift: every row carries exactly the header's arity
+        let rows =
+            crate::exp::common::check_csv_arity("runs/topo_scaling.csv").unwrap();
+        assert_eq!(rows, 4, "2 Ns x 2 Es");
+        // the E>1 rows' per-edge sums equal the flat byte columns (the
+        // runner itself ensures it; re-checked here from the artifact)
+        for line in csv.lines().skip(1) {
+            let f: Vec<&str> = line.split(',').collect();
+            if f[1] != "1" {
+                assert_eq!(f[4], f[9], "edge_up_sum != bytes_up: {line}");
+                assert_eq!(f[5], f[10], "edge_down_sum != bytes_down: {line}");
+            }
+        }
+    }
+}

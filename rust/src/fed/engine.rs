@@ -58,8 +58,8 @@ use crate::model::backend::{LossSums, ModelBackend};
 use crate::model::params::{perturb_axpy_many_sharded_kernel, ParamVec};
 use crate::sim;
 use crate::zo::{
-    self, staleness_multipliers, zo_round_ledger_outcomes, zo_update_items_weighted,
-    ZoClientCharge, ZoContribution,
+    self, staleness_multipliers, zo_round_ledger_outcomes, zo_round_ledger_outcomes_per_edge,
+    zo_update_items_two_tier, zo_update_items_weighted, ZoClientCharge, ZoContribution,
 };
 
 /// One folded completion event — the engine's deterministic trace unit.
@@ -100,6 +100,10 @@ struct InFlight {
     /// logical round at dispatch — the sync-ledger round a completed
     /// catch-up download brings the client to
     dispatch_round: usize,
+    /// the edge aggregator this dispatch routes through (two-tier
+    /// topology; 0 in flat runs) — its completion lands in that edge's
+    /// slice of the round buffer and its charges book on that edge
+    edge: usize,
     /// catch-up bytes fronting the download leg (`ckpt` subsystem)
     catch_bytes: u64,
     /// wire/probe charges, resolved at dispatch from the simulated
@@ -180,7 +184,20 @@ struct Buffered {
     version: usize,
     /// whether its download leg covered the full catch-up payload
     caught_up: bool,
+    /// the edge whose buffer this completion routed through
+    edge: usize,
     job: PendingJob,
+}
+
+/// What became of one dispatch attempt (see [`Federation::dispatch_one`]).
+enum DispatchOutcome {
+    /// in flight: a completion event is on the heap
+    InFlight,
+    /// refused at classification (absent / below the ZO footprint)
+    Refused,
+    /// the sampled client's edge aggregator is down this logical round —
+    /// its whole cohort is unreachable (scenario edge modeling only)
+    EdgeDown,
 }
 
 impl<'b, B: ModelBackend> Federation<'b, B> {
@@ -207,8 +224,9 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     fn async_round_inner(&mut self, st: &mut AsyncState) -> anyhow::Result<RoundSummary> {
         let k = self.cfg.buffer_k();
         let cslots = self.cfg.async_concurrency();
-        let deadline = self.cfg.scenario.deadline_ms();
         let d4 = (self.backend.dim() * 4) as u64;
+        let two_tier = self.cfg.edges > 1;
+        let e_slots = if two_tier { self.cfg.edges } else { 0 };
         let round_start = st.now;
         // deterministic give-up bound: a fleet where every pick drops at
         // classification (full-churn rounds) must still terminate — the
@@ -216,22 +234,35 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         let mut dispatches_left = k * 64 + cslots;
 
         let mut dropped = 0usize;
+        let mut edge_drops = 0usize;
         let mut catch_up_down = 0u64;
+        let mut catch_edge = vec![0u64; e_slots];
         let mut charges: Vec<ZoClientCharge> = Vec::new();
+        // the edge each popped charge books on (parallel to `charges`)
+        let mut charge_edges: Vec<usize> = Vec::new();
         let mut buffer: Vec<Buffered> = Vec::with_capacity(k);
         loop {
             // keep the pipeline full
             while st.heap.len() < cslots && dispatches_left > 0 {
                 dispatches_left -= 1;
-                if !self.dispatch_one(st, d4, deadline)? {
-                    dropped += 1;
+                match self.dispatch_one(st, d4)? {
+                    DispatchOutcome::InFlight => {}
+                    DispatchOutcome::Refused => dropped += 1,
+                    DispatchOutcome::EdgeDown => {
+                        dropped += 1;
+                        edge_drops += 1;
+                    }
                 }
             }
             let Some(HeapItem(ev)) = st.heap.pop() else {
                 break; // pipeline dry and no dispatch budget left
             };
             st.now = st.now.max(ev.t_arrive);
-            catch_up_down += ev.charge.seed_down_bytes.min(ev.catch_bytes);
+            let cu = ev.charge.seed_down_bytes.min(ev.catch_bytes);
+            catch_up_down += cu;
+            if two_tier {
+                catch_edge[ev.edge] += cu;
+            }
             let caught_up = ev.charge.seed_down_bytes >= ev.catch_bytes;
             if caught_up {
                 // download legs are ordered catch-up first (see
@@ -248,6 +279,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             });
             let survived = ev.charge.survives;
             charges.push(ev.charge);
+            charge_edges.push(ev.edge);
             if survived {
                 // a malformed survivor event with no deferred job used to
                 // abort the whole fleet run via expect(); degrade it to a
@@ -258,6 +290,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                             cid: ev.cid,
                             version: ev.version,
                             caught_up,
+                            edge: ev.edge,
                             job,
                         });
                         if buffer.len() >= k {
@@ -279,6 +312,9 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             .collect();
         let survivor_info: Vec<(usize, bool)> =
             buffer.iter().map(|b| (b.cid, b.caught_up)).collect();
+        // fold order is pop order; each survivor's contribution routes
+        // through its edge's slice of the buffer (two-tier fold below)
+        let survivor_edges: Vec<usize> = buffer.iter().map(|b| b.edge).collect();
 
         // the exact client path the barrier runs, against each job's own
         // dispatch-time snapshot (determinism rules 1–3 hold: inputs are
@@ -305,13 +341,31 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         // renormalized inside the fold so total step mass is conserved
         let eff_var = zo::effective_variance(&contributions, &self.cfg.zo);
         let mults = staleness_multipliers(&staleness, self.cfg.async_zo.staleness_decay);
-        let items = zo_update_items_weighted(
-            &contributions,
-            Some(&mults),
-            &self.cfg.zo,
-            self.cfg.lr_client_zo,
-            self.cfg.lr_server_zo,
-        );
+        let items = if two_tier {
+            // buffered completions route through their edge's buffer:
+            // each edge partially folds its slice (staleness weights
+            // resolved at the root over the full buffer) and the root
+            // merges in edge-index order — bit-identical to the flat
+            // weighted fold (`zo_update_items_two_tier`)
+            let (_partials, merged) = zo_update_items_two_tier(
+                &contributions,
+                Some(&mults),
+                &survivor_edges,
+                self.cfg.edges,
+                &self.cfg.zo,
+                self.cfg.lr_client_zo,
+                self.cfg.lr_server_zo,
+            );
+            merged
+        } else {
+            zo_update_items_weighted(
+                &contributions,
+                Some(&mults),
+                &self.cfg.zo,
+                self.cfg.lr_client_zo,
+                self.cfg.lr_server_zo,
+            )
+        };
         perturb_axpy_many_sharded_kernel(
             &mut self.global.0,
             &items,
@@ -344,6 +398,25 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         self.ledger.record_round(up, down);
         self.ledger.record_catch_up(catch_up_down);
         self.ledger.record_seeds(seeds_issued as u64);
+        if two_tier {
+            // per-edge sub-attribution of the exact flat totals (no FO
+            // traffic exists under this engine)
+            let per_edge = zo_round_ledger_outcomes_per_edge(
+                &charges,
+                &charge_edges,
+                self.cfg.edges,
+                &[],
+                &[],
+            );
+            for (e, &(eu, ed)) in per_edge.iter().enumerate() {
+                self.ledger.record_edge_round(e, eu, ed);
+            }
+            for (e, &cb) in catch_edge.iter().enumerate() {
+                if cb > 0 {
+                    self.ledger.record_edge_catch_up(e, cb);
+                }
+            }
+        }
         st.gc_snapshots();
 
         let mean_staleness = if staleness.is_empty() {
@@ -359,20 +432,18 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             eff_var,
             staleness: mean_staleness,
             makespan_ms: st.now - round_start,
+            edge_drops,
         })
     }
 
-    /// Sample one client and put its dispatch in flight. Returns `false`
-    /// when classification refuses it (absent / below the ZO footprint)
-    /// — a drop charged to the dispatching round. All randomness is
-    /// keyed by the dispatch sequence number, so redispatching a client
-    /// that just dropped rolls a *fresh* timeline.
-    fn dispatch_one(
-        &mut self,
-        st: &mut AsyncState,
-        d4: u64,
-        deadline: f64,
-    ) -> anyhow::Result<bool> {
+    /// Sample one client and put its dispatch in flight, or report why
+    /// it was refused ([`DispatchOutcome`]) — refusals are drops charged
+    /// to the dispatching round. All randomness is keyed by the dispatch
+    /// sequence number, so redispatching a client that just dropped
+    /// rolls a *fresh* timeline. The client-pick draw is consumed before
+    /// any refusal check, so every refusal kind advances the sampler
+    /// stream identically.
+    fn dispatch_one(&mut self, st: &mut AsyncState, d4: u64) -> anyhow::Result<DispatchOutcome> {
         let seq = st.seq;
         anyhow::ensure!(
             (seq as usize) < zo::MAX_ROUNDS,
@@ -380,15 +451,26 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         );
         st.seq += 1;
         let cid = self.rng.choose(self.cfg.clients, 1)[0];
+        // a down edge aggregator makes its whole cohort unreachable for
+        // this logical round (keyed per-edge trace; inert unless the
+        // scenario models edges)
+        let edge = self.edge_of(cid);
+        if self.cfg.scenario.has_edge_profiles() && self.edge_is_down(edge, self.round) {
+            return Ok(DispatchOutcome::EdgeDown);
+        }
         let profile = self.pop.profile(cid);
         match self.classify(cid, &profile, self.round) {
-            ClientClass::Dropped => return Ok(false),
+            ClientClass::Dropped => return Ok(DispatchOutcome::Refused),
             // unreachable: validate() rejects engine=async + mixed_step2
             // (the FO fold needs the barrier); refuse defensively
-            ClientClass::Fo { .. } => return Ok(false),
+            ClientClass::Fo { .. } => return Ok(DispatchOutcome::Refused),
             ClientClass::Zo => {}
         }
         let cand = self.zo_candidate(cid, profile, d4);
+        // the dispatch runs against its edge's deadline override (equal
+        // to the scenario deadline everywhere the scenario doesn't
+        // model edges)
+        let deadline = self.cfg.scenario.edge_deadline_ms(cand.edge);
         // adaptive probe budget: with a deadline the planner fits each
         // dispatch to it exactly as the barrier does; without one there
         // is no cohort to equalize against (no barrier, no straggler
@@ -419,6 +501,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             cid,
             version: self.model_version,
             dispatch_round: self.round,
+            edge: cand.edge,
             catch_bytes: cand.catch_bytes,
             charge: ZoClientCharge {
                 issued_seeds: n_seeds,
@@ -428,7 +511,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             },
             job,
         }));
-        Ok(true)
+        Ok(DispatchOutcome::InFlight)
     }
 }
 
@@ -462,6 +545,7 @@ mod tests {
             cid: 0,
             version: 0,
             dispatch_round: 0,
+            edge: 0,
             catch_bytes: 0,
             charge: ZoClientCharge {
                 issued_seeds: 0,

@@ -48,8 +48,8 @@ use crate::sim::{self, CapabilityProfile, Scenario};
 use crate::util::pool::{parallel_map_n, resolve_workers};
 use crate::util::rng::Xoshiro256;
 use crate::zo::{
-    zo_round_ledger_outcomes, zo_update_items, zoopt, SeedIssuer, ZoClientCharge,
-    ZoContribution,
+    zo_round_ledger_outcomes, zo_round_ledger_outcomes_per_edge, zo_update_items,
+    zo_update_items_two_tier, zoopt, SeedIssuer, ZoClientCharge, ZoContribution,
 };
 
 /// Full federation state for one training run.
@@ -126,6 +126,12 @@ pub struct RoundSummary {
     /// included); under the async engine, the event-clock span the fold
     /// consumed
     pub makespan_ms: f64,
+    /// sampled clients lost because their *edge aggregator* was down
+    /// this round ([`sim::edge_failed`] against the scenario's
+    /// per-edge failure rate) — a subset of `dropped`. Always 0 unless
+    /// the scenario declares edge profiles (`geo-*` presets / custom
+    /// `"edges"` JSON).
+    pub edge_drops: usize,
 }
 
 /// One sampled ZO participant's resolved pre-round inputs — the unit the
@@ -135,7 +141,12 @@ pub struct RoundSummary {
 /// once per sampled client — the O(sampled) discipline.
 pub(crate) struct ZoCandidate {
     pub(crate) cid: usize,
-    /// the client's capability profile (lazy mode derives it on demand)
+    /// the edge aggregator this client's traffic routes through
+    /// (`sim::edge_of`; 0 in flat runs)
+    pub(crate) edge: usize,
+    /// the client's capability profile (lazy mode derives it on demand),
+    /// bottlenecked through its edge backhaul when the scenario models
+    /// edges ([`sim::edge_adjusted_profile`])
     pub(crate) profile: CapabilityProfile,
     /// local sample count n_j
     pub(crate) n: usize,
@@ -321,6 +332,38 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         resolve_workers(self.cfg.threads)
     }
 
+    /// The edge aggregator client `cid`'s traffic routes through under
+    /// the two-tier topology (`--edges E`). Deterministic keyed
+    /// assignment; 0 for every client in flat runs (`edges == 1`).
+    pub fn edge_of(&self, cid: usize) -> usize {
+        sim::edge_of(cid, self.cfg.edges, self.cfg.seed)
+    }
+
+    /// Whether edge `edge`'s aggregator is down for `round` — its whole
+    /// cohort transmits nothing and counts as `edge_drops`. Only
+    /// scenarios that model edges can fail one (plain scenarios keep
+    /// `--edges E` pure attribution, byte-identical to the flat engine).
+    pub(crate) fn edge_is_down(&self, edge: usize, round: usize) -> bool {
+        match self.cfg.scenario.edge_profile(edge) {
+            Some(ep) => sim::edge_failed(self.cfg.seed, round, edge, ep.failure_rate),
+            None => false,
+        }
+    }
+
+    /// A client's effective capability profile behind its edge: the
+    /// bottleneck of its own link and the edge backhaul when the
+    /// scenario declares edge profiles; the unmodified profile otherwise.
+    pub(crate) fn edge_profile_of(
+        &self,
+        edge: usize,
+        profile: CapabilityProfile,
+    ) -> CapabilityProfile {
+        match self.cfg.scenario.edge_profile(edge) {
+            Some(ep) => sim::edge_adjusted_profile(&profile, ep),
+            None => profile,
+        }
+    }
+
     /// Classify one sampled client for round `round`: the exact
     /// availability → FO-role → ZO-capability decision chain both round
     /// engines share. Consumes no RNG ([`sim::is_available`] derives its
@@ -385,14 +428,26 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         // RNGs and fetch survivor shards, all before the fan-out
         // (determinism rule 1). Only the O(sampled) picked clients ever
         // touch the population layer.
-        let deadline = self.cfg.scenario.deadline_ms();
         let d4 = (self.backend.dim() * 4) as u64;
+        let two_tier = self.cfg.edges > 1;
+        let has_edge_model = self.cfg.scenario.has_edge_profiles();
         let mut jobs: Vec<(usize, usize, ClientData, Xoshiro256)> = Vec::with_capacity(p);
         let (mut up, mut down) = (0u64, 0u64);
+        let mut edge_bytes = vec![(0u64, 0u64); if two_tier { self.cfg.edges } else { 0 }];
         let mut dropped = 0usize;
+        let mut edge_drops = 0usize;
         let mut makespan_ms = 0.0f64;
         for &cid in &picked {
-            let profile = self.pop.profile(cid);
+            let edge = self.edge_of(cid);
+            // a failed edge aggregator loses its whole cohort for the
+            // round before anything is transmitted (keyed per-edge trace;
+            // never fires unless the scenario models edges)
+            if has_edge_model && self.edge_is_down(edge, self.round) {
+                dropped += 1;
+                edge_drops += 1;
+                continue;
+            }
+            let profile = self.edge_profile_of(edge, self.pop.profile(cid));
             let n = self.pop.n_samples(cid);
             // churn trace: late joiners and whole-round absences transmit
             // nothing and stay stale
@@ -401,10 +456,15 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 continue;
             }
             let plan = self.fo_plan(n, d4);
+            let deadline = self.cfg.scenario.edge_deadline_ms(edge);
             let mut trace = round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
             let o = sim::simulate_round(&profile, &plan, self.cost.params, deadline, &mut trace);
             up += o.up_bytes;
             down += o.down_bytes;
+            if two_tier {
+                edge_bytes[edge].0 += o.up_bytes;
+                edge_bytes[edge].1 += o.down_bytes;
+            }
             // barrier semantics: the round lasts until its slowest
             // simulated participant finishes (or is cut)
             makespan_ms = makespan_ms.max(o.sim_ms);
@@ -440,6 +500,13 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         }
         // partial/zero transmissions are already folded into up/down
         self.ledger.record_round(up, down);
+        if two_tier {
+            // split the flat round across the edges it crossed (pure
+            // attribution; sums reduce to (up, down) bit-exactly)
+            for (e, &(eu, ed)) in edge_bytes.iter().enumerate() {
+                self.ledger.record_edge_round(e, eu, ed);
+            }
+        }
         if updates.is_empty() {
             // every sampled client dropped: no aggregate step — the
             // identity round is seed-replayable with an empty item list,
@@ -453,6 +520,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 eff_var: 0.0,
                 staleness: 0.0,
                 makespan_ms,
+                edge_drops,
             });
         }
         let avg = weighted_average(&updates);
@@ -471,6 +539,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             eff_var: 0.0,
             staleness: 0.0,
             makespan_ms,
+            edge_drops,
         })
     }
 
@@ -481,8 +550,14 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     pub(crate) fn zo_candidate(&self, cid: usize, profile: CapabilityProfile, d4: u64) -> ZoCandidate {
         let catch_plan = self.ckpt.catch_up_plan(self.synced.get(cid), self.round, d4);
         let n = self.pop.n_samples(cid);
+        let edge = self.edge_of(cid);
+        // behind a modeled edge the whole timeline — catch-up download
+        // included (served from the edge-local checkpoint cache) — runs
+        // at the bottlenecked rates, so catch-up is charged at edge rates
+        let profile = self.edge_profile_of(edge, profile);
         ZoCandidate {
             cid,
+            edge,
             profile,
             n,
             steps: zo_step_count(n, self.cfg.zo.grad_steps),
@@ -646,15 +721,31 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         // charge. Pure reads; no RNG stream is touched. The population
         // layer is consulted once per sampled client (O(sampled), the
         // fleet-scale contract).
-        let deadline = self.cfg.scenario.deadline_ms();
         let d4 = (self.backend.dim() * 4) as u64;
+        let two_tier = self.cfg.edges > 1;
+        let has_edge_model = self.cfg.scenario.has_edge_profiles();
+        let mut edge_drops = 0usize;
         let mut pendings: Vec<Pending> = Vec::with_capacity(q);
         let mut cands: Vec<ZoCandidate> = Vec::with_capacity(q);
         for &cid in &picked {
+            // a failed edge aggregator loses its whole cohort before
+            // anything transmits (keyed per-edge trace; inert unless the
+            // scenario models edges). The pre-drop is safe for worker
+            // invariance: every skipped client's streams are keyed, so
+            // nothing downstream shifts.
+            let edge = self.edge_of(cid);
+            if has_edge_model && self.edge_is_down(edge, self.round) {
+                edge_drops += 1;
+                pendings.push(Pending::Dropped);
+                continue;
+            }
             let profile = self.pop.profile(cid);
             match self.classify(cid, &profile, self.round) {
                 ClientClass::Dropped => pendings.push(Pending::Dropped),
-                ClientClass::Fo { n } => pendings.push(Pending::Fo(cid, profile, n)),
+                ClientClass::Fo { n } => {
+                    // FO traffic rate-limits at the edge backhaul too
+                    pendings.push(Pending::Fo(cid, self.edge_profile_of(edge, profile), n))
+                }
                 ClientClass::Zo => {
                     // a stale client must first reconstruct the current
                     // global: the server charges the cheaper of snapshot vs
@@ -678,6 +769,13 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         // of (master seed, round, client id) and the sampled profile.
         let mut jobs: Vec<Job> = Vec::with_capacity(q);
         let mut zo_charges: Vec<ZoClientCharge> = Vec::with_capacity(q);
+        // per-edge attribution state (two-tier only): the edge of every
+        // charge in zo_charges order, FO bytes per edge, and the slice
+        // of catch-up downlink each edge's checkpoint cache served
+        let mut charge_edges: Vec<usize> = Vec::with_capacity(q);
+        let e_slots = if two_tier { self.cfg.edges } else { 0 };
+        let (mut fo_up_edge, mut fo_down_edge) = (vec![0u64; e_slots], vec![0u64; e_slots]);
+        let mut catch_edge = vec![0u64; e_slots];
         let (mut fo_up, mut fo_down) = (0u64, 0u64);
         let mut dropped = 0usize;
         let mut catch_up_down = 0u64;
@@ -692,6 +790,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                 Pending::Dropped => dropped += 1,
                 Pending::Fo(cid, profile, n) => {
                     let (cid, n) = (*cid, *n);
+                    let edge = self.edge_of(cid);
+                    let deadline = self.cfg.scenario.edge_deadline_ms(edge);
                     let mut trace =
                         round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
                     let plan = self.fo_plan(n, d4);
@@ -699,6 +799,10 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                         sim::simulate_round(profile, &plan, self.cost.params, deadline, &mut trace);
                     fo_up += o.up_bytes;
                     fo_down += o.down_bytes;
+                    if two_tier {
+                        fo_up_edge[edge] += o.up_bytes;
+                        fo_down_edge[edge] += o.down_bytes;
+                    }
                     makespan_ms = makespan_ms.max(o.sim_ms);
                     if o.down_bytes == plan.down_bytes {
                         // full-weight download = sync to the current round
@@ -721,6 +825,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                     let s_block = budgets[*i];
                     let n_seeds = s_block * c.steps;
                     let plan = self.zo_candidate_plan(c, s_block);
+                    let deadline = self.cfg.scenario.edge_deadline_ms(c.edge);
                     let mut trace =
                         round_client_rng(self.cfg.seed, sim::SIM_SALT, self.round, cid);
                     let o = sim::simulate_round(
@@ -730,9 +835,14 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
                         deadline,
                         &mut trace,
                     );
-                    catch_up_down += o.down_bytes.min(c.catch_bytes);
+                    let cu = o.down_bytes.min(c.catch_bytes);
+                    catch_up_down += cu;
                     seeds_issued += n_seeds;
                     makespan_ms = makespan_ms.max(o.sim_ms);
+                    if two_tier {
+                        catch_edge[c.edge] += cu;
+                    }
+                    charge_edges.push(c.edge);
                     zo_charges.push(ZoClientCharge {
                         issued_seeds: n_seeds,
                         up_bytes: o.up_bytes,
@@ -814,12 +924,32 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         // single artifact shared with the checkpoint seed log: replaying
         // it reproduces this exact update bit for bit, guard and all.
         let eff_var = crate::zo::effective_variance(&contributions, &self.cfg.zo);
-        let items = zo_update_items(
-            &contributions,
-            &self.cfg.zo,
-            self.cfg.lr_client_zo,
-            self.cfg.lr_server_zo,
-        );
+        let items = if two_tier {
+            // two-tier topology: each edge folds its own survivors into a
+            // partial fused artifact, and the root merges the partials in
+            // edge-index order — bit-identical to the flat fold below
+            // (see `zo_update_items_two_tier`'s bit-identity contract)
+            let assign: Vec<usize> =
+                contributions.iter().map(|c| self.edge_of(c.client)).collect();
+            let (_partials, merged) = zo_update_items_two_tier(
+                &contributions,
+                None,
+                &assign,
+                self.cfg.edges,
+                &self.cfg.zo,
+                self.cfg.lr_client_zo,
+                self.cfg.lr_server_zo,
+            );
+            merged
+        } else {
+            // flat topology: the literal historical code path
+            zo_update_items(
+                &contributions,
+                &self.cfg.zo,
+                self.cfg.lr_client_zo,
+                self.cfg.lr_server_zo,
+            )
+        };
         perturb_axpy_many_sharded_kernel(
             &mut self.global.0,
             &items,
@@ -870,6 +1000,25 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
         self.ledger.record_round(up, down);
         self.ledger.record_catch_up(catch_up_down);
         self.ledger.record_seeds(seeds_issued as u64);
+        if two_tier {
+            // per-edge sub-attribution of the exact flat totals above
+            // (catch-up served from each edge's local checkpoint cache)
+            let per_edge = zo_round_ledger_outcomes_per_edge(
+                &zo_charges,
+                &charge_edges,
+                self.cfg.edges,
+                &fo_up_edge,
+                &fo_down_edge,
+            );
+            for (e, &(eu, ed)) in per_edge.iter().enumerate() {
+                self.ledger.record_edge_round(e, eu, ed);
+            }
+            for (e, &cb) in catch_edge.iter().enumerate() {
+                if cb > 0 {
+                    self.ledger.record_edge_catch_up(e, cb);
+                }
+            }
+        }
 
         Ok(RoundSummary {
             train_signal: zo_train_signal(&contributions, &train),
@@ -879,6 +1028,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             eff_var,
             staleness: 0.0,
             makespan_ms,
+            edge_drops,
         })
     }
 
@@ -921,6 +1071,7 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
             staleness: summary.staleness,
             model_version: self.model_version,
             makespan_ms: summary.makespan_ms,
+            edge_drops: summary.edge_drops,
         });
         self.round += 1;
         Ok(())

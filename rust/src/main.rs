@@ -90,8 +90,22 @@ SUBCOMMANDS
                                         0 = 2*buffer-k, the default)
             --arrival-rate R           (async: Poisson arrival jitter in
                                         events/ms; 0 = off, the default)
+            --edges E                  (two-tier topology: partition the
+                                        population across E edge
+                                        aggregators; each edge folds its
+                                        cohort's survivors into a partial
+                                        fused artifact and the root folds
+                                        the partials in edge order —
+                                        bit-identical to the flat fold.
+                                        1 (default) = the flat historical
+                                        path, byte-identical to before.
+                                        Per-edge links/deadlines/failures
+                                        come from the scenario's \"edges\"
+                                        list (geo-iot|geo-phones presets);
+                                        without one, E > 1 is pure
+                                        per-edge ledger attribution)
   exp     regenerate a paper table/figure
-            zowarmup exp <table1..table7|fig3..fig7|ckpt|adaptive|async|fleet|all> [--scale smoke|default|paper]
+            zowarmup exp <table1..table7|fig3..fig7|ckpt|adaptive|async|fleet|topo|all> [--scale smoke|default|paper]
             [--threads N]              (worker threads for every run in
                                         the sweep; 0 = auto)
             [--scenario NAME|FILE]     (capability fleet for every run in

@@ -58,6 +58,10 @@ pub struct RoundRecord {
     /// slowest simulated participant under the sync barrier, the span of
     /// event-clock time the async engine's fold consumed
     pub makespan_ms: f64,
+    /// sampled clients lost to a down edge aggregator this round (subset
+    /// of `dropped`; always 0 unless the scenario models edges — see the
+    /// two-tier topology in `fed::server`)
+    pub edge_drops: usize,
 }
 
 /// Full run history.
@@ -135,6 +139,12 @@ impl RunLog {
         self.rounds.iter().map(|r| r.makespan_ms).sum()
     }
 
+    /// Total sampled clients lost to down edge aggregators over the run
+    /// (two-tier topology view; 0 unless the scenario models edges).
+    pub fn total_edge_drops(&self) -> usize {
+        self.rounds.iter().map(|r| r.edge_drops).sum()
+    }
+
     pub fn total_bytes(&self) -> (u64, u64) {
         (
             self.rounds.iter().map(|r| r.bytes_up).sum(),
@@ -157,7 +167,7 @@ impl RunLog {
             &[
                 "round", "phase", "train_loss", "test_acc", "test_loss", "bytes_up",
                 "bytes_down", "dropped", "catch_up_down", "seeds_issued", "eff_var",
-                "wall_ms", "staleness", "model_version", "makespan_ms",
+                "wall_ms", "staleness", "model_version", "makespan_ms", "edge_drops",
             ],
         )?;
         for r in &self.rounds {
@@ -177,6 +187,7 @@ impl RunLog {
                 format!("{:.3}", r.staleness),
                 r.model_version.to_string(),
                 format!("{:.3}", r.makespan_ms),
+                r.edge_drops.to_string(),
             ])?;
         }
         w.flush()
@@ -243,6 +254,7 @@ mod tests {
             staleness: 0.0,
             model_version: 0,
             makespan_ms: 2.5,
+            edge_drops: 0,
         }
     }
 
@@ -272,7 +284,9 @@ mod tests {
         log.write_csv(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("round,phase,"));
-        assert!(text.contains(",seeds_issued,eff_var,wall_ms,staleness,model_version,makespan_ms"));
+        assert!(text.contains(
+            ",seeds_issued,eff_var,wall_ms,staleness,model_version,makespan_ms,edge_drops"
+        ));
         assert!(text.contains("0,warm,1.000000,0.250000"));
         std::fs::remove_file(path).ok();
     }
@@ -304,7 +318,10 @@ mod tests {
         // the async columns sit strictly after it
         let header: Vec<&str> = text.lines().next().unwrap().split(',').collect();
         assert_eq!(header[11], "wall_ms");
-        assert_eq!(&header[12..], ["staleness", "model_version", "makespan_ms"]);
+        assert_eq!(
+            &header[12..],
+            ["staleness", "model_version", "makespan_ms", "edge_drops"]
+        );
     }
 
     #[test]

@@ -75,6 +75,17 @@ pub const ASYNC_SIM_SALT: u64 = 0xA51_C51D;
 /// or off never perturbs the dispatch timeline draws.
 pub const ARRIVAL_SALT: u64 = 0xA88_14A1;
 
+/// Stream salt of the keyed edge-aggregator assignment ([`edge_of`]) —
+/// the same SplitMix64-hash idiom as [`PROFILE_SALT`] in its own domain,
+/// so partitioning a population across edges never perturbs the profile,
+/// drop, churn or arrival streams.
+pub const EDGE_SALT: u64 = 0xED6E_0F;
+
+/// Stream salt of the per-(round, edge) whole-aggregator failure trace
+/// ([`edge_failed`]) — separate from [`EDGE_SALT`] so the assignment and
+/// the failure draws stay decorrelated.
+pub const EDGE_FAIL_SALT: u64 = 0xED6E_FA11;
+
 /// ms per sample-pass per million parameters at `compute = 1.0`.
 pub const MS_PER_MPARAM_PASS: f64 = 0.1;
 
@@ -323,6 +334,121 @@ pub fn is_available(
 }
 
 // ---------------------------------------------------------------------------
+// edge aggregators (two-tier topology)
+// ---------------------------------------------------------------------------
+
+/// Deterministic keyed assignment of a client to one of `e_count` edge
+/// aggregators — a pure function of `(cid, e_count, seed)`, the same
+/// SplitMix64-hash idiom as [`Scenario::profile_of`] under its own
+/// [`EDGE_SALT`] domain. O(1) per call, so a 10^7-client fleet never
+/// materializes the partition; the round engines evaluate it for the
+/// O(sampled) clients they touch. `e_count <= 1` short-circuits to edge 0
+/// without consuming the stream (the flat topology).
+pub fn edge_of(cid: usize, e_count: usize, seed: u64) -> usize {
+    if e_count <= 1 {
+        return 0;
+    }
+    let mut h = crate::util::rng::SplitMix64(cid as u64);
+    let mut rng = Xoshiro256::seed_from(seed ^ EDGE_SALT ^ h.next_u64());
+    rng.below(e_count)
+}
+
+/// Whole-aggregator failure trace: does edge `edge` sit out round
+/// `round` entirely, dropping its whole sampled cohort? A deterministic
+/// per-(round, edge) draw under [`EDGE_FAIL_SALT`], so edge outages are
+/// reproducible for every worker count and never perturb any per-client
+/// stream. `rate <= 0` (the default — scenarios without edge profiles)
+/// consumes no randomness.
+pub fn edge_failed(master_seed: u64, round: usize, edge: usize, rate: f64) -> bool {
+    if rate <= 0.0 {
+        return false;
+    }
+    let mut rng = crate::fed::client::round_client_rng(master_seed, EDGE_FAIL_SALT, round, edge);
+    rng.next_f64() < rate
+}
+
+/// One regional edge aggregator's link and reliability profile. Scenarios
+/// that declare edge profiles diverge from the flat topology: client
+/// timelines run against the bottleneck of their own link and their
+/// edge's backhaul ([`edge_adjusted_profile`]), the edge's
+/// `deadline_ms` (when set) overrides the scenario deadline for its
+/// cohort, and `failure_rate` drives whole-cohort outages
+/// ([`edge_failed`]). Scenarios without edge profiles keep every
+/// historical trace byte-identical regardless of `--edges`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeProfile {
+    pub name: String,
+    /// backhaul uplink of this aggregator (mbps)
+    pub up_mbps: f64,
+    /// backhaul downlink of this aggregator (mbps) — also the rate the
+    /// edge-local checkpoint cache serves catch-up payloads at
+    pub down_mbps: f64,
+    /// per-cohort round deadline override in simulated ms; 0 = inherit
+    /// the scenario deadline
+    pub deadline_ms: f64,
+    /// per-round probability the whole aggregator is unreachable
+    pub failure_rate: f64,
+}
+
+impl EdgeProfile {
+    fn new(name: &str, up_mbps: f64, down_mbps: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            up_mbps,
+            down_mbps,
+            deadline_ms: 0.0,
+            failure_rate: 0.0,
+        }
+    }
+
+    fn deadline(mut self, ms: f64) -> Self {
+        self.deadline_ms = ms;
+        self
+    }
+
+    fn fails(mut self, rate: f64) -> Self {
+        self.failure_rate = rate;
+        self
+    }
+
+    fn from_json(i: usize, j: &Json) -> anyhow::Result<Self> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("edge{i}"));
+        let num = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("edge {name}: {key} must be a number")),
+            }
+        };
+        Ok(Self {
+            up_mbps: num("up_mbps", 100.0)?,
+            down_mbps: num("down_mbps", 100.0)?,
+            deadline_ms: num("deadline_ms", 0.0)?,
+            failure_rate: num("failure_rate", 0.0)?,
+            name,
+        })
+    }
+}
+
+/// A client's effective capability behind its edge aggregator: the
+/// download/upload rates bottleneck at `min(client link, edge backhaul)`
+/// — the catch-up payload in particular is served from the edge-local
+/// checkpoint cache at the edge's rate, never faster than the client can
+/// receive it. Memory, compute and failure draws are the client's own.
+pub fn edge_adjusted_profile(p: &CapabilityProfile, ep: &EdgeProfile) -> CapabilityProfile {
+    CapabilityProfile {
+        up_mbps: p.up_mbps.min(ep.up_mbps),
+        down_mbps: p.down_mbps.min(ep.down_mbps),
+        ..p.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // scenarios
 // ---------------------------------------------------------------------------
 
@@ -347,6 +473,11 @@ pub struct ScenarioSpec {
     pub tiers: Vec<DeviceTier>,
     /// round deadline in simulated ms; 0.0 = no deadline
     pub deadline_ms: f64,
+    /// regional edge-aggregator profiles (two-tier topology). Empty =
+    /// no edge modeling: `--edges E` then only partitions attribution
+    /// and stays byte-identical to the flat topology. When non-empty,
+    /// edge index `e` resolves to `edges[e % edges.len()]`.
+    pub edges: Vec<EdgeProfile>,
 }
 
 /// How the fleet's capabilities are drawn.
@@ -362,7 +493,7 @@ pub enum Scenario {
 
 /// Preset names accepted by `--scenario` (besides a JSON file path or an
 /// inline `{...}` spec).
-pub const PRESETS: [&str; 7] = [
+pub const PRESETS: [&str; 9] = [
     "binary",
     "uniform-high",
     "edge-spectrum",
@@ -370,6 +501,8 @@ pub const PRESETS: [&str; 7] = [
     "flaky",
     "churn",
     "fleet",
+    "geo-iot",
+    "geo-phones",
 ];
 
 /// Stream salt of the lazy per-client tier draw ([`Scenario::profile_of`])
@@ -396,6 +529,7 @@ impl Scenario {
                 tiers: vec![DeviceTier::new("server", 1.0, MemBudget::FitsBackprop)
                     .net(100.0, 100.0)
                     .speed(4.0)],
+                edges: Vec::new(),
                 deadline_ms: 0.0,
             },
             "edge-spectrum" => ScenarioSpec {
@@ -417,6 +551,7 @@ impl Scenario {
                         .speed(0.25)
                         .drops(0.1),
                 ],
+                edges: Vec::new(),
                 deadline_ms: 0.0,
             },
             // tuned for the linear-probe scale (d ≈ 10⁴): stragglers with
@@ -434,6 +569,7 @@ impl Scenario {
                         .speed(0.01)
                         .drops(0.05),
                 ],
+                edges: Vec::new(),
                 deadline_ms: 8.0,
             },
             "flaky" => ScenarioSpec {
@@ -442,6 +578,7 @@ impl Scenario {
                     .into_iter()
                     .map(|t| t.drops(0.25))
                     .collect(),
+                edges: Vec::new(),
                 deadline_ms: 0.0,
             },
             // the cross-device million-client workload of the related
@@ -462,6 +599,7 @@ impl Scenario {
                         .speed(0.25)
                         .drops(0.02),
                 ],
+                edges: Vec::new(),
                 deadline_ms: 0.0,
             },
             // the late-join / rejoin workload the ckpt subsystem exists
@@ -482,6 +620,59 @@ impl Scenario {
                         .net(8.0, 8.0)
                         .drops(0.1)
                         .joins(8),
+                ],
+                edges: Vec::new(),
+                deadline_ms: 0.0,
+            },
+            // geo-distributed IoT fleet behind regional aggregators: the
+            // device side is the `fleet` composition's low end, but the
+            // per-region backhaul — not the device link — is the
+            // bottleneck, some regions run tighter deadlines, and a
+            // region occasionally goes dark for a whole round
+            // (edge-failure cohort drops). Pair with `--edges 4`.
+            "geo-iot" => ScenarioSpec {
+                name: name.into(),
+                tiers: vec![
+                    DeviceTier::new("gateway", 0.05, MemBudget::FitsBackprop)
+                        .net(50.0, 100.0)
+                        .speed(4.0),
+                    DeviceTier::new("sensor", 0.65, MemBudget::FitsZoOnly)
+                        .net(1.0, 4.0)
+                        .speed(0.25)
+                        .drops(0.05),
+                    DeviceTier::new("meter", 0.3, MemBudget::FitsZoOnly)
+                        .net(0.5, 2.0)
+                        .speed(0.1)
+                        .drops(0.1),
+                ],
+                edges: vec![
+                    EdgeProfile::new("metro", 40.0, 40.0),
+                    EdgeProfile::new("rural", 2.0, 2.0).fails(0.1),
+                    EdgeProfile::new("industrial", 10.0, 10.0).deadline(50.0),
+                    EdgeProfile::new("remote", 1.0, 1.0).deadline(80.0).fails(0.2),
+                ],
+                deadline_ms: 0.0,
+            },
+            // geo-distributed phone fleet: well-provisioned regional
+            // aggregators over the `fleet` phone/backbone mix — edges
+            // barely bottleneck, outages are rare, so this preset is the
+            // "mild" end of the topology spectrum.
+            "geo-phones" => ScenarioSpec {
+                name: name.into(),
+                tiers: vec![
+                    DeviceTier::new("backbone", 0.04, MemBudget::FitsBackprop)
+                        .net(100.0, 100.0)
+                        .speed(8.0),
+                    DeviceTier::new("phone", 0.8, MemBudget::FitsZoOnly).net(5.0, 20.0),
+                    DeviceTier::new("tablet", 0.16, MemBudget::FitsZoOnly)
+                        .net(8.0, 30.0)
+                        .speed(1.5)
+                        .drops(0.02),
+                ],
+                edges: vec![
+                    EdgeProfile::new("region-a", 200.0, 200.0),
+                    EdgeProfile::new("region-b", 100.0, 100.0),
+                    EdgeProfile::new("region-c", 50.0, 50.0).fails(0.02),
                 ],
                 deadline_ms: 0.0,
             },
@@ -529,10 +720,21 @@ impl Scenario {
             .enumerate()
             .map(|(i, t)| DeviceTier::from_json(i, t))
             .collect::<anyhow::Result<Vec<_>>>()?;
+        let edges = match j.get("edges") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("edges must be an array"))?
+                .iter()
+                .enumerate()
+                .map(|(i, e)| EdgeProfile::from_json(i, e))
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
         let sc = Scenario::Custom(ScenarioSpec {
             name,
             tiers,
             deadline_ms,
+            edges,
         });
         sc.validate()?;
         Ok(sc)
@@ -584,7 +786,58 @@ impl Scenario {
             (sum - 1.0).abs() < 1e-6,
             "tier fractions sum to {sum}, expected 1"
         );
+        for e in &spec.edges {
+            anyhow::ensure!(
+                e.up_mbps > 0.0 && e.down_mbps > 0.0,
+                "edge {}: bandwidth must be > 0",
+                e.name
+            );
+            anyhow::ensure!(
+                e.deadline_ms >= 0.0,
+                "edge {}: deadline_ms must be >= 0",
+                e.name
+            );
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&e.failure_rate),
+                "edge {}: failure_rate must be in [0,1]",
+                e.name
+            );
+        }
         Ok(())
+    }
+
+    /// The aggregator profile of edge index `edge` — `None` when the
+    /// scenario declares no edge modeling (the flat-equivalent default).
+    /// With fewer declared profiles than `--edges E`, indices wrap
+    /// (`edge % profiles.len()`), so a 3-profile preset still covers
+    /// E = 16.
+    pub fn edge_profile(&self, edge: usize) -> Option<&EdgeProfile> {
+        match self {
+            Scenario::Binary => None,
+            Scenario::Custom(s) => {
+                if s.edges.is_empty() {
+                    None
+                } else {
+                    Some(&s.edges[edge % s.edges.len()])
+                }
+            }
+        }
+    }
+
+    /// Whether this scenario models edge aggregators at all. `false`
+    /// means `--edges E` is pure attribution: every trace stays
+    /// byte-identical to the flat topology.
+    pub fn has_edge_profiles(&self) -> bool {
+        matches!(self, Scenario::Custom(s) if !s.edges.is_empty())
+    }
+
+    /// The round deadline edge `edge`'s cohort runs under: the edge's
+    /// override when it declares one, the scenario deadline otherwise.
+    pub fn edge_deadline_ms(&self, edge: usize) -> f64 {
+        match self.edge_profile(edge) {
+            Some(ep) if ep.deadline_ms > 0.0 => ep.deadline_ms,
+            _ => self.deadline_ms(),
+        }
     }
 
     /// Per-tier client counts for a fleet of `k`. `hi_count` drives the
@@ -987,6 +1240,109 @@ mod tests {
         let c = s.sample_profiles(30, 0, 6, &cost);
         assert_eq!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn edge_of_is_deterministic_in_range_and_flat_at_one() {
+        for seed in [0u64, 7, 42] {
+            for cid in 0..500usize {
+                // E = 1 is the flat topology: everyone on edge 0
+                assert_eq!(edge_of(cid, 1, seed), 0);
+                for e_count in [2usize, 4, 16] {
+                    let e = edge_of(cid, e_count, seed);
+                    assert!(e < e_count, "edge {e} out of range for E={e_count}");
+                    assert_eq!(e, edge_of(cid, e_count, seed), "must be deterministic");
+                }
+            }
+        }
+        // the partition actually spreads: at E=4 over 500 clients every
+        // edge gets someone (binomial with p=1/4 — a miss would signal a
+        // broken keyed stream, not bad luck)
+        let mut counts = [0usize; 4];
+        for cid in 0..500 {
+            counts[edge_of(cid, 4, 7)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        // different seeds shuffle the assignment
+        let a: Vec<usize> = (0..64).map(|c| edge_of(c, 4, 1)).collect();
+        let b: Vec<usize> = (0..64).map(|c| edge_of(c, 4, 2)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn edge_failure_trace_is_keyed_and_rate_bounded() {
+        // rate 0 never fails and consumes no stream; rate 1 always fails
+        for round in 0..20 {
+            for edge in 0..4 {
+                assert!(!edge_failed(7, round, edge, 0.0));
+                assert!(edge_failed(7, round, edge, 1.0));
+            }
+        }
+        // deterministic per (seed, round, edge); different rounds draw
+        // independently (some flip at rate 0.5 across 64 rounds)
+        let draws: Vec<bool> = (0..64).map(|r| edge_failed(7, r, 1, 0.5)).collect();
+        assert_eq!(draws, (0..64).map(|r| edge_failed(7, r, 1, 0.5)).collect::<Vec<_>>());
+        assert!(draws.iter().any(|&d| d) && draws.iter().any(|&d| !d));
+    }
+
+    #[test]
+    fn edge_adjusted_profile_bottlenecks_bandwidth_only() {
+        let p = profile(10.0, 20.0, 2.0, 0.1);
+        let ep = EdgeProfile::new("m", 5.0, 40.0);
+        let adj = edge_adjusted_profile(&p, &ep);
+        assert_eq!(adj.up_mbps, 5.0, "uplink bottlenecks at the edge");
+        assert_eq!(adj.down_mbps, 20.0, "downlink bottlenecks at the client");
+        assert_eq!(adj.compute, p.compute);
+        assert_eq!(adj.drop_rate, p.drop_rate);
+        assert_eq!(adj.mem_bytes, p.mem_bytes);
+    }
+
+    #[test]
+    fn geo_presets_declare_edges_and_accessors_resolve() {
+        let geo = Scenario::preset("geo-iot").unwrap();
+        assert!(geo.has_edge_profiles());
+        // indices wrap: E = 16 over a 4-profile preset stays covered
+        for e in 0..16 {
+            let ep = geo.edge_profile(e).unwrap();
+            assert_eq!(ep.name, geo.edge_profile(e % 4).unwrap().name);
+        }
+        // deadline override only where the edge declares one
+        assert_eq!(geo.edge_deadline_ms(0), geo.deadline_ms());
+        assert_eq!(geo.edge_deadline_ms(2), 50.0);
+        // flat-compatible scenarios: no edge modeling anywhere
+        for name in ["binary", "fleet", "stragglers"] {
+            let s = Scenario::preset(name).unwrap();
+            assert!(!s.has_edge_profiles(), "{name}");
+            assert!(s.edge_profile(0).is_none(), "{name}");
+            assert_eq!(s.edge_deadline_ms(3), s.deadline_ms(), "{name}");
+        }
+    }
+
+    #[test]
+    fn edge_profiles_parse_from_json_and_validate() {
+        let sc = Scenario::load(
+            r#"{"name": "t", "tiers": [
+                 {"name": "a", "frac": 1.0, "mem": "zo"}],
+               "edges": [
+                 {"name": "e0", "up_mbps": 10, "down_mbps": 10},
+                 {"down_mbps": 5, "deadline_ms": 9, "failure_rate": 0.5}]}"#,
+        )
+        .unwrap();
+        assert!(sc.has_edge_profiles());
+        let e1 = sc.edge_profile(1).unwrap();
+        assert_eq!(e1.name, "edge1");
+        assert_eq!(e1.up_mbps, 100.0);
+        assert_eq!(e1.down_mbps, 5.0);
+        assert_eq!(e1.deadline_ms, 9.0);
+        assert_eq!(e1.failure_rate, 0.5);
+        // invalid edge declarations are rejected
+        for bad in [
+            r#"{"tiers": [{"frac": 1.0, "mem": "zo"}], "edges": [{"up_mbps": 0}]}"#,
+            r#"{"tiers": [{"frac": 1.0, "mem": "zo"}], "edges": [{"failure_rate": 2}]}"#,
+            r#"{"tiers": [{"frac": 1.0, "mem": "zo"}], "edges": [{"deadline_ms": -1}]}"#,
+        ] {
+            assert!(Scenario::load(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]
@@ -1447,6 +1803,7 @@ mod tests {
                     name: "rand".into(),
                     tiers,
                     deadline_ms: 0.0,
+                    edges: Vec::new(),
                 };
                 let sc = Scenario::Custom(spec);
                 sc.validate().map_err(|e| e.to_string())?;

@@ -456,6 +456,28 @@ pub fn zo_update_items_weighted(
     lr_client: f32,
     lr_server: f32,
 ) -> Vec<(u64, f32)> {
+    validate_contributions(contributions);
+    let weights = resolved_weights(contributions, multipliers, cfg);
+    if weights.iter().all(|&w| w == 0.0) {
+        return Vec::new();
+    }
+    // The f32 product preserves bit-compatibility with the historical
+    // single-lr API for grad_steps = 1 runs.
+    let lr_final = lr_client * lr_server;
+    let clip = fold_clip(contributions, cfg);
+    // Gather every (seed, coeff) pair for ONE fused pass over the weights
+    // (perturb_axpy_many) — the updates are linear in w, so order is
+    // immaterial up to f32 rounding (§Perf L3).
+    let mut items: Vec<(u64, f32)> = Vec::new();
+    for (c, &weight) in contributions.iter().zip(&weights) {
+        contribution_items(c, weight, clip, cfg, lr_client, lr_final, &mut items);
+    }
+    items
+}
+
+/// Hard-guard the contribution invariants `zo_update_items` documents
+/// (see its `# Panics` section) — shared by the flat and two-tier folds.
+fn validate_contributions(contributions: &[ZoContribution]) {
     for c in contributions {
         assert!(
             c.s_block > 0,
@@ -477,7 +499,19 @@ pub fn zo_update_items_weighted(
             c.s_block
         );
     }
-    let weights = match multipliers {
+}
+
+/// The fold's final per-contribution weights: guarded
+/// [`contribution_weights`], optionally rescaled by staleness
+/// multipliers and renormalized — computed once over the **whole**
+/// cohort, which is what a partial (per-edge) fold must broadcast from
+/// the root for the two-tier merge to stay bit-identical.
+fn resolved_weights(
+    contributions: &[ZoContribution],
+    multipliers: Option<&[f64]>,
+    cfg: &ZoConfig,
+) -> Vec<f64> {
+    match multipliers {
         None => contribution_weights(contributions, cfg),
         Some(m) => {
             assert_eq!(
@@ -499,41 +533,163 @@ pub fn zo_update_items_weighted(
                 scaled
             }
         }
-    };
-    if weights.iter().all(|&w| w == 0.0) {
-        return Vec::new();
     }
-    // The f32 product preserves bit-compatibility with the historical
-    // single-lr API for grad_steps = 1 runs.
-    let lr_final = lr_client * lr_server;
-    // The Clip guard clamps |ΔL| to the fleet quantile before ghat is
-    // formed; stats::percentile filters NaN, so a poisoned probe cannot
-    // panic the fold.
-    let clip = if cfg.guard == VarianceGuard::Clip {
+}
+
+/// The Clip guard clamps |ΔL| to the fleet quantile before ghat is
+/// formed; stats::percentile filters NaN, so a poisoned probe cannot
+/// panic the fold. Like the weights, the threshold spans the whole
+/// cohort — edge partials receive it from the root.
+fn fold_clip(contributions: &[ZoContribution], cfg: &ZoConfig) -> f64 {
+    if cfg.guard == VarianceGuard::Clip {
         clip_threshold(contributions)
     } else {
         f64::INFINITY
-    };
-    // Gather every (seed, coeff) pair for ONE fused pass over the weights
-    // (perturb_axpy_many) — the updates are linear in w, so order is
-    // immaterial up to f32 rounding (§Perf L3).
-    let mut items: Vec<(u64, f32)> = Vec::new();
-    for (c, &weight) in contributions.iter().zip(&weights) {
-        let blocks = c.seeds.len() / c.s_block;
-        for (i, &seed) in c.seeds.iter().enumerate() {
-            let block = i / c.s_block;
-            let lr = if block + 1 == blocks { lr_final } else { lr_client };
-            let dl = if cfg.guard == VarianceGuard::Clip {
-                c.delta_l[i].clamp(-clip, clip)
-            } else {
-                c.delta_l[i]
-            };
-            let ghat = dl / (2.0 * cfg.eps as f64);
-            let coeff = -(lr as f64) * weight * ghat / c.s_block as f64;
-            items.push((seed, coeff as f32));
+    }
+}
+
+/// Form one contribution's fused (seed, coeff) items given its resolved
+/// cohort weight and the cohort clip threshold. Self-contained per
+/// contribution — the property that makes the per-edge partial fold
+/// bit-identical to the flat fold: every coefficient depends only on
+/// `(contribution, weight, clip, cfg, lrs)`, never on which aggregator
+/// formed it.
+fn contribution_items(
+    c: &ZoContribution,
+    weight: f64,
+    clip: f64,
+    cfg: &ZoConfig,
+    lr_client: f32,
+    lr_final: f32,
+    items: &mut Vec<(u64, f32)>,
+) {
+    let blocks = c.seeds.len() / c.s_block;
+    for (i, &seed) in c.seeds.iter().enumerate() {
+        let block = i / c.s_block;
+        let lr = if block + 1 == blocks { lr_final } else { lr_client };
+        let dl = if cfg.guard == VarianceGuard::Clip {
+            c.delta_l[i].clamp(-clip, clip)
+        } else {
+            c.delta_l[i]
+        };
+        let ghat = dl / (2.0 * cfg.eps as f64);
+        let coeff = -(lr as f64) * weight * ghat / c.s_block as f64;
+        items.push((seed, coeff as f32));
+    }
+}
+
+/// One edge aggregator's partial fused (seed, coeff) artifact: its own
+/// cohort's items (contribution-contiguous, in cohort fold order) plus
+/// the fold-order positions and per-contribution item counts the root
+/// needs to splice the partials back together.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgePartial {
+    pub edge: usize,
+    /// positions of this edge's contributions in the round's fold order
+    pub positions: Vec<usize>,
+    /// item count per contribution (block boundaries for the root merge)
+    pub counts: Vec<usize>,
+    /// fused (seed, coeff) items, one contiguous block per contribution
+    pub items: Vec<(u64, f32)>,
+}
+
+/// The hierarchical two-tier ZOUPDATE fold: partition `contributions`
+/// across `e_count` edge aggregators (`edge_assign[i]` = the edge of
+/// contribution `i`, e.g. [`crate::sim::edge_of`] of its client id),
+/// let each edge form its cohort's partial artifact, and merge the
+/// partials at the root — returning both the per-edge partials and the
+/// merged item list.
+///
+/// **Bit-identity contract** (the equivalence-harness centerpiece): the
+/// merged list equals [`zo_update_items_weighted`] over the same inputs
+/// bit for bit, for every `e_count` and every assignment. Two root
+/// broadcasts make that possible — the resolved cohort weights and the
+/// cohort clip threshold are computed over the *full* round (they
+/// normalize over every contribution, so no edge could compute them
+/// locally) — and the root folds the partials in edge-index order, each
+/// contribution's item block landing at its fold-order position
+/// ([`merge_edge_partials`]). Since each coefficient depends only on its
+/// own contribution plus the broadcast context ([`contribution_items`]),
+/// the partition is invisible to the merged artifact, the applied
+/// parameter update, the checkpoint seed log, and the broadcast
+/// accounting.
+pub fn zo_update_items_two_tier(
+    contributions: &[ZoContribution],
+    multipliers: Option<&[f64]>,
+    edge_assign: &[usize],
+    e_count: usize,
+    cfg: &ZoConfig,
+    lr_client: f32,
+    lr_server: f32,
+) -> (Vec<EdgePartial>, Vec<(u64, f32)>) {
+    assert_eq!(
+        edge_assign.len(),
+        contributions.len(),
+        "{} edge assignments for {} contributions",
+        edge_assign.len(),
+        contributions.len()
+    );
+    validate_contributions(contributions);
+    let e_count = e_count.max(1);
+    let mut partials: Vec<EdgePartial> = (0..e_count)
+        .map(|edge| EdgePartial {
+            edge,
+            positions: Vec::new(),
+            counts: Vec::new(),
+            items: Vec::new(),
+        })
+        .collect();
+    let weights = resolved_weights(contributions, multipliers, cfg);
+    if weights.iter().all(|&w| w == 0.0) {
+        // the identity update: every partial (and the merge) is empty,
+        // matching the flat fold's early return
+        return (partials, Vec::new());
+    }
+    let lr_final = lr_client * lr_server;
+    let clip = fold_clip(contributions, cfg);
+    for (pos, ((c, &weight), &edge)) in contributions
+        .iter()
+        .zip(&weights)
+        .zip(edge_assign)
+        .enumerate()
+    {
+        assert!(edge < e_count, "contribution {pos} assigned to edge {edge} of {e_count}");
+        let p = &mut partials[edge];
+        let before = p.items.len();
+        contribution_items(c, weight, clip, cfg, lr_client, lr_final, &mut p.items);
+        p.positions.push(pos);
+        p.counts.push(p.items.len() - before);
+    }
+    let merged = merge_edge_partials(&partials, contributions.len());
+    (partials, merged)
+}
+
+/// The root's merge of the two-tier fold: walk the partials in
+/// edge-index order and copy each contribution's item block to its
+/// fold-order offset. The output is the flat fold's item list bit for
+/// bit (see [`zo_update_items_two_tier`]).
+pub fn merge_edge_partials(partials: &[EdgePartial], n_contributions: usize) -> Vec<(u64, f32)> {
+    let mut counts = vec![0usize; n_contributions];
+    for p in partials {
+        debug_assert_eq!(p.positions.len(), p.counts.len());
+        debug_assert_eq!(p.counts.iter().sum::<usize>(), p.items.len());
+        for (&pos, &c) in p.positions.iter().zip(&p.counts) {
+            counts[pos] = c;
         }
     }
-    items
+    let mut offsets = vec![0usize; n_contributions + 1];
+    for i in 0..n_contributions {
+        offsets[i + 1] = offsets[i] + counts[i];
+    }
+    let mut merged = vec![(0u64, 0.0f32); offsets[n_contributions]];
+    for p in partials {
+        let mut cursor = 0usize;
+        for (&pos, &c) in p.positions.iter().zip(&p.counts) {
+            merged[offsets[pos]..offsets[pos] + c].copy_from_slice(&p.items[cursor..cursor + c]);
+            cursor += c;
+        }
+    }
+    merged
 }
 
 /// Bytes on the wire for one ZO round, per participating client (measured
@@ -622,6 +778,58 @@ pub fn zo_round_ledger_outcomes(
         + (survivors * surviving_seeds * (8 + 4)) as u64
         + fo_down;
     (up, down)
+}
+
+/// Per-edge attribution of [`zo_round_ledger_outcomes`] under the
+/// two-tier topology: each charge books on its client's edge
+/// (`edge_assign[i]`, e.g. [`crate::sim::edge_of`]), the end-of-round
+/// broadcast — which carries **all** surviving (seed, ΔL) pairs to every
+/// surviving participant regardless of edge — books `surviving_seeds ·
+/// 12` bytes on each survivor's edge, and optional per-edge FO traffic
+/// (mixed §A.4 rounds) is added as-is (`fo_up`/`fo_down` indexed by
+/// edge; short or empty slices read as zero).
+///
+/// **Reduction contract**: summing the returned per-edge `(up, down)`
+/// pairs componentwise reproduces the flat
+/// [`zo_round_ledger_outcomes`] totals bit-exactly (all-integer
+/// arithmetic — the broadcast term partitions as `Σ_e survivors_e ·
+/// surviving_seeds · 12 = survivors · surviving_seeds · 12`), for every
+/// edge count and assignment — pinned by the extended
+/// `prop_ledger_outcomes_additive_under_drops`.
+pub fn zo_round_ledger_outcomes_per_edge(
+    zo: &[ZoClientCharge],
+    edge_assign: &[usize],
+    e_count: usize,
+    fo_up: &[u64],
+    fo_down: &[u64],
+) -> Vec<(u64, u64)> {
+    assert_eq!(
+        edge_assign.len(),
+        zo.len(),
+        "{} edge assignments for {} charges",
+        edge_assign.len(),
+        zo.len()
+    );
+    let e_count = e_count.max(1).max(fo_up.len()).max(fo_down.len());
+    let surviving_seeds: usize = zo
+        .iter()
+        .filter(|c| c.survives)
+        .map(|c| c.issued_seeds)
+        .sum();
+    let mut out = vec![(0u64, 0u64); e_count];
+    for (c, &edge) in zo.iter().zip(edge_assign) {
+        assert!(edge < e_count, "charge assigned to edge {edge} of {e_count}");
+        out[edge].0 += c.up_bytes;
+        out[edge].1 += c.seed_down_bytes;
+        if c.survives {
+            out[edge].1 += (surviving_seeds * (8 + 4)) as u64;
+        }
+    }
+    for (edge, slot) in out.iter_mut().enumerate() {
+        slot.0 += fo_up.get(edge).copied().unwrap_or(0);
+        slot.1 += fo_down.get(edge).copied().unwrap_or(0);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -1150,6 +1358,22 @@ mod tests {
                     join_round: 0,
                     absent_rate: 0.0,
                 };
+                // half the clients sit behind a random edge aggregator
+                // (two-tier topology): their transmissions rate-limit at
+                // the edge backhaul — additivity must survive
+                // edge-adjusted charging too
+                let profile = if rng.below(2) == 0 {
+                    let ep = crate::sim::EdgeProfile {
+                        name: "rand-edge".into(),
+                        up_mbps: 0.01 + rng.next_f64() * 10.0,
+                        down_mbps: 0.01 + rng.next_f64() * 10.0,
+                        deadline_ms: 0.0,
+                        failure_rate: 0.0,
+                    };
+                    crate::sim::edge_adjusted_profile(&profile, &ep)
+                } else {
+                    profile
+                };
                 // catch-up downlink (the ckpt subsystem's min(snapshot,
                 // tail) charge) rides the same download leg as the seed
                 // issue — additivity must hold with it in the plan too
@@ -1207,6 +1431,39 @@ mod tests {
             if mixed != (zo_only.0 + fo_only.0, zo_only.1 + fo_only.1) {
                 return Err(format!("not additive: {mixed:?} vs {zo_only:?}+{fo_only:?}"));
             }
+            // per-edge attribution (two-tier topology): under a random
+            // edge count and a random assignment, per-edge ledgers must
+            // sum bit-exactly to the flat totals — catch-up bytes ride
+            // seed_down_bytes, so they are covered by construction
+            let e_count = 1 + rng.below(8);
+            let assign: Vec<usize> =
+                charges.iter().map(|_| rng.below(e_count)).collect();
+            let fo_up_e: Vec<u64> =
+                (0..e_count).map(|_| rng.below(1 << 18) as u64).collect();
+            let fo_down_e: Vec<u64> =
+                (0..e_count).map(|_| rng.below(1 << 18) as u64).collect();
+            let per_edge = zo_round_ledger_outcomes_per_edge(
+                &charges, &assign, e_count, &fo_up_e, &fo_down_e,
+            );
+            if per_edge.len() != e_count {
+                return Err(format!(
+                    "expected {e_count} edge ledgers, got {}",
+                    per_edge.len()
+                ));
+            }
+            let summed = per_edge
+                .iter()
+                .fold((0u64, 0u64), |acc, e| (acc.0 + e.0, acc.1 + e.1));
+            let flat = zo_round_ledger_outcomes(
+                &charges,
+                fo_up_e.iter().sum(),
+                fo_down_e.iter().sum(),
+            );
+            if summed != flat {
+                return Err(format!(
+                    "per-edge ledgers don't reduce to flat: {summed:?} vs {flat:?} (E={e_count})"
+                ));
+            }
             // with every client surviving at full uniform charges, the
             // per-client model reduces bit-exactly to the aggregate one
             let all: Vec<ZoClientCharge> = charges
@@ -1225,6 +1482,157 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_two_tier_fold_bit_identical_to_flat() {
+        // the tentpole's centerpiece property: for random contributions,
+        // random variance guards, optional staleness multipliers, and
+        // every E in {1, 4, 16} with a random edge assignment, the root's
+        // merge of per-edge partials equals the flat fold BIT FOR BIT —
+        // same seeds, same coefficient bits, same order.
+        use crate::config::VarianceGuard;
+        crate::util::prop::run_prop("zo_two_tier_fold_bit_identity", 120, |g| {
+            let mut rng = g.rng();
+            let n = 1 + rng.below(g.size.max(1).min(12));
+            let mut contributions = Vec::with_capacity(n);
+            for cid in 0..n {
+                let s_block = 1 + rng.below(4);
+                let blocks = 1 + rng.below(3);
+                let len = s_block * blocks;
+                contributions.push(ZoContribution {
+                    client: cid,
+                    seeds: (0..len).map(|_| rng.next_u64()).collect(),
+                    delta_l: (0..len).map(|_| (rng.next_f64() - 0.5) * 4.0).collect(),
+                    // n_samples = 0 is legal (an empty local shard) and
+                    // exercises the all-zero-weight identity early-out
+                    n_samples: rng.below(20),
+                    s_block,
+                });
+            }
+            let cfg = ZoConfig {
+                eps: 1e-3,
+                guard: match rng.below(3) {
+                    0 => VarianceGuard::Off,
+                    1 => VarianceGuard::InvVar,
+                    _ => VarianceGuard::Clip,
+                },
+                ..ZoConfig::default()
+            };
+            let mults: Option<Vec<f64>> = if rng.below(2) == 0 {
+                Some((0..n).map(|_| rng.next_f64()).collect())
+            } else {
+                None
+            };
+            let lr_client = 0.05 + rng.next_f32();
+            let lr_server = 0.05 + rng.next_f32();
+            let flat =
+                zo_update_items_weighted(&contributions, mults.as_deref(), &cfg, lr_client, lr_server);
+            for &e_count in &[1usize, 4, 16] {
+                let assign: Vec<usize> = (0..n).map(|_| rng.below(e_count)).collect();
+                let (partials, merged) = zo_update_items_two_tier(
+                    &contributions,
+                    mults.as_deref(),
+                    &assign,
+                    e_count,
+                    &cfg,
+                    lr_client,
+                    lr_server,
+                );
+                if partials.len() != e_count {
+                    return Err(format!("E={e_count}: {} partials", partials.len()));
+                }
+                if merged.len() != flat.len() {
+                    return Err(format!(
+                        "E={e_count}: merged {} items, flat {}",
+                        merged.len(),
+                        flat.len()
+                    ));
+                }
+                for (i, (m, f)) in merged.iter().zip(&flat).enumerate() {
+                    if m.0 != f.0 || m.1.to_bits() != f.1.to_bits() {
+                        return Err(format!(
+                            "E={e_count} item {i}: two-tier {m:?} != flat {f:?}"
+                        ));
+                    }
+                }
+                // partials partition the artifact: no item counted twice
+                let part_total: usize = partials.iter().map(|p| p.items.len()).sum();
+                if part_total != flat.len() {
+                    return Err(format!(
+                        "E={e_count}: partials carry {part_total} items, flat {}",
+                        flat.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn two_tier_partials_record_fold_positions() {
+        // deterministic splice check: 3 contributions over 2 edges with an
+        // interleaved assignment — each partial holds its cohort's blocks
+        // contiguously, and the merge restores fold order.
+        let mk = |seed: u64, dl: f64| ZoContribution {
+            client: seed as usize,
+            seeds: vec![seed, seed + 1],
+            delta_l: vec![dl, -dl],
+            n_samples: 8,
+            s_block: 2,
+        };
+        let contribs = vec![mk(10, 0.4), mk(20, 0.2), mk(30, 0.6)];
+        let cfg = ZoConfig::default();
+        let assign = vec![1usize, 0, 1];
+        let (partials, merged) =
+            zo_update_items_two_tier(&contribs, None, &assign, 2, &cfg, 1.0, 0.05);
+        assert_eq!(partials.len(), 2);
+        assert_eq!(partials[0].positions, vec![1]);
+        assert_eq!(partials[1].positions, vec![0, 2]);
+        assert_eq!(partials[0].counts, vec![2]);
+        assert_eq!(partials[1].counts, vec![2, 2]);
+        // edge 1's partial holds contribution 0's block then 2's
+        assert_eq!(partials[1].items[0].0, 10);
+        assert_eq!(partials[1].items[2].0, 30);
+        let flat = zo_update_items(&contribs, &cfg, 1.0, 0.05);
+        assert_eq!(merged, flat);
+        assert_eq!(
+            merged.iter().map(|i| i.0).collect::<Vec<_>>(),
+            vec![10, 11, 20, 21, 30, 31]
+        );
+        // degenerate e_count is clamped to one edge holding everything
+        let (p1, m1) = zo_update_items_two_tier(&contribs, None, &[0, 0, 0], 0, &cfg, 1.0, 0.05);
+        assert_eq!(p1.len(), 1);
+        assert_eq!(m1, flat);
+    }
+
+    #[test]
+    fn per_edge_ledger_reduces_to_flat_on_known_charges() {
+        // hand-checked: broadcast down (survivors · surviving_seeds · 12)
+        // lands on each survivor's OWN edge, so the per-edge split of the
+        // flat broadcast term is exact by integer arithmetic.
+        let charges = [
+            ZoClientCharge { issued_seeds: 3, up_bytes: 12, seed_down_bytes: 24, survives: true },
+            ZoClientCharge { issued_seeds: 6, up_bytes: 4, seed_down_bytes: 48, survives: false },
+            ZoClientCharge { issued_seeds: 2, up_bytes: 8, seed_down_bytes: 16, survives: true },
+        ];
+        let assign = [0usize, 1, 1];
+        // surviving_seeds = 3 + 2 = 5; broadcast per survivor = 5*12 = 60
+        let per_edge =
+            zo_round_ledger_outcomes_per_edge(&charges, &assign, 2, &[100, 0], &[0, 200]);
+        assert_eq!(per_edge[0], (12 + 100, 24 + 60));
+        assert_eq!(per_edge[1], (4 + 8, 48 + 16 + 60 + 200));
+        let flat = zo_round_ledger_outcomes(&charges, 100, 200);
+        let sum = per_edge.iter().fold((0, 0), |a, e| (a.0 + e.0, a.1 + e.1));
+        assert_eq!(sum, flat);
+        // empty edge stays zeroed; e_count grows to cover fo slices
+        let one = zo_round_ledger_outcomes_per_edge(&charges, &[0, 0, 0], 1, &[7], &[9]);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0], flat_minus(flat, 100 - 7, 200 - 9));
+    }
+
+    fn flat_minus(t: (u64, u64), du: u64, dd: u64) -> (u64, u64) {
+        (t.0 - du, t.1 - dd)
     }
 
     #[test]

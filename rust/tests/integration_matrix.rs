@@ -1,0 +1,407 @@
+//! Cross-mode equivalence matrix: smoke-train every combination of
+//! {engine sync/async} × {kernel scalar/lanes} × {population
+//! materialized/lazy} × {edges 1/4}, at workers {1, 2, 4}, and pin the
+//! equivalence classes the repo's determinism contract promises:
+//!
+//! * **within every mode**: worker counts are bit-identical — params,
+//!   ledgers, per-round logs, and the checkpoint seed log;
+//! * **edges 1 vs 4** (plain scenario, same everything else): byte-
+//!   identical — the two-tier fold merges edge partials in edge-index
+//!   order back to the exact flat item list, and per-edge ledgers are a
+//!   pure sub-attribution (DESIGN.md §13);
+//! * **lazy vs materialized**: byte-identical when the materialized
+//!   population mirrors the lazy derivation (below the warm enumeration
+//!   threshold, where lazy warm sampling enumerates exactly like the
+//!   materialized path);
+//! * **scalar vs lanes**, **sync vs async**: merely finite — different
+//!   seed schedules / fold semantics, pinned as *different* so an
+//!   accidental unification (or a kernel that silently falls back)
+//!   fails loudly.
+
+use std::sync::Arc;
+
+use zowarmup::config::{EngineKind, FedConfig, KernelKind, Scale};
+use zowarmup::data::dirichlet::dirichlet_split;
+use zowarmup::data::loader::Source;
+use zowarmup::data::synthetic::{train_test, SynthKind};
+use zowarmup::fed::server::{shards_from_partition, Federation};
+use zowarmup::fed::{clients_from_profiles, Population};
+use zowarmup::model::backend::{LinearBackend, ModelBackend};
+use zowarmup::model::params::ParamVec;
+use zowarmup::sim::Scenario;
+
+fn probe() -> LinearBackend {
+    LinearBackend::pooled(32 * 32 * 3, 2, 10, 32)
+}
+
+/// Plain capability spread — a fast FO-capable tier and a slow flaky ZO
+/// tier, NO `edges` list — so `--edges E` stays pure attribution and the
+/// edges-1-vs-4 byte-identity class is exercised, not vacuous.
+fn plain_scenario() -> Scenario {
+    Scenario::load(
+        r#"{"name": "matrix-mix", "deadline_ms": 0,
+            "tiers": [
+              {"name": "fast", "frac": 0.5, "mem": "backprop",
+               "up_mbps": 80, "down_mbps": 80, "compute": 4.0},
+              {"name": "slow", "frac": 0.5, "mem": "zo",
+               "up_mbps": 4, "down_mbps": 8, "compute": 0.4,
+               "drop_rate": 0.15}
+            ]}"#,
+    )
+    .unwrap()
+}
+
+fn base_cfg(threads: usize) -> FedConfig {
+    let mut cfg = Scale::Smoke.fed();
+    cfg.clients = 24;
+    cfg.sample_warm = 4;
+    cfg.sample_zo = 8;
+    cfg.rounds_total = 10;
+    cfg.pivot = 2;
+    cfg.eval_every = 4;
+    cfg.ckpt_every = 2;
+    cfg.threads = threads;
+    cfg.lr_client_warm = 0.06;
+    cfg.lr_client_zo = 1.0;
+    cfg.lr_server_zo = 0.01;
+    cfg.zo.eps = 1e-3;
+    cfg.async_zo.buffer_k = 3;
+    cfg.async_zo.arrival_rate = 0.05;
+    cfg.scenario = plain_scenario();
+    cfg
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Mode {
+    engine: EngineKind,
+    kernel: KernelKind,
+    lazy: bool,
+    edges: usize,
+}
+
+/// Everything a run leaves behind that the contract speaks about.
+struct Outcome {
+    global: ParamVec,
+    log: zowarmup::metrics::RunLog,
+    ledger: zowarmup::comm::CommLedger,
+    /// the live checkpoint seed log: (round, fused items)
+    tail: Vec<(usize, Vec<(u64, f32)>)>,
+}
+
+fn run_mode(m: Mode, threads: usize) -> Outcome {
+    let mut cfg = base_cfg(threads);
+    cfg.engine = m.engine;
+    cfg.zo.kernel = m.kernel;
+    cfg.edges = m.edges;
+    let (train, test) = train_test(SynthKind::Synth10, 400, 120, cfg.seed);
+    let be = probe();
+    let init = ParamVec::zeros(be.dim());
+    let test_src = Source::Image(Arc::new(test));
+    let mut fed = if m.lazy {
+        Federation::new_lazy(cfg, &be, Source::Image(Arc::new(train)), test_src, init)
+            .unwrap()
+    } else {
+        let part = dirichlet_split(&train, cfg.clients, 0.5, cfg.seed);
+        let src = Source::Image(Arc::new(train));
+        let shards = shards_from_partition(&src, &part);
+        Federation::new(cfg, &be, shards, test_src, init).unwrap()
+    };
+    fed.run().unwrap();
+    Outcome {
+        global: fed.global.clone(),
+        log: fed.log.clone(),
+        ledger: fed.ledger.clone(),
+        tail: fed
+            .ckpt
+            .tail_log()
+            .iter()
+            .map(|e| (e.round, e.items.clone()))
+            .collect(),
+    }
+}
+
+/// Bit-level equality of two outcomes (host wall clock excluded).
+fn assert_outcomes_identical(a: &Outcome, b: &Outcome, what: &str) {
+    assert_eq!(a.global, b.global, "{what}: weights");
+    assert_eq!(
+        (a.ledger.up_total, a.ledger.down_total),
+        (b.ledger.up_total, b.ledger.down_total),
+        "{what}: ledger totals"
+    );
+    assert_eq!(a.ledger.per_round, b.ledger.per_round, "{what}: per-round ledger");
+    assert_eq!(
+        a.ledger.catch_up_down_total, b.ledger.catch_up_down_total,
+        "{what}: catch-up"
+    );
+    assert_eq!(a.ledger.seeds_total, b.ledger.seeds_total, "{what}: seeds");
+    assert_eq!(a.log.rounds.len(), b.log.rounds.len(), "{what}: round count");
+    for (x, y) in a.log.rounds.iter().zip(&b.log.rounds) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what}: train");
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{what}: acc");
+        assert_eq!(
+            (x.bytes_up, x.bytes_down, x.dropped, x.catch_up_down, x.seeds_issued),
+            (y.bytes_up, y.bytes_down, y.dropped, y.catch_up_down, y.seeds_issued),
+            "{what}: round bytes/drops"
+        );
+        assert_eq!(x.eff_var.to_bits(), y.eff_var.to_bits(), "{what}: eff_var");
+        assert_eq!(x.staleness.to_bits(), y.staleness.to_bits(), "{what}: staleness");
+        assert_eq!(x.model_version, y.model_version, "{what}: version");
+        assert_eq!(x.makespan_ms.to_bits(), y.makespan_ms.to_bits(), "{what}: makespan");
+        assert_eq!(x.edge_drops, y.edge_drops, "{what}: edge_drops");
+    }
+    assert_eq!(a.tail.len(), b.tail.len(), "{what}: seed-log tail length");
+    for ((ra, ia), (rb, ib)) in a.tail.iter().zip(&b.tail) {
+        assert_eq!(ra, rb, "{what}: tail round");
+        assert_eq!(ia.len(), ib.len(), "{what}: tail items");
+        for (x, y) in ia.iter().zip(ib) {
+            assert_eq!(x.0, y.0, "{what}: tail seed");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "{what}: tail coeff");
+        }
+    }
+}
+
+#[test]
+fn cross_mode_matrix_pins_equivalence_classes() {
+    let engines = [EngineKind::Sync, EngineKind::Async];
+    let kernels = [KernelKind::Scalar, KernelKind::Lanes];
+    let mut outcomes: Vec<(Mode, Outcome)> = Vec::new();
+    for &engine in &engines {
+        for &kernel in &kernels {
+            for &lazy in &[false, true] {
+                for &edges in &[1usize, 4] {
+                    let m = Mode { engine, kernel, lazy, edges };
+                    // thread bit-identity within the mode
+                    let o1 = run_mode(m, 1);
+                    let o2 = run_mode(m, 2);
+                    let o4 = run_mode(m, 4);
+                    assert_outcomes_identical(&o1, &o2, &format!("{m:?} w1-vs-w2"));
+                    assert_outcomes_identical(&o1, &o4, &format!("{m:?} w1-vs-w4"));
+                    assert!(o1.global.is_finite(), "{m:?}: weights finite");
+                    assert!(!o1.tail.is_empty(), "{m:?}: ckpt must log seed rounds");
+                    outcomes.push((m, o1));
+                }
+            }
+        }
+    }
+    let find = |m: Mode| -> &Outcome {
+        &outcomes.iter().find(|(x, _)| *x == m).unwrap().1
+    };
+    for &engine in &engines {
+        for &kernel in &kernels {
+            for &lazy in &[false, true] {
+                // byte-identical pair: edges 1 vs 4 on a plain scenario.
+                // The two-tier fold merges to the flat item list and the
+                // edge ledger is sub-attribution, so every trace matches.
+                let flat = find(Mode { engine, kernel, lazy, edges: 1 });
+                let tiered = find(Mode { engine, kernel, lazy, edges: 4 });
+                let what = format!("{engine:?}/{kernel:?}/lazy={lazy} edges 1-vs-4");
+                assert_outcomes_identical(flat, tiered, &what);
+                // ... and the attribution itself: flat runs keep no
+                // per-edge table, two-tier tables reduce to flat totals
+                assert!(flat.ledger.per_edge.is_empty(), "{what}: flat per-edge table");
+                assert!(!tiered.ledger.per_edge.is_empty(), "{what}: tiered table");
+                let (eu, ed, ec) = tiered.ledger.edge_totals();
+                assert_eq!(
+                    (eu, ed, ec),
+                    (
+                        tiered.ledger.up_total,
+                        tiered.ledger.down_total,
+                        tiered.ledger.catch_up_down_total
+                    ),
+                    "{what}: per-edge reduction"
+                );
+            }
+        }
+        // merely finite: scalar vs lanes run different perturbation
+        // schedules — pinned as different so a silent fallback to the
+        // scalar path can never pass for lane coverage
+        let scalar = find(Mode { engine, kernel: KernelKind::Scalar, lazy: false, edges: 1 });
+        let lanes = find(Mode { engine, kernel: KernelKind::Lanes, lazy: false, edges: 1 });
+        assert_ne!(
+            scalar.global, lanes.global,
+            "{engine:?}: lanes must not collapse into the scalar schedule"
+        );
+    }
+    // merely finite: sync vs async differ (buffered folds, staleness
+    // weights); the async runs must actually exercise staleness
+    let sync = find(Mode {
+        engine: EngineKind::Sync,
+        kernel: KernelKind::Scalar,
+        lazy: false,
+        edges: 1,
+    });
+    let asy = find(Mode {
+        engine: EngineKind::Async,
+        kernel: KernelKind::Scalar,
+        lazy: false,
+        edges: 1,
+    });
+    assert_ne!(sync.global, asy.global, "sync and async must stay distinct modes");
+    assert!(sync.log.rounds.iter().all(|r| r.staleness == 0.0));
+    assert!(asy.log.rounds.iter().any(|r| r.staleness > 0.0));
+}
+
+#[test]
+fn lazy_mirrors_materialized_below_the_enum_threshold() {
+    // byte-identity class: a materialized population holding exactly the
+    // profiles and shards the lazy path derives (the `exp fleet`
+    // materialization) is indistinguishable from the lazy run — below
+    // the warm enumeration threshold lazy sampling IS the materialized
+    // hi-list draw. This pins the population layer's equivalence claim
+    // at the federation level, not just per-accessor.
+    let run = |mirror: bool| {
+        let cfg = base_cfg(2);
+        let (train, test) = train_test(SynthKind::Synth10, 400, 120, cfg.seed);
+        let be = probe();
+        let init = ParamVec::zeros(be.dim());
+        let src = Source::Image(Arc::new(train));
+        let test_src = Source::Image(Arc::new(test));
+        let mut fed = if mirror {
+            let lazy = Population::lazy(
+                cfg.clients,
+                cfg.hi_count(),
+                cfg.seed,
+                cfg.scenario.clone(),
+                be.cost_model(),
+                src,
+            )
+            .unwrap();
+            let shards = (0..cfg.clients).map(|cid| lazy.data(cid)).collect();
+            let profiles = (0..cfg.clients).map(|cid| lazy.profile(cid)).collect();
+            let clients = clients_from_profiles(shards, profiles, &be.cost_model());
+            Federation::with_population(
+                cfg,
+                &be,
+                Population::materialized(clients),
+                test_src,
+                init,
+            )
+            .unwrap()
+        } else {
+            Federation::new_lazy(cfg, &be, src, test_src, init).unwrap()
+        };
+        fed.run().unwrap();
+        (fed.global.clone(), fed.log.clone(), fed.ledger.clone())
+    };
+    let (g_lazy, log_lazy, led_lazy) = run(false);
+    let (g_mat, log_mat, led_mat) = run(true);
+    assert_eq!(g_lazy, g_mat, "mirrored materialization must be byte-identical");
+    assert_eq!(led_lazy.per_round, led_mat.per_round);
+    assert_eq!(led_lazy.catch_up_down_total, led_mat.catch_up_down_total);
+    for (a, b) in log_lazy.rounds.iter().zip(&log_mat.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!((a.dropped, a.seeds_issued), (b.dropped, b.seeds_issued));
+    }
+}
+
+#[test]
+fn two_tier_fold_is_bit_identical_to_flat_at_scale_e() {
+    // acceptance: E ∈ {1, 4, 16} × workers {1, 2, 4} all produce
+    // bit-identical parameters, ledgers and seed logs on a plain
+    // scenario — E=16 over 24 clients leaves some edges empty, which
+    // must be harmless (empty partials, zero ledger rows)
+    let run = |edges: usize, threads: usize| {
+        run_mode(
+            Mode {
+                engine: EngineKind::Sync,
+                kernel: KernelKind::Scalar,
+                lazy: false,
+                edges,
+            },
+            threads,
+        )
+    };
+    let flat = run(1, 1);
+    for edges in [1usize, 4, 16] {
+        for threads in [1usize, 2, 4] {
+            let o = run(edges, threads);
+            assert_outcomes_identical(
+                &flat,
+                &o,
+                &format!("E={edges} w={threads} vs flat"),
+            );
+            if edges > 1 {
+                let (eu, ed, ec) = o.ledger.edge_totals();
+                assert_eq!(
+                    (eu, ed, ec),
+                    (
+                        o.ledger.up_total,
+                        o.ledger.down_total,
+                        o.ledger.catch_up_down_total
+                    ),
+                    "E={edges} w={threads}: per-edge reduction"
+                );
+                assert_eq!(o.ledger.per_edge.len(), edges, "table spans every edge");
+            }
+        }
+    }
+    assert!(flat.ledger.catch_up_down_total > 0, "churny fleet must pay catch-up");
+}
+
+#[test]
+fn edge_failures_drop_whole_cohorts_only_under_edge_scenarios() {
+    // the divergence half of the tentpole: a geo scenario declares edge
+    // profiles, so a down aggregator drops its whole sampled cohort and
+    // the round reports them as edge_drops (a subset of dropped) — while
+    // the per-edge ledger still reduces exactly to the flat totals.
+    let run = |edges: usize, engine: EngineKind, threads: usize| {
+        let mut cfg = base_cfg(threads);
+        cfg.engine = engine;
+        cfg.edges = edges;
+        // enough rounds that geo-iot's failing regions (rates 0.1/0.2,
+        // keyed per (seed, round, edge)) all but surely go dark at least
+        // once with a sampled cohort on them
+        cfg.rounds_total = 32;
+        // pure ZO: geo-iot's FO gateway tier is 5% of the fleet, too thin
+        // to guarantee a warm-capable client at this population size
+        cfg.pivot = 0;
+        cfg.scenario = Scenario::preset("geo-iot").unwrap();
+        let (train, test) = train_test(SynthKind::Synth10, 400, 120, cfg.seed);
+        let be = probe();
+        let init = ParamVec::zeros(be.dim());
+        let part = dirichlet_split(&train, cfg.clients, 0.5, cfg.seed);
+        let src = Source::Image(Arc::new(train));
+        let shards = shards_from_partition(&src, &part);
+        let mut fed =
+            Federation::new(cfg, &be, shards, Source::Image(Arc::new(test)), init)
+                .unwrap();
+        fed.run().unwrap();
+        (fed.log.clone(), fed.ledger.clone(), fed.global.clone())
+    };
+    for engine in [EngineKind::Sync, EngineKind::Async] {
+        let (log, ledger, global) = run(4, engine, 1);
+        assert!(global.is_finite(), "{engine:?}");
+        assert!(
+            log.total_edge_drops() > 0,
+            "{engine:?}: geo-iot's failing regions must cost whole cohorts"
+        );
+        for r in &log.rounds {
+            assert!(
+                r.edge_drops <= r.dropped,
+                "{engine:?}: edge drops are a subset of drops (round {})",
+                r.round
+            );
+        }
+        let (eu, ed, ec) = ledger.edge_totals();
+        assert_eq!(
+            (eu, ed, ec),
+            (ledger.up_total, ledger.down_total, ledger.catch_up_down_total),
+            "{engine:?}: per-edge reduction under edge failures"
+        );
+        // determinism survives the divergent topology
+        let (log4, ledger4, global4) = run(4, engine, 4);
+        assert_eq!(global, global4, "{engine:?}: weights vs threads");
+        assert_eq!(ledger.per_round, ledger4.per_round, "{engine:?}");
+        assert_eq!(ledger.per_edge, ledger4.per_edge, "{engine:?}");
+        assert_eq!(
+            log.total_edge_drops(),
+            log4.total_edge_drops(),
+            "{engine:?}: edge drops vs threads"
+        );
+    }
+    // flat runs under the same geo scenario: edge 0 (metro) never fails,
+    // so a single aggregator run records no edge drops at all
+    let (log_flat, ledger_flat, _) = run(1, EngineKind::Sync, 1);
+    assert_eq!(log_flat.total_edge_drops(), 0, "metro never goes dark");
+    assert!(ledger_flat.per_edge.is_empty(), "flat runs keep no per-edge table");
+}

@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Unit tests for tools/bench_gate.py (stdlib unittest; CI lint job).
+
+The gate guards the bench trajectory, so its own exit-code contract is
+pinned here: regression -> 1, stale-fast baseline -> 0 with a re-bless
+notice, unmeasured baseline -> 0 skip, and --require failing closed
+(exit 1) even while the baseline is still the unmeasured placeholder.
+
+Run directly:  python3 tools/test_bench_gate.py
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+from unittest import mock
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_gate  # noqa: E402
+
+
+def group(name, rows):
+    """A util::bench::Bench::to_json-shaped group."""
+    return {
+        "group": name,
+        "results": [dict(r, name=r["name"]) for r in rows],
+    }
+
+
+def row(name, mean_ns, p50_ns=None):
+    r = {"name": name, "mean_ns": mean_ns}
+    if p50_ns is not None:
+        r["p50_ns"] = p50_ns
+    return r
+
+
+class GateCase(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def path(self, name, payload):
+        p = os.path.join(self.dir.name, name)
+        with open(p, "w") as f:
+            json.dump(payload, f)
+        return p
+
+    def run_gate(self, baseline, fresh_groups, extra=()):
+        base = self.path("baseline.json", baseline)
+        fresh = [
+            self.path(f"fresh_{i}.json", g) for i, g in enumerate(fresh_groups)
+        ]
+        argv = ["bench_gate.py", base, *fresh, *extra]
+        out = io.StringIO()
+        with mock.patch.object(sys, "argv", argv):
+            with contextlib.redirect_stdout(out):
+                code = bench_gate.main()
+        return code, out.getvalue()
+
+    # -- helpers under test directly ------------------------------------
+
+    def test_load_rows_flattens_groups_and_keeps_optional_p50(self):
+        rows = bench_gate.load_rows(
+            [
+                group("zo", [row("fold_k64", 100.0, p50_ns=90.0)]),
+                group("fed", [row("round", 2000.0)]),
+            ]
+        )
+        self.assertEqual(set(rows), {("zo", "fold_k64"), ("fed", "round")})
+        self.assertEqual(rows[("zo", "fold_k64")]["p50_ns"], 90.0)
+        self.assertIsNone(rows[("fed", "round")]["p50_ns"])
+
+    def test_metric_prefers_p50_only_when_both_sides_carry_it(self):
+        p50 = {"p50_ns": 90.0, "mean_ns": 100.0}
+        mean_only = {"p50_ns": None, "mean_ns": 120.0}
+        self.assertEqual(bench_gate.metric(p50, p50), ("p50_ns", 90.0, 90.0))
+        # either side missing p50 -> mean comparison for the pair
+        self.assertEqual(
+            bench_gate.metric(p50, mean_only), ("mean_ns", 100.0, 120.0)
+        )
+        self.assertEqual(
+            bench_gate.metric(mean_only, p50), ("mean_ns", 120.0, 100.0)
+        )
+
+    # -- exit-code contract ---------------------------------------------
+
+    def test_unmeasured_baseline_skips_with_notice(self):
+        code, out = self.run_gate(
+            {"status": "unmeasured", "groups": []},
+            [group("zo", [row("fold_k64", 100.0)])],
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("SKIPPED", out)
+
+    def test_regression_beyond_tolerance_fails(self):
+        code, out = self.run_gate(
+            {"status": "measured", "groups": [group("zo", [row("fold_k64", 100.0)])]},
+            [group("zo", [row("fold_k64", 140.0)])],  # +40% > +/-30%
+        )
+        self.assertEqual(code, 1)
+        self.assertIn("::error::bench regression", out)
+
+    def test_within_tolerance_passes(self):
+        code, out = self.run_gate(
+            {"status": "measured", "groups": [group("zo", [row("fold_k64", 100.0)])]},
+            [group("zo", [row("fold_k64", 125.0)])],  # +25% < +/-30%
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("bench gate OK", out)
+
+    def test_stale_fast_baseline_is_a_notice_not_a_failure(self):
+        code, out = self.run_gate(
+            {"status": "measured", "groups": [group("zo", [row("fold_k64", 100.0)])]},
+            [group("zo", [row("fold_k64", 50.0)])],  # -50% improvement
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("re-bless the baseline", out)
+
+    def test_comparison_uses_p50_when_available(self):
+        # mean regresses wildly but p50 is flat: p50 must win (that is
+        # the whole point of preferring it on noisy CI runners)
+        code, out = self.run_gate(
+            {
+                "status": "measured",
+                "groups": [group("zo", [row("fold_k64", 100.0, p50_ns=100.0)])],
+            },
+            [group("zo", [row("fold_k64", 900.0, p50_ns=105.0)])],
+        )
+        self.assertEqual(code, 0, out)
+
+    def test_custom_tolerance_is_respected(self):
+        code, _ = self.run_gate(
+            {"status": "measured", "groups": [group("zo", [row("fold_k64", 100.0)])]},
+            [group("zo", [row("fold_k64", 120.0)])],  # +20%
+            extra=["--tolerance", "0.10"],
+        )
+        self.assertEqual(code, 1)
+
+    # -- row set drift ---------------------------------------------------
+
+    def test_new_and_vanished_rows_are_notices_not_failures(self):
+        code, out = self.run_gate(
+            {"status": "measured", "groups": [group("zo", [row("old_row", 100.0)])]},
+            [group("zo", [row("new_row", 100.0)])],
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("has no baseline yet", out)
+        self.assertIn("was not produced by this run", out)
+
+    # -- --require fails closed ------------------------------------------
+
+    def test_require_missing_fails_even_while_unmeasured(self):
+        code, out = self.run_gate(
+            {"status": "unmeasured", "groups": []},
+            [group("zo", [row("fold_k64", 100.0)])],
+            extra=["--require", "d11m"],
+        )
+        self.assertEqual(code, 1)
+        self.assertIn("required bench row missing", out)
+
+    def test_require_satisfied_by_substring_then_skips_unmeasured(self):
+        code, out = self.run_gate(
+            {"status": "unmeasured", "groups": []},
+            [group("zo", [row("zoupdate_d11m_lanes", 100.0)])],
+            extra=["--require", "d11m"],
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("SKIPPED", out)
+
+
+if __name__ == "__main__":
+    unittest.main()
