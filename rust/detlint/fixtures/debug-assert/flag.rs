@@ -1,0 +1,7 @@
+//@path rust/src/zo/fixture.rs
+// A debug_assert guarding a seed-packing bound vanishes in release:
+// an overflowing field silently aliases another stream.
+pub fn pack(round: usize, cid: usize) -> u64 {
+    debug_assert!(round < (1 << 24), "round overflows the 24-bit field");
+    ((round as u64) << 40) | cid as u64
+}

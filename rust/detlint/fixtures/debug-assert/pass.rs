@@ -1,0 +1,6 @@
+//@path rust/src/zo/fixture.rs
+// Hard bound: holds in release builds too.
+pub fn pack(round: usize, cid: usize) -> u64 {
+    assert!(round < (1 << 24), "round overflows the 24-bit field");
+    ((round as u64) << 40) | cid as u64
+}

@@ -1,0 +1,10 @@
+//@path rust/src/zo/fixture.rs
+// partial_cmp on floats panics on NaN (or silently reorders under
+// max_by) — a diverged run would crash or fork the trace.
+pub fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,8 @@
+//@path rust/src/fed/fixture.rs
+use std::collections::HashMap;
+
+// Iterating an unordered map into a float fold makes the sum depend on
+// the hasher's random state — a different trace every run.
+pub fn fold(contributions: &HashMap<usize, f64>) -> f64 {
+    contributions.values().sum()
+}

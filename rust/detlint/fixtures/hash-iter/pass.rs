@@ -1,0 +1,19 @@
+//@path rust/src/fed/fixture.rs
+use std::collections::BTreeMap;
+
+// A BTreeMap iterates in key order: the fold is reproducible.
+pub fn fold(contributions: &BTreeMap<usize, f64>) -> f64 {
+    contributions.values().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    // test scaffolding may use unordered maps freely — masked
+    use std::collections::HashMap;
+
+    #[test]
+    fn counts() {
+        let m: HashMap<usize, f64> = HashMap::new();
+        assert!(m.is_empty());
+    }
+}

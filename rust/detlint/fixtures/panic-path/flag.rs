@@ -1,0 +1,5 @@
+//@path rust/src/fed/engine.rs
+// A panic in the event loop deadlocks in-flight workers.
+pub fn next_event(queue: &mut Vec<usize>) -> usize {
+    queue.pop().expect("event queue must not be empty")
+}

@@ -1,0 +1,19 @@
+//@path rust/src/fed/engine.rs
+// Errors propagate; infallible fallbacks use the _or family, which the
+// rule deliberately does not match.
+pub fn next_event(queue: &mut Vec<usize>) -> Option<usize> {
+    queue.pop()
+}
+
+pub fn first_or_zero(queue: &[usize]) -> usize {
+    queue.first().copied().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn pops() {
+        // unwrap in test scaffolding is fine — masked
+        assert_eq!(super::next_event(&mut vec![7]).unwrap(), 7);
+    }
+}

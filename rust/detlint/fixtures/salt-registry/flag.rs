@@ -1,0 +1,8 @@
+//@path rust/src/sim/fixture.rs
+// A stream salt defined at a use site instead of the central registry:
+// nothing checks it against the other domains' salts for distinctness.
+pub const ROGUE_SALT: u64 = 0xBAD_CAFE;
+
+pub fn stream(seed: u64) -> u64 {
+    seed ^ ROGUE_SALT
+}

@@ -1,0 +1,7 @@
+//@path rust/src/sim/fixture.rs
+// Salts are re-exported from the central registry, never defined here.
+pub use crate::util::rng::salts::SIM_SALT;
+
+pub fn stream(seed: u64) -> u64 {
+    seed ^ SIM_SALT
+}

@@ -1,0 +1,6 @@
+pub mod salts {
+    pub const ALPHA_SALT: u64 = 0x51D_7E57;
+    pub const BETA_SALT: u64 = 0xC4_0E11;
+    // same value as ALPHA_SALT: the two RNG domains would collide
+    pub const GAMMA_SALT: u64 = 0x51D_7E57;
+}

@@ -1,0 +1,5 @@
+pub mod salts {
+    pub const ALPHA_SALT: u64 = 0x51D_7E57;
+    pub const BETA_SALT: u64 = 0xC4_0E11;
+    pub const GAMMA_SALT: u64 = 0xA51_C51D;
+}

@@ -1,0 +1,5 @@
+fn bench(b: &mut Bench, workers: usize) {
+    for kernel in ["scalar", "lanes"] {
+        b.iter(&format!("fold d=11M kernel={kernel} w={workers}"), || 0);
+    }
+}

@@ -1,0 +1,7 @@
+pub const CSV_COLUMNS: [&str; 16] = [
+    "round", "phase", "train_loss", "test_acc", "test_loss", "bytes_up",
+    "bytes_down", "dropped", "catch_up_down", "seeds_issued", "eff_var",
+    "wall_ms", "staleness", "model_version", "makespan_ms", "edge_drops",
+];
+
+pub const WALL_MS_FIELD: usize = 12;

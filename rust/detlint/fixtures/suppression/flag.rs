@@ -1,0 +1,6 @@
+//@path rust/src/fed/fixture.rs
+// detlint: allow(hash-iter)
+use std::collections::HashMap;
+
+// detlint: allow(no-such-rule) — the rule id does not exist
+pub type Cache = HashMap<usize, usize>;

@@ -1,0 +1,12 @@
+//@path rust/src/fed/fixture.rs
+pub struct Cache {
+    // detlint: allow(hash-iter) — keyed get/insert only, never
+    // iterated, so the nondeterministic order cannot reach any fold
+    map: std::collections::HashMap<usize, usize>,
+}
+
+impl Cache {
+    pub fn get(&self, k: usize) -> Option<usize> {
+        self.map.get(&k).copied()
+    }
+}

@@ -1,0 +1,6 @@
+//@path rust/src/comm/fixture.rs
+// OS-entropy randomness in a trace-critical module: unreproducible.
+pub fn jitter_ms() -> u64 {
+    let sample: u64 = rand::random();
+    sample % 10
+}

@@ -1,0 +1,7 @@
+//@path rust/src/comm/fixture.rs
+// Randomness derives from a seeded in-tree generator.
+use crate::util::rng::Xoshiro256;
+
+pub fn jitter_ms(seed: u64) -> u64 {
+    Xoshiro256::seed_from(seed).next_u64() % 10
+}

@@ -1,0 +1,6 @@
+//@path rust/src/ckpt/fixture.rs
+// Host wall-clock time in a trace-critical module: every run differs.
+pub fn round_deadline_ms() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_millis() + 250
+}

@@ -1,0 +1,5 @@
+//@path rust/src/ckpt/fixture.rs
+// Simulated time comes in via the event clock, a pure input.
+pub fn round_deadline_ms(event_clock_ms: f64) -> f64 {
+    event_clock_ms + 250.0
+}

@@ -1,0 +1,1053 @@
+//! `detlint` — the workspace's determinism static-analysis pass.
+//!
+//! The training stack promises bit-exact traces: the same config must
+//! produce byte-identical metrics CSVs across thread counts, engine
+//! modes and topologies (see `DESIGN.md` §14). Most regressions against
+//! that promise are mechanical — an unordered map iterated into a fold,
+//! a float sort that panics on NaN, a wall-clock read feeding a
+//! compared column, a `debug_assert!` guarding a seed-packing invariant
+//! that silently corrupts release builds. This crate is a small,
+//! dependency-free line/token scanner that rejects those patterns
+//! before they reach a trace.
+//!
+//! Rules (ids are the `// detlint: allow(<rule>)` suppression keys):
+//!
+//! * `salt-registry` — every `*_SALT: u64` protocol constant must be
+//!   defined in the central registry (`rust/src/util/rng.rs`, module
+//!   `salts`) and the registered values must be pairwise distinct.
+//! * `hash-iter` — no `HashMap`/`HashSet` in trace-critical modules
+//!   (`fed`, `zo`, `sim`, `ckpt`, `comm`): iteration order is
+//!   nondeterministic.
+//! * `float-ord` — no `partial_cmp` call sites anywhere in `rust/src`
+//!   (trait `fn partial_cmp` definitions are exempt): float comparisons
+//!   must go through `total_cmp`, which is total and NaN-safe.
+//! * `wall-clock` — no `Instant::now`/`SystemTime` in trace-critical
+//!   modules; simulated time comes from the event clock.
+//! * `thread-rng` — no `thread_rng`/`rand::` in trace-critical
+//!   modules; all randomness derives from seeded in-tree generators.
+//! * `debug-assert` — no `debug_assert!` in trace-critical modules:
+//!   invariants that protect stream derivations must hold in release.
+//! * `panic-path` — no `.unwrap()`/`.expect(` in the async engine
+//!   event loop (`rust/src/fed/engine.rs`): a panic there deadlocks
+//!   in-flight workers instead of surfacing an error.
+//! * `schema-sync` — cross-artifact drift: the `cut -d, -f` ranges in
+//!   the CI workflow must agree with the metrics CSV column contract
+//!   (`CSV_COLUMNS`/`WALL_MS_FIELD`), and every bench-gate `--require`
+//!   row must match a bench name template in `rust/benches`.
+//! * `suppression` — meta rule: `detlint: allow(...)` comments must
+//!   name a known rule and carry a justification on the same line.
+//!
+//! Suppressions: a comment line `// detlint: allow(<rule>) — <why>`
+//! disables `<rule>` on the next line that contains code (intervening
+//! comment-only lines extend the justification). The justification text
+//! is mandatory. `#[cfg(test)]` items and modules are skipped entirely:
+//! the rules police the runtime trace surface, not test scaffolding.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Every rule id, in severity-agnostic canonical order.
+pub const RULES: [&str; 9] = [
+    "salt-registry",
+    "hash-iter",
+    "float-ord",
+    "wall-clock",
+    "thread-rng",
+    "debug-assert",
+    "panic-path",
+    "schema-sync",
+    "suppression",
+];
+
+/// Repo-relative path of the central salt registry file.
+pub const REGISTRY_PATH: &str = "rust/src/util/rng.rs";
+
+/// Repo-relative path of the async engine event loop.
+pub const ENGINE_PATH: &str = "rust/src/fed/engine.rs";
+
+/// Module roots under `rust/src/` whose code feeds the bit-exact trace.
+pub const TRACE_CRITICAL: [&str; 5] = ["fed", "zo", "sim", "ckpt", "comm"];
+
+/// One violation. `line` is 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: split source into a code stream and a comment stream (both with
+// the original line structure), plus the string-literal contents. Rules
+// match on the code stream only, so banned tokens inside comments or
+// strings can never false-positive; suppression comments are parsed from
+// the comment stream; bench name templates come from the string list.
+// ---------------------------------------------------------------------------
+
+struct Lexed {
+    /// per line: source with comments and string contents blanked out
+    code: Vec<String>,
+    /// per line: source with everything except comments blanked out
+    comments: Vec<String>,
+    /// string-literal contents with their 1-based start line
+    strings: Vec<(usize, String)>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum St {
+    Code,
+    LineComment,
+    BlockComment,
+    Str,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Detect `r"`, `r#"`, `b"`, `br#"` ... string openers at `i`; returns
+/// (chars consumed by the opener, raw-delimiter hash count).
+fn raw_string_open(ch: &[char], i: usize) -> Option<(usize, Option<u32>)> {
+    if i > 0 && is_ident(ch[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if ch.get(j) == Some(&'b') {
+        j += 1;
+    }
+    let mut raw = false;
+    if ch.get(j) == Some(&'r') {
+        raw = true;
+        j += 1;
+    }
+    if j == i {
+        return None;
+    }
+    let mut hashes = 0u32;
+    if raw {
+        while ch.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    if ch.get(j) == Some(&'"') {
+        return Some((j + 1 - i, if raw { Some(hashes) } else { None }));
+    }
+    None
+}
+
+fn lex(text: &str) -> Lexed {
+    let ch: Vec<char> = text.chars().collect();
+    let n = ch.len();
+    let mut code = String::with_capacity(n);
+    let mut com = String::with_capacity(n);
+    let mut strings = Vec::new();
+    let mut st = St::Code;
+    let mut block_depth = 0u32;
+    let mut raw_hashes: Option<u32> = None;
+    let mut sbuf = String::new();
+    let mut sstart = 0usize;
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = ch[i];
+        if c == '\n' {
+            code.push('\n');
+            com.push('\n');
+            line += 1;
+            i += 1;
+            if st == St::LineComment {
+                st = St::Code;
+            } else if st == St::Str {
+                sbuf.push('\n');
+            }
+            continue;
+        }
+        match st {
+            St::LineComment => {
+                com.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::BlockComment => {
+                if c == '*' && ch.get(i + 1) == Some(&'/') {
+                    com.push_str("*/");
+                    code.push_str("  ");
+                    i += 2;
+                    block_depth -= 1;
+                    if block_depth == 0 {
+                        st = St::Code;
+                    }
+                } else if c == '/' && ch.get(i + 1) == Some(&'*') {
+                    com.push_str("/*");
+                    code.push_str("  ");
+                    i += 2;
+                    block_depth += 1;
+                } else {
+                    com.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                let closed = match raw_hashes {
+                    None => {
+                        if c == '\\' && i + 1 < n {
+                            sbuf.push(c);
+                            code.push(' ');
+                            com.push(' ');
+                            // leave an escaped newline for the top-level
+                            // handler so line alignment survives
+                            if ch[i + 1] == '\n' {
+                                i += 1;
+                            } else {
+                                sbuf.push(ch[i + 1]);
+                                code.push(' ');
+                                com.push(' ');
+                                i += 2;
+                            }
+                            continue;
+                        }
+                        c == '"'
+                    }
+                    Some(h) => {
+                        c == '"' && (1..=h as usize).all(|k| ch.get(i + k) == Some(&'#'))
+                    }
+                };
+                if closed {
+                    let extra = raw_hashes.unwrap_or(0) as usize;
+                    for _ in 0..=extra {
+                        code.push(' ');
+                        com.push(' ');
+                    }
+                    i += 1 + extra;
+                    strings.push((sstart, std::mem::take(&mut sbuf)));
+                    st = St::Code;
+                } else {
+                    sbuf.push(c);
+                    code.push(' ');
+                    com.push(' ');
+                    i += 1;
+                }
+            }
+            St::Code => {
+                if c == '/' && ch.get(i + 1) == Some(&'/') {
+                    com.push_str("//");
+                    code.push_str("  ");
+                    i += 2;
+                    st = St::LineComment;
+                } else if c == '/' && ch.get(i + 1) == Some(&'*') {
+                    com.push_str("/*");
+                    code.push_str("  ");
+                    i += 2;
+                    block_depth = 1;
+                    st = St::BlockComment;
+                } else if let Some((skip, hashes)) =
+                    ((c == 'r' || c == 'b').then(|| raw_string_open(&ch, i))).flatten()
+                {
+                    for _ in 0..skip {
+                        code.push(' ');
+                        com.push(' ');
+                    }
+                    i += skip;
+                    raw_hashes = hashes;
+                    sbuf.clear();
+                    sstart = line;
+                    st = St::Str;
+                } else if c == '"' {
+                    code.push(' ');
+                    com.push(' ');
+                    i += 1;
+                    raw_hashes = None;
+                    sbuf.clear();
+                    sstart = line;
+                    st = St::Str;
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    if ch.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 2;
+                        while j < n && ch[j] != '\'' && ch[j] != '\n' {
+                            j += 1;
+                        }
+                        if j < n && ch[j] == '\'' {
+                            j += 1;
+                        }
+                        for _ in i..j {
+                            code.push(' ');
+                            com.push(' ');
+                        }
+                        i = j;
+                    } else if ch.get(i + 2) == Some(&'\'') && ch.get(i + 1) != Some(&'\'') {
+                        code.push_str("   ");
+                        com.push_str("   ");
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        com.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    com.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    Lexed {
+        code: code.split('\n').map(str::to_string).collect(),
+        comments: com.split('\n').map(str::to_string).collect(),
+        strings,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Test-region masking: `#[cfg(test)]` covers the attributed item — a
+// whole `mod tests { .. }`, a single field (terminated by `,`), or a
+// single statement/use (terminated by `;`). Masked lines are invisible
+// to every rule: test scaffolding may use wall clocks and unwraps.
+// ---------------------------------------------------------------------------
+
+fn test_mask(code_lines: &[String]) -> Vec<bool> {
+    let joined = code_lines.join("\n");
+    let ch: Vec<char> = joined.chars().collect();
+    let mut line_of = vec![0usize; ch.len()];
+    let mut cur = 0usize;
+    for (k, c) in ch.iter().enumerate() {
+        line_of[k] = cur;
+        if *c == '\n' {
+            cur += 1;
+        }
+    }
+    let mut mask = vec![false; code_lines.len()];
+    let needle: Vec<char> = "#[cfg(test)]".chars().collect();
+    let mut i = 0usize;
+    while i + needle.len() <= ch.len() {
+        if ch[i..i + needle.len()] != needle[..] {
+            i += 1;
+            continue;
+        }
+        let start_line = line_of[i];
+        let mut j = i + needle.len();
+        // skip whitespace and any further attributes on the item
+        loop {
+            while j < ch.len() && ch[j].is_whitespace() {
+                j += 1;
+            }
+            if j < ch.len() && ch[j] == '#' {
+                let mut depth = 0i32;
+                while j < ch.len() {
+                    if ch[j] == '[' {
+                        depth += 1;
+                    } else if ch[j] == ']' {
+                        depth -= 1;
+                        if depth == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        // walk the item body: a braced item masks to its closing brace,
+        // a field/statement masks to the `,`/`;` at top level
+        let mut brace = 0i32;
+        let mut group = 0i32;
+        let mut seen_brace = false;
+        while j < ch.len() {
+            match ch[j] {
+                '{' => {
+                    brace += 1;
+                    seen_brace = true;
+                }
+                '}' => {
+                    brace -= 1;
+                    if seen_brace && brace == 0 {
+                        break;
+                    }
+                }
+                '(' | '[' => group += 1,
+                ')' | ']' => group -= 1,
+                ';' | ',' if !seen_brace && brace == 0 && group == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let end_line = if ch.is_empty() {
+            start_line
+        } else {
+            line_of[j.min(ch.len() - 1)]
+        };
+        for m in mask.iter_mut().take(end_line + 1).skip(start_line) {
+            *m = true;
+        }
+        i = j.max(i + needle.len());
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// Suppressions
+// ---------------------------------------------------------------------------
+
+fn canonical_rule(name: &str) -> Option<&'static str> {
+    RULES.iter().find(|r| **r == name).copied()
+}
+
+/// Parse `detlint: allow(<rule>)` markers out of one line's comment
+/// text. Returns (rule-as-written, justification-present).
+fn parse_allows(comment: &str) -> Vec<(String, bool)> {
+    const MARKER: &str = "detlint: allow(";
+    let mut out = Vec::new();
+    let mut search = 0usize;
+    while let Some(p) = comment[search..].find(MARKER) {
+        let at = search + p + MARKER.len();
+        let rest = &comment[at..];
+        match rest.find(')') {
+            Some(close) => {
+                let rule = rest[..close].trim().to_string();
+                let tail = rest[close + 1..]
+                    .trim_start()
+                    .trim_start_matches(['—', '–', '-', ':'])
+                    .trim();
+                out.push((rule, !tail.is_empty()));
+                search = at + close;
+            }
+            None => {
+                out.push((rest.trim().to_string(), false));
+                break;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Token helpers (byte-position scans over the blanked code stream)
+// ---------------------------------------------------------------------------
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does `code` contain `tok` starting at an identifier boundary?
+/// (`prefix_only` skips the trailing-boundary check, so `debug_assert`
+/// also matches `debug_assert_eq!`.)
+fn has_token(code: &str, tok: &str, prefix_only: bool) -> bool {
+    let bytes = code.as_bytes();
+    let mut search = 0usize;
+    while let Some(p) = code[search..].find(tok) {
+        let at = search + p;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + tok.len();
+        let after_ok = prefix_only || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        search = at + 1;
+    }
+    false
+}
+
+/// First `partial_cmp` call site on the line, skipping trait method
+/// definitions (`fn partial_cmp(...)`).
+fn partial_cmp_call(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut search = 0usize;
+    while let Some(p) = code[search..].find("partial_cmp") {
+        let at = search + p;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + "partial_cmp".len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok && !code[..at].trim_end().ends_with("fn") {
+            return true;
+        }
+        search = at + 1;
+    }
+    false
+}
+
+/// Parse a `const <IDENT>_SALT: u64 [= <literal>];` definition on one
+/// line of blanked code. Returns (name, literal-if-present).
+fn parse_salt_const(code: &str) -> Option<(String, Option<String>)> {
+    let mut search = 0usize;
+    while let Some(p) = code[search..].find("const ") {
+        let at = search + p;
+        let boundary = at == 0 || !is_ident_byte(code.as_bytes()[at - 1]);
+        search = at + "const ".len();
+        if !boundary {
+            continue;
+        }
+        let rest = code[search..].trim_start();
+        let name: String = rest.chars().take_while(|c| is_ident(*c)).collect();
+        if name.is_empty() || !name.ends_with("_SALT") {
+            continue;
+        }
+        let after = rest[name.len()..].trim_start();
+        let Some(after) = after.strip_prefix(':') else {
+            continue;
+        };
+        let after = after.trim_start();
+        if !after.starts_with("u64") {
+            continue;
+        }
+        let after = after["u64".len()..].trim_start();
+        let lit = after.strip_prefix('=').map(|v| {
+            v.trim_start()
+                .chars()
+                .take_while(|c| *c != ';')
+                .collect::<String>()
+                .trim()
+                .to_string()
+        });
+        return Some((name, lit));
+    }
+    None
+}
+
+fn parse_u64_literal(lit: &str) -> Option<u64> {
+    let t = lit.trim().trim_end_matches("u64").replace('_', "");
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else if let Some(bin) = t.strip_prefix("0b") {
+        u64::from_str_radix(bin, 2).ok()
+    } else if let Some(oct) = t.strip_prefix("0o") {
+        u64::from_str_radix(oct, 8).ok()
+    } else {
+        t.parse().ok()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-file scan
+// ---------------------------------------------------------------------------
+
+fn is_trace_critical(rel: &str) -> bool {
+    match rel.strip_prefix("rust/src/") {
+        Some(rest) => TRACE_CRITICAL.iter().any(|d| {
+            rest.strip_prefix(d)
+                .map(|tail| tail.starts_with('/') || tail == ".rs")
+                .unwrap_or(false)
+        }),
+        None => false,
+    }
+}
+
+/// Scan one Rust source file. `rel` is its repo-relative path with `/`
+/// separators; the path decides which rule scopes apply.
+pub fn scan_rust_source(rel: &str, text: &str) -> Vec<Finding> {
+    let rel = rel.replace('\\', "/");
+    let lx = lex(text);
+    let mask = test_mask(&lx.code);
+    let trace_critical = is_trace_critical(&rel);
+    let registry = rel == REGISTRY_PATH;
+    let engine = rel == ENGINE_PATH;
+    let mut out = Vec::new();
+    let mut pending: Vec<&'static str> = Vec::new();
+    for (idx, code) in lx.code.iter().enumerate() {
+        let lineno = idx + 1;
+        for (rule, justified) in parse_allows(&lx.comments[idx]) {
+            match canonical_rule(&rule) {
+                None => out.push(Finding {
+                    rule: "suppression",
+                    path: rel.clone(),
+                    line: lineno,
+                    message: format!("unknown rule `{rule}` in `detlint: allow(..)`"),
+                }),
+                Some(r) if !justified => out.push(Finding {
+                    rule: "suppression",
+                    path: rel.clone(),
+                    line: lineno,
+                    message: format!(
+                        "`allow({r})` needs a justification on the same line \
+                         (`// detlint: allow({r}) — <why this is safe>`)"
+                    ),
+                }),
+                Some(r) => pending.push(r),
+            }
+        }
+        if code.trim().is_empty() {
+            continue;
+        }
+        let active = std::mem::take(&mut pending);
+        if mask[idx] {
+            continue;
+        }
+        let mut emit = |rule: &'static str, message: String| {
+            if !active.contains(&rule) {
+                out.push(Finding {
+                    rule,
+                    path: rel.clone(),
+                    line: lineno,
+                    message,
+                });
+            }
+        };
+        if !registry {
+            if let Some((name, _)) = parse_salt_const(code) {
+                emit(
+                    "salt-registry",
+                    format!(
+                        "`{name}` defined outside the central registry — move it to \
+                         `util::rng::salts` and re-export it here"
+                    ),
+                );
+            }
+        }
+        if partial_cmp_call(code) {
+            emit(
+                "float-ord",
+                "`partial_cmp` call site — use `total_cmp` (total order, NaN-safe) \
+                 so a NaN cannot panic or reorder a trace"
+                    .to_string(),
+            );
+        }
+        if trace_critical {
+            for tok in ["HashMap", "HashSet"] {
+                if has_token(code, tok, false) {
+                    emit(
+                        "hash-iter",
+                        format!(
+                            "`{tok}` in a trace-critical module: iteration order is \
+                             nondeterministic — use an index/BTree structure, or \
+                             suppress with a keyed-access-only justification"
+                        ),
+                    );
+                }
+            }
+            if code.contains("Instant::now") || has_token(code, "SystemTime", false) {
+                emit(
+                    "wall-clock",
+                    "host wall-clock read in a trace-critical module — simulated \
+                     time must come from the event clock"
+                        .to_string(),
+                );
+            }
+            if has_token(code, "thread_rng", false) || code.contains("rand::") {
+                emit(
+                    "thread-rng",
+                    "OS-entropy RNG in a trace-critical module — derive from the \
+                     seeded in-tree generators (`util::rng`)"
+                        .to_string(),
+                );
+            }
+            if has_token(code, "debug_assert", true) {
+                emit(
+                    "debug-assert",
+                    "`debug_assert!` in a trace-critical module — promote to a hard \
+                     `assert!` so release builds cannot silently corrupt a stream"
+                        .to_string(),
+                );
+            }
+        }
+        if engine && (code.contains(".unwrap()") || code.contains(".expect(")) {
+            emit(
+                "panic-path",
+                "`.unwrap()`/`.expect(..)` in the async engine event loop — a panic \
+                 here deadlocks in-flight workers; propagate the error instead"
+                    .to_string(),
+            );
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Registry-level check
+// ---------------------------------------------------------------------------
+
+/// Check the central salt registry file: every registered value must be
+/// parseable and pairwise distinct (a collision makes two supposedly
+/// independent RNG domains emit identical streams).
+pub fn check_salt_registry(rel: &str, text: &str) -> Vec<Finding> {
+    let lx = lex(text);
+    let mut seen: Vec<(String, u64, usize)> = Vec::new();
+    let mut out = Vec::new();
+    for (idx, code) in lx.code.iter().enumerate() {
+        let Some((name, Some(lit))) = parse_salt_const(code) else {
+            continue;
+        };
+        match parse_u64_literal(&lit) {
+            Some(v) => {
+                if let Some((other, _, oline)) = seen.iter().find(|(_, ov, _)| *ov == v) {
+                    out.push(Finding {
+                        rule: "salt-registry",
+                        path: rel.to_string(),
+                        line: idx + 1,
+                        message: format!(
+                            "salt `{name}` duplicates the value of `{other}` (line \
+                             {oline}): {v:#x} — the two RNG domains would collide"
+                        ),
+                    });
+                }
+                seen.push((name, v, idx + 1));
+            }
+            None => out.push(Finding {
+                rule: "salt-registry",
+                path: rel.to_string(),
+                line: idx + 1,
+                message: format!("could not parse the literal of salt `{name}`: `{lit}`"),
+            }),
+        }
+    }
+    if seen.is_empty() {
+        out.push(Finding {
+            rule: "salt-registry",
+            path: rel.to_string(),
+            line: 1,
+            message: "no `*_SALT` constants found in the registry file".to_string(),
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Cross-artifact schema checks
+// ---------------------------------------------------------------------------
+
+fn parse_csv_contract(text: &str) -> Option<(usize, usize)> {
+    let i = text.find("const CSV_COLUMNS")?;
+    let seg = &text[i..];
+    let end = seg.find("];")?;
+    let ncols = seg[..end].matches('"').count() / 2;
+    let j = text.find("const WALL_MS_FIELD")?;
+    let eq = text[j..].find('=')?;
+    let digits: String = text[j + eq + 1..]
+        .chars()
+        .skip_while(|c| c.is_whitespace())
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    let wall: usize = digits.parse().ok()?;
+    if ncols == 0 || wall == 0 || wall > ncols {
+        return None;
+    }
+    Some((ncols, wall))
+}
+
+fn parse_field_spec(spec: &str) -> Option<BTreeSet<usize>> {
+    let mut set = BTreeSet::new();
+    for part in spec.split(',') {
+        if let Some((a, b)) = part.split_once('-') {
+            let a: usize = a.parse().ok()?;
+            let b: usize = b.parse().ok()?;
+            if a == 0 || b < a {
+                return None;
+            }
+            set.extend(a..=b);
+        } else {
+            let f: usize = part.parse().ok()?;
+            if f == 0 {
+                return None;
+            }
+            set.insert(f);
+        }
+    }
+    Some(set)
+}
+
+fn find_cut_specs(ci: &str) -> Vec<(usize, String)> {
+    const CUT: &str = "cut -d, -f";
+    let mut out = Vec::new();
+    for (idx, line) in ci.lines().enumerate() {
+        let mut search = 0usize;
+        while let Some(p) = line[search..].find(CUT) {
+            let at = search + p + CUT.len();
+            let spec: String = line[at..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit() || *c == ',' || *c == '-')
+                .collect();
+            out.push((idx + 1, spec));
+            search = at;
+        }
+    }
+    out
+}
+
+fn find_requires(ci: &str) -> Vec<(usize, String)> {
+    const REQ: &str = "--require";
+    let mut out = Vec::new();
+    for (idx, line) in ci.lines().enumerate() {
+        let mut search = 0usize;
+        while let Some(p) = line[search..].find(REQ) {
+            let at = search + p + REQ.len();
+            let rest = line[at..].trim_start();
+            if let Some(stripped) = rest.strip_prefix('"') {
+                if let Some(close) = stripped.find('"') {
+                    out.push((idx + 1, stripped[..close].to_string()));
+                }
+            }
+            search = at;
+        }
+    }
+    out
+}
+
+/// Split a `format!` template into its literal segments (brace groups
+/// become wildcards; `{{`/`}}` are literal braces).
+fn template_segments(template: &str) -> Vec<String> {
+    let ch: Vec<char> = template.chars().collect();
+    let mut segs = vec![String::new()];
+    let mut i = 0usize;
+    while i < ch.len() {
+        match ch[i] {
+            '{' if ch.get(i + 1) == Some(&'{') => {
+                segs.last_mut().unwrap().push('{');
+                i += 2;
+            }
+            '}' if ch.get(i + 1) == Some(&'}') => {
+                segs.last_mut().unwrap().push('}');
+                i += 2;
+            }
+            '{' => {
+                while i < ch.len() && ch[i] != '}' {
+                    i += 1;
+                }
+                i += 1;
+                segs.push(String::new());
+            }
+            c => {
+                segs.last_mut().unwrap().push(c);
+                i += 1;
+            }
+        }
+    }
+    segs
+}
+
+/// Could `req` (a bench-gate `--require` substring) match some
+/// instantiation of the `format!` template? Exact for requires that are
+/// full row names or sit inside one literal segment; permissive once a
+/// require ends inside a wildcard region (the wildcard can expand to
+/// anything, so any tail is satisfiable).
+fn glob_could_match(template: &str, req: &str) -> bool {
+    let segs = template_segments(template);
+    if segs.len() == 1 {
+        return segs[0].contains(req);
+    }
+    if segs.iter().any(|s| !s.is_empty() && s.contains(req)) {
+        return true;
+    }
+    if !req.starts_with(segs[0].as_str()) {
+        return false;
+    }
+    let mut rest = &req[segs[0].len()..];
+    for seg in segs.iter().skip(1) {
+        if seg.is_empty() {
+            continue;
+        }
+        match rest.find(seg.as_str()) {
+            Some(p) => rest = &rest[p + seg.len()..],
+            None => return true,
+        }
+    }
+    true
+}
+
+fn schema_finding(path: &str, line: usize, message: String) -> Finding {
+    Finding {
+        rule: "schema-sync",
+        path: path.to_string(),
+        line,
+        message,
+    }
+}
+
+/// Cross-artifact drift checks rooted at `root`: CI `cut` field ranges
+/// vs the metrics CSV contract, and bench-gate `--require` rows vs the
+/// bench name templates.
+pub fn check_schema(root: &Path) -> Vec<Finding> {
+    const METRICS: &str = "rust/src/metrics/mod.rs";
+    const CI: &str = ".github/workflows/ci.yml";
+    let mut out = Vec::new();
+    let Ok(metrics) = fs::read_to_string(root.join(METRICS)) else {
+        out.push(schema_finding(
+            METRICS,
+            1,
+            "metrics module missing — cannot check the CSV column contract".to_string(),
+        ));
+        return out;
+    };
+    let Some((ncols, wall)) = parse_csv_contract(&metrics) else {
+        out.push(schema_finding(
+            METRICS,
+            1,
+            "`CSV_COLUMNS` / `WALL_MS_FIELD` contract constants not found".to_string(),
+        ));
+        return out;
+    };
+    let Ok(ci) = fs::read_to_string(root.join(CI)) else {
+        out.push(schema_finding(
+            CI,
+            1,
+            "CI workflow missing — cannot cross-check trace diffs".to_string(),
+        ));
+        return out;
+    };
+    for (line, spec) in find_cut_specs(&ci) {
+        let Some(fields) = parse_field_spec(&spec) else {
+            out.push(schema_finding(
+                CI,
+                line,
+                format!("unparseable `cut` field spec `{spec}`"),
+            ));
+            continue;
+        };
+        if fields.contains(&wall) {
+            out.push(schema_finding(
+                CI,
+                line,
+                format!(
+                    "`cut -f{spec}` includes wall_ms (f{wall}) — trace diffs must \
+                     exclude the only nondeterministic column"
+                ),
+            ));
+        }
+        let Some(&mx) = fields.iter().max() else {
+            continue;
+        };
+        if mx > ncols {
+            out.push(schema_finding(
+                CI,
+                line,
+                format!("`cut -f{spec}` references f{mx} beyond the {ncols}-column schema"),
+            ));
+        }
+        if mx > wall {
+            let missing: Vec<String> = (wall + 1..=ncols)
+                .filter(|f| !fields.contains(f))
+                .map(|f| format!("f{f}"))
+                .collect();
+            if !missing.is_empty() {
+                out.push(schema_finding(
+                    CI,
+                    line,
+                    format!(
+                        "`cut -f{spec}` skips deterministic column(s) {} — a cut \
+                         reaching past wall_ms must cover f{}-f{ncols}",
+                        missing.join(","),
+                        wall + 1
+                    ),
+                ));
+            }
+        }
+    }
+    let mut templates: Vec<String> = Vec::new();
+    if let Ok(rd) = fs::read_dir(root.join("rust/benches")) {
+        let mut paths: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+        paths.sort();
+        for p in paths {
+            if p.extension().and_then(|e| e.to_str()) != Some("rs") {
+                continue;
+            }
+            if let Ok(text) = fs::read_to_string(&p) {
+                templates.extend(lex(&text).strings.into_iter().map(|(_, s)| s));
+            }
+        }
+    }
+    for (line, req) in find_requires(&ci) {
+        if !templates.iter().any(|t| glob_could_match(t, &req)) {
+            out.push(schema_finding(
+                CI,
+                line,
+                format!(
+                    "`--require \"{req}\"` matches no bench name template under \
+                     rust/benches — the gate would fail closed on a phantom row"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Repo walk + output
+// ---------------------------------------------------------------------------
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return;
+    };
+    let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Scan the whole repo rooted at `root`: every Rust source under
+/// `rust/src`, the salt registry, and the cross-artifact schema checks.
+/// Findings come back sorted by (path, line, rule).
+pub fn scan_repo(root: &Path) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut files = Vec::new();
+    walk_rs(&root.join("rust").join("src"), &mut files);
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(text) = fs::read_to_string(path) else {
+            continue;
+        };
+        if rel == REGISTRY_PATH {
+            out.extend(check_salt_registry(&rel, &text));
+        }
+        out.extend(scan_rust_source(&rel, &text));
+    }
+    out.extend(check_schema(root));
+    out.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    out
+}
+
+fn json_escape(t: &str) -> String {
+    let mut s = String::with_capacity(t.len());
+    for c in t.chars() {
+        match c {
+            '"' => s.push_str("\\\""),
+            '\\' => s.push_str("\\\\"),
+            '\n' => s.push_str("\\n"),
+            '\t' => s.push_str("\\t"),
+            '\r' => s.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(s, "\\u{:04x}", c as u32);
+            }
+            c => s.push(c),
+        }
+    }
+    s
+}
+
+/// Machine-readable findings list (a JSON array, one object per
+/// finding with `rule`, `path`, `line`, `message`).
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut s = String::from("[\n");
+    for (i, f) in findings.iter().enumerate() {
+        let _ = write!(
+            s,
+            "  {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+            json_escape(f.rule),
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.message)
+        );
+        if i + 1 < findings.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("]\n");
+    s
+}

@@ -1,0 +1,82 @@
+//! CLI for the determinism lint: scan the repo, print findings, exit
+//! nonzero if any survive. See the library docs for the rule set.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+detlint — determinism static analysis (DESIGN.md §14)
+
+USAGE:
+    detlint [--root DIR] [--format text|json] [--report FILE]
+
+OPTIONS:
+    --root DIR       repo root to scan (default: .)
+    --format KIND    findings output: text (default) or json
+    --report FILE    additionally write the JSON findings to FILE
+    -h, --help       print this help
+
+EXIT CODE: 0 when the tree is clean, 1 when findings exist, 2 on usage
+or I/O errors.";
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut format = String::from("text");
+    let mut report: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" | "--format" | "--report" => {
+                let Some(v) = args.next() else {
+                    eprintln!("detlint: `{a}` needs a value\n\n{USAGE}");
+                    return ExitCode::from(2);
+                };
+                match a.as_str() {
+                    "--root" => root = PathBuf::from(v),
+                    "--format" => format = v,
+                    _ => report = Some(PathBuf::from(v)),
+                }
+            }
+            "-h" | "--help" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            _ => {
+                eprintln!("detlint: unknown argument `{a}`\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if format != "text" && format != "json" {
+        eprintln!("detlint: unknown format `{format}` (want text or json)");
+        return ExitCode::from(2);
+    }
+    if !root.join("rust").join("src").is_dir() {
+        eprintln!(
+            "detlint: no rust/src under `{}` — pass the repo root via --root",
+            root.display()
+        );
+        return ExitCode::from(2);
+    }
+    let findings = detlint::scan_repo(&root);
+    let json = detlint::to_json(&findings);
+    if let Some(p) = &report {
+        if let Err(e) = std::fs::write(p, &json) {
+            eprintln!("detlint: cannot write report `{}`: {e}", p.display());
+            return ExitCode::from(2);
+        }
+    }
+    if format == "json" {
+        print!("{json}");
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message);
+        }
+        eprintln!("detlint: {} finding(s)", findings.len());
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,21 @@
+//! Meta-test: the repo's own tree must be detlint-clean. This is what
+//! keeps the lint honest — every rule it enforces is already satisfied
+//! (or explicitly, justifiedly suppressed) in the code it polices.
+
+use std::path::Path;
+
+#[test]
+fn repo_tree_is_detlint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let findings = detlint::scan_repo(&root);
+    assert!(
+        findings.is_empty(),
+        "detlint found {} violation(s) in the tree:\n{}",
+        findings.len(),
+        findings
+            .iter()
+            .map(|f| format!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

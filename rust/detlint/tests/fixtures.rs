@@ -1,0 +1,126 @@
+//! Fixture corpus: every rule has at least one should-flag and one
+//! should-pass fixture. Each fixture's first line may carry an
+//! `//@path <repo-relative path>` directive so the scan sees it under
+//! the scope (trace-critical module, engine file, ...) the rule needs.
+
+use std::path::{Path, PathBuf};
+
+/// Rules exercised through per-file fixtures (`schema-sync` has its own
+/// mini repo trees below instead).
+const FILE_RULES: [&str; 8] = [
+    "salt-registry",
+    "hash-iter",
+    "float-ord",
+    "wall-clock",
+    "thread-rng",
+    "debug-assert",
+    "panic-path",
+    "suppression",
+];
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+fn fixture(rel: &str) -> String {
+    let p = fixture_dir().join(rel);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("missing fixture {rel}: {e}"))
+}
+
+fn pretend_path(text: &str) -> &str {
+    text.lines()
+        .next()
+        .and_then(|l| l.strip_prefix("//@path "))
+        .map(str::trim)
+        .unwrap_or("rust/src/fed/fixture.rs")
+}
+
+#[test]
+fn flag_fixtures_trip_their_rule() {
+    for rule in FILE_RULES {
+        let text = fixture(&format!("{rule}/flag.rs"));
+        let findings = detlint::scan_rust_source(pretend_path(&text), &text);
+        assert!(
+            findings.iter().any(|f| f.rule == rule),
+            "fixture {rule}/flag.rs did not trip `{rule}`: {findings:?}"
+        );
+    }
+}
+
+#[test]
+fn pass_fixtures_are_clean() {
+    for rule in FILE_RULES {
+        let text = fixture(&format!("{rule}/pass.rs"));
+        let findings = detlint::scan_rust_source(pretend_path(&text), &text);
+        assert!(
+            findings.is_empty(),
+            "fixture {rule}/pass.rs must be clean: {findings:?}"
+        );
+    }
+}
+
+#[test]
+fn unjustified_suppression_does_not_suppress() {
+    let text = fixture("suppression/flag.rs");
+    let findings = detlint::scan_rust_source(pretend_path(&text), &text);
+    // the bare allow(hash-iter) is itself flagged AND the HashMap on
+    // the next line still fires — an unjustified allow is inert
+    assert!(findings.iter().any(|f| f.rule == "suppression"));
+    assert!(findings.iter().any(|f| f.rule == "hash-iter"), "{findings:?}");
+}
+
+#[test]
+fn registry_distinctness() {
+    let dup = fixture("salt-registry/registry_dup.rs");
+    let findings = detlint::check_salt_registry(detlint::REGISTRY_PATH, &dup);
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.rule == "salt-registry" && f.message.contains("duplicates")),
+        "{findings:?}"
+    );
+    let ok = fixture("salt-registry/registry_ok.rs");
+    let findings = detlint::check_salt_registry(detlint::REGISTRY_PATH, &ok);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn schema_sync_flag_tree() {
+    let findings = detlint::check_schema(&fixture_dir().join("schema-sync/flag_tree"));
+    assert!(findings.iter().all(|f| f.rule == "schema-sync"), "{findings:?}");
+    // one drift class each: stale cut range, wall_ms included in a
+    // diff, phantom --require row
+    assert!(
+        findings.iter().any(|f| f.message.contains("skips deterministic")),
+        "{findings:?}"
+    );
+    assert!(
+        findings.iter().any(|f| f.message.contains("includes wall_ms")),
+        "{findings:?}"
+    );
+    assert!(
+        findings.iter().any(|f| f.message.contains("--require")),
+        "{findings:?}"
+    );
+}
+
+#[test]
+fn schema_sync_pass_tree() {
+    let findings = detlint::check_schema(&fixture_dir().join("schema-sync/pass_tree"));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn json_output_is_escaped() {
+    let findings = vec![detlint::Finding {
+        rule: "schema-sync",
+        path: "a\\b.rs".to_string(),
+        line: 3,
+        message: "quote \" and\nnewline".to_string(),
+    }];
+    let json = detlint::to_json(&findings);
+    assert!(json.contains("\"line\": 3"), "{json}");
+    assert!(json.contains("a\\\\b.rs"), "{json}");
+    assert!(json.contains("quote \\\" and\\nnewline"), "{json}");
+    assert_eq!(detlint::to_json(&[]), "[\n]\n");
+}

@@ -178,7 +178,7 @@ impl CheckpointStore {
         if !self.enabled() {
             return;
         }
-        debug_assert_eq!(self.base_round() + self.tail.len(), round, "rounds must be recorded in order");
+        assert_eq!(self.base_round() + self.tail.len(), round, "rounds must be recorded in order");
         self.take_snapshot(round + 1, global);
     }
 
@@ -189,7 +189,9 @@ impl CheckpointStore {
         if !self.enabled() {
             return;
         }
-        debug_assert_eq!(self.base_round() + self.tail.len(), round, "rounds must be recorded in order");
+        // hard log invariant: an out-of-order record would replay a
+        // permuted tail bit-differently in release (DESIGN.md §14)
+        assert_eq!(self.base_round() + self.tail.len(), round, "rounds must be recorded in order");
         self.tail.push(SeedRoundLog { round, items });
         self.max_tail_rounds = self.max_tail_rounds.max(self.tail.len());
         if self.tail.len() >= self.every {
@@ -221,7 +223,7 @@ impl CheckpointStore {
         if known >= target {
             return None;
         }
-        debug_assert!(
+        assert!(
             target <= snap.at + self.tail.len(),
             "target {target} beyond recorded history {}",
             snap.at + self.tail.len()

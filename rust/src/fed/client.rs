@@ -49,7 +49,7 @@ pub fn clients_from_profiles(
     profiles: Vec<CapabilityProfile>,
     cost: &CostModel,
 ) -> Vec<ClientState> {
-    debug_assert_eq!(shards.len(), profiles.len());
+    assert_eq!(shards.len(), profiles.len());
     shards
         .into_iter()
         .zip(profiles)
@@ -103,9 +103,10 @@ pub const MAX_SIM_CLIENTS: usize = 1 << 20;
 /// so up to ~10^12 simulated clients derive collision-free streams.
 pub const MAX_FLEET_CLIENTS: usize = 1 << 40;
 
-/// Stream salt of the wide (fleet-scale) derivation, decorrelating it
-/// from any value the compact linear packing can reach.
-const WIDE_STREAM_SALT: u64 = 0xF1EE7_5CA1E;
+// Stream salt of the wide (fleet-scale) derivation, decorrelating it
+// from any value the compact linear packing can reach. Defined in the
+// central registry (`util::rng::salts`, DESIGN.md §14).
+use crate::util::rng::salts::WIDE_STREAM_SALT;
 
 /// Per-(round, client) local RNG shared by every round engine (warm /
 /// FO local SGD, FedKSeed minibatch + pool draws): a pure function of
@@ -126,11 +127,13 @@ pub fn round_client_rng(master: u64, salt: u64, round: usize, cid: usize) -> Xos
     if cid < MAX_SIM_CLIENTS {
         return Xoshiro256::seed_from(master ^ salt ^ ((round as u64) << 20) ^ cid as u64);
     }
-    debug_assert!(
+    // hard bounds (not debug_assert): an overflowing field would alias
+    // another (round, client) stream in release (DESIGN.md §14)
+    assert!(
         cid < MAX_FLEET_CLIENTS,
         "client id {cid} overflows the 40-bit fleet RNG field"
     );
-    debug_assert!(
+    assert!(
         round < crate::zo::MAX_ROUNDS,
         "round {round} overflows the 24-bit field"
     );

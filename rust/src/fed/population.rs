@@ -28,10 +28,11 @@ use crate::fed::client::{ClientState, Resource};
 use crate::sim::{CapabilityProfile, Scenario};
 use crate::util::rng::{SplitMix64, Xoshiro256};
 
-/// Stream salt of the lazy per-client shard draw — its own domain,
+/// Stream salt of the lazy per-client shard draw — re-exported from the
+/// central registry (`util::rng::salts`, DESIGN.md §14); its own domain,
 /// decorrelated from the profile draw (`sim::PROFILE_SALT`) and every
 /// round trace.
-pub const SHARD_SALT: u64 = 0x5AD_D47A;
+pub use crate::util::rng::salts::SHARD_SALT;
 
 /// Samples each lazy client holds (clamped to the source size): the
 /// cross-device regime's "small local dataset" — fixed and documented so
@@ -337,6 +338,9 @@ impl Population {
 /// in `fed::server`).
 #[derive(Debug, Clone, Default)]
 pub struct SparseSync {
+    // detlint: allow(hash-iter) — keyed get/insert/len only, never
+    // iterated, so the map's nondeterministic order cannot reach any
+    // fold or trace (to_dense walks 0..n by index, not the map)
     map: std::collections::HashMap<usize, usize>,
 }
 

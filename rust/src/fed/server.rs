@@ -186,7 +186,7 @@ pub(crate) fn finite_signal(v: f64) -> f64 {
 ///
 /// Compatibility shim over `sim` profile sampling: the Binary scenario
 /// consumes the identical RNG stream the seed repo's implementation did
-/// (one shuffle of `0..k` seeded from `seed ^ 0x4E50_11`, first
+/// (one shuffle of `0..k` seeded from `seed ^ sim::ASSIGN_SALT`, first
 /// `hi_count` of the order high-resource), so seed-equivalent configs
 /// reproduce the exact same High/Low assignment. Symbolic tier budgets
 /// make the split independent of the cost model used to resolve them.
@@ -1037,6 +1037,8 @@ impl<'b, B: ModelBackend> Federation<'b, B> {
     /// fold needs every participant's full weights at one version); the
     /// ZO phase routes through the engine `--engine` selects.
     pub fn step(&mut self) -> anyhow::Result<()> {
+        // detlint: allow(wall-clock) — feeds the wall_ms observability
+        // column (f12), which every CI trace diff excludes by contract
         let t0 = Instant::now();
         let (phase, summary) = if self.round < self.cfg.pivot {
             (Phase::Warm, self.warm_round()?)
@@ -1125,7 +1127,9 @@ pub(crate) fn run_zo_client<B: ModelBackend>(
     s_block: usize,
 ) -> anyhow::Result<ZoContribution> {
     let groups = zo_step_chunks(data, backend.batch_size(), cfg.zo.grad_steps);
-    debug_assert_eq!(groups.len() * s_block, seeds.len());
+    // hard seed-block invariant: a mis-sized issue would silently
+    // mis-split blocks in release (DESIGN.md §14 debug-assert rule)
+    assert_eq!(groups.len() * s_block, seeds.len());
     // the client evaluates its own heterogeneous probe budget: same ZO
     // hyperparameters, its planned S_j
     let mut zcfg = cfg.zo;

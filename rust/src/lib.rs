@@ -29,7 +29,10 @@
 //!   the adaptive probe-budget planner (`max_affordable_s`) that inverts
 //!   the timeline model to size each client's per-round S_j.
 //! * [`exp`] — runners that regenerate every paper table and figure.
-//! * [`util`] — offline substrates (RNG, JSON, CLI, bench, property tests).
+//! * [`util`] — offline substrates (RNG, JSON, CLI, bench, property
+//!   tests). [`util::rng::salts`] is the central stream-salt registry;
+//!   `rust/detlint` statically enforces that no salt constant lives
+//!   anywhere else (DESIGN.md §14).
 //!
 //! ## Capability scenarios
 //!

@@ -64,6 +64,23 @@ pub struct RoundRecord {
     pub edge_drops: usize,
 }
 
+/// The metrics CSV column contract, in emit order. This is the single
+/// source of truth the CI trace diffs and `detlint`'s schema-sync rule
+/// key off: columns before [`WALL_MS_FIELD`] are bit-stable across
+/// thread counts and engine modes, `wall_ms` is host-timing noise, and
+/// every column after it is deterministic again. New columns append at
+/// the end — the `cut -d, -f` ranges in `.github/workflows/ci.yml`
+/// must cover exactly this list minus `wall_ms` (DESIGN.md §14).
+pub const CSV_COLUMNS: [&str; 16] = [
+    "round", "phase", "train_loss", "test_acc", "test_loss", "bytes_up",
+    "bytes_down", "dropped", "catch_up_down", "seeds_issued", "eff_var",
+    "wall_ms", "staleness", "model_version", "makespan_ms", "edge_drops",
+];
+
+/// 1-based CSV field number of `wall_ms` — the only column CI trace
+/// diffs are allowed to exclude (`cut` speaks 1-based field numbers).
+pub const WALL_MS_FIELD: usize = 12;
+
 /// Full run history.
 #[derive(Debug, Clone, Default)]
 pub struct RunLog {
@@ -162,14 +179,7 @@ impl RunLog {
     }
 
     pub fn write_csv(&self, path: &str) -> anyhow::Result<()> {
-        let mut w = CsvWriter::create(
-            path,
-            &[
-                "round", "phase", "train_loss", "test_acc", "test_loss", "bytes_up",
-                "bytes_down", "dropped", "catch_up_down", "seeds_issued", "eff_var",
-                "wall_ms", "staleness", "model_version", "makespan_ms", "edge_drops",
-            ],
-        )?;
+        let mut w = CsvWriter::create(path, &CSV_COLUMNS)?;
         for r in &self.rounds {
             w.row(&[
                 r.round.to_string(),
@@ -317,11 +327,14 @@ mod tests {
         // the layout contract the CI diff steps rely on: wall_ms is f12,
         // the async columns sit strictly after it
         let header: Vec<&str> = text.lines().next().unwrap().split(',').collect();
+        assert_eq!(header, CSV_COLUMNS);
         assert_eq!(header[11], "wall_ms");
         assert_eq!(
             &header[12..],
             ["staleness", "model_version", "makespan_ms", "edge_drops"]
         );
+        // WALL_MS_FIELD is the 1-based `cut` field number of wall_ms
+        assert_eq!(CSV_COLUMNS[WALL_MS_FIELD - 1], "wall_ms");
     }
 
     #[test]

@@ -246,10 +246,12 @@ fn softmax_stats(logits: &[f64], y: i32) -> (f64, bool, Vec<f64>) {
     let z: f64 = exps.iter().sum();
     let probs: Vec<f64> = exps.iter().map(|e| e / z).collect();
     let loss = z.ln() + max - logits[y as usize];
+    // total_cmp, not partial_cmp().unwrap(): a NaN logit (diverged run)
+    // must yield a deterministic argmax, not a panic (DESIGN.md §14)
     let argmax = logits
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .unwrap()
         .0;
     (loss, argmax == y as usize, probs)
@@ -367,6 +369,22 @@ mod tests {
         let after = be.fwd_loss(&params, &batch).unwrap();
         assert!(after.mean_loss() < 0.1, "loss {}", after.mean_loss());
         assert_eq!(after.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn softmax_argmax_is_deterministic_under_nan_logits() {
+        // a diverged run can surface NaN logits; argmax must stay a
+        // deterministic total-order pick, never a panic (DESIGN.md §14)
+        let logits = [0.5, f64::NAN, -1.0];
+        let (_, correct, probs) = softmax_stats(&logits, 1);
+        // total_cmp places NaN above every real, so index 1 wins
+        assert!(correct);
+        assert_eq!(probs.len(), 3);
+        let again = softmax_stats(&logits, 1);
+        assert_eq!(correct, again.1);
+        // all-finite ties keep max_by's last-maximum convention
+        let (_, last_wins, _) = softmax_stats(&[2.0, 2.0, 0.0], 1);
+        assert!(last_wins);
     }
 
     #[test]

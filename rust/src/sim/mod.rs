@@ -52,39 +52,13 @@ use crate::comm::CostModel;
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256;
 
-/// Salt for the per-(round, client) availability trace RNG
-/// (`fed::client::round_client_rng`) — decorrelated from the local-SGD
-/// (salt 0) and FedKSeed (salt 0x4B) streams.
-pub const SIM_SALT: u64 = 0x51D_7E57;
-
-/// Salt for the per-(round, client) churn trace (whole-round absences,
-/// [`is_available`]) — a *separate* stream from [`SIM_SALT`] so enabling
-/// churn never perturbs the mid-round drop/deadline draws of existing
-/// scenarios.
-pub const CHURN_SALT: u64 = 0xC4_0E11;
-
-/// Salt for the async engine's per-dispatch timeline trace
-/// (`fed::engine`). Keyed by the monotone *dispatch sequence* rather than
-/// the round number, so a client redispatched after a drop draws a fresh
-/// timeline instead of replaying the identical failure — and so the
-/// sync engine's [`SIM_SALT`] streams are untouched by the async path.
-pub const ASYNC_SIM_SALT: u64 = 0xA51_C51D;
-
-/// Salt for the async engine's Poisson arrival draws
-/// ([`arrival_delay_ms`]) — its own stream so turning arrival jitter on
-/// or off never perturbs the dispatch timeline draws.
-pub const ARRIVAL_SALT: u64 = 0xA88_14A1;
-
-/// Stream salt of the keyed edge-aggregator assignment ([`edge_of`]) —
-/// the same SplitMix64-hash idiom as [`PROFILE_SALT`] in its own domain,
-/// so partitioning a population across edges never perturbs the profile,
-/// drop, churn or arrival streams.
-pub const EDGE_SALT: u64 = 0xED6E_0F;
-
-/// Stream salt of the per-(round, edge) whole-aggregator failure trace
-/// ([`edge_failed`]) — separate from [`EDGE_SALT`] so the assignment and
-/// the failure draws stay decorrelated.
-pub const EDGE_FAIL_SALT: u64 = 0xED6E_FA11;
+// The sim-domain RNG salts are *defined* in the central registry
+// (`util::rng::salts`, DESIGN.md §14 — `detlint` rejects definitions
+// anywhere else) and re-exported here at their historical paths, so no
+// call site or stream changed when they moved.
+pub use crate::util::rng::salts::{
+    ARRIVAL_SALT, ASSIGN_SALT, ASYNC_SIM_SALT, CHURN_SALT, EDGE_FAIL_SALT, EDGE_SALT, SIM_SALT,
+};
 
 /// ms per sample-pass per million parameters at `compute = 1.0`.
 pub const MS_PER_MPARAM_PASS: f64 = 0.1;
@@ -506,10 +480,11 @@ pub const PRESETS: [&str; 9] = [
 ];
 
 /// Stream salt of the lazy per-client tier draw ([`Scenario::profile_of`])
-/// — its own domain, decorrelated from the materialized shuffle stream
-/// (`seed ^ 0x4E50_11`), the drop trace ([`SIM_SALT`]) and the churn
-/// trace ([`CHURN_SALT`]).
-pub const PROFILE_SALT: u64 = 0x9_0F11E_0F;
+/// — re-exported from the central registry (`util::rng::salts`); its own
+/// domain, decorrelated from the materialized shuffle stream
+/// ([`ASSIGN_SALT`]), the drop trace ([`SIM_SALT`]) and the churn trace
+/// ([`CHURN_SALT`]).
+pub use crate::util::rng::salts::PROFILE_SALT;
 
 fn binary_tiers() -> Vec<DeviceTier> {
     vec![
@@ -862,8 +837,11 @@ impl Scenario {
                     .enumerate()
                     .map(|(i, t)| (i, t.frac * k as f64 - counts[i] as f64))
                     .collect();
-                // largest fractional remainder first; ties → earlier tier
-                rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+                // largest fractional remainder first; ties → earlier
+                // tier. total_cmp: a NaN fraction (degenerate spec) must
+                // order deterministically, not panic the partial_cmp
+                // unwrap mid-round (DESIGN.md §14 float-ordering rule)
+                rem.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
                 let assigned: usize = counts.iter().sum();
                 for (i, _) in rem.iter().cycle().take(k - assigned) {
                     counts[*i] += 1;
@@ -882,7 +860,8 @@ impl Scenario {
 
     /// Sample the fleet's capability profiles. Membership is drawn from a
     /// seed-shuffled client order (the exact RNG stream of the legacy
-    /// `assign_resources`: one shuffle of `0..k` from `seed ^ 0x4E50_11`),
+    /// `assign_resources`: one shuffle of `0..k` from
+    /// `seed ^ `[`ASSIGN_SALT`]),
     /// then tiers claim consecutive runs of that order — so the Binary
     /// scenario reproduces the seed's High/Low assignment bit for bit.
     pub fn sample_profiles(
@@ -894,9 +873,9 @@ impl Scenario {
     ) -> Vec<CapabilityProfile> {
         let tiers = self.resolved_tiers();
         let counts = self.tier_counts(k, hi_count);
-        debug_assert_eq!(tiers.len(), counts.len());
-        debug_assert_eq!(counts.iter().sum::<usize>(), k);
-        let mut rng = Xoshiro256::seed_from(seed ^ 0x4E50_11);
+        assert_eq!(tiers.len(), counts.len());
+        assert_eq!(counts.iter().sum::<usize>(), k);
+        let mut rng = Xoshiro256::seed_from(seed ^ ASSIGN_SALT);
         let mut order: Vec<usize> = (0..k).collect();
         rng.shuffle(&mut order);
         let mut out: Vec<Option<CapabilityProfile>> = vec![None; k];
@@ -956,7 +935,7 @@ impl Scenario {
         let u = rng.next_f64();
         let tiers = self.resolved_tiers();
         let probs = self.tier_probs(k, hi_count);
-        debug_assert_eq!(tiers.len(), probs.len());
+        assert_eq!(tiers.len(), probs.len());
         let mut acc = 0.0f64;
         let mut pick = tiers.len() - 1; // guard fp round-off: last tier
         for (i, p) in probs.iter().enumerate() {
@@ -1072,7 +1051,7 @@ pub fn max_affordable_s(
     s_max: usize,
     mk_plan: impl Fn(usize) -> RoundPlan,
 ) -> usize {
-    debug_assert!(s_min >= 1 && s_min <= s_max);
+    assert!(s_min >= 1 && s_min <= s_max);
     if budget_ms <= 0.0 {
         return s_max;
     }
@@ -1175,6 +1154,29 @@ mod tests {
 
     fn probe_cost() -> CostModel {
         CostModel::generic(7690, 32)
+    }
+
+    #[test]
+    fn tier_counts_survive_nan_fraction_deterministically() {
+        // regression (DESIGN.md §14 float-ordering rule): a NaN tier
+        // fraction — a degenerate spec, e.g. 0.0/0.0 from generated
+        // JSON — used to panic the largest-remainder sort's
+        // partial_cmp().unwrap(); under total_cmp it must instead order
+        // deterministically and still allocate exactly k clients
+        let spec = ScenarioSpec {
+            name: "nan-frac".into(),
+            tiers: vec![
+                DeviceTier::new("ok", 0.5, MemBudget::FitsBackprop),
+                DeviceTier::new("nan", f64::NAN, MemBudget::FitsZoOnly),
+            ],
+            edges: Vec::new(),
+            deadline_ms: 0.0,
+        };
+        let s = Scenario::Custom(spec);
+        let a = s.tier_counts(7, 0);
+        let b = s.tier_counts(7, 0);
+        assert_eq!(a, b, "NaN ordering must be deterministic");
+        assert_eq!(a.iter().sum::<usize>(), 7, "every client gets a tier");
     }
 
     fn profile(up: f64, down: f64, compute: f64, drop_rate: f64) -> CapabilityProfile {

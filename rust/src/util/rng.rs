@@ -272,11 +272,114 @@ fn jump_powers() -> &'static [JumpMatrix] {
     })
 }
 
-/// Domain-separation salt for per-lane key derivation. Arbitrary odd
-/// constant, fixed forever: it is part of the `--kernel lanes` stream
-/// definition (DESIGN.md §12), exactly like the xoshiro constants are part
-/// of the scalar stream's.
-pub const LANE_KEY_SALT: u64 = 0xA5A5_5EED_1A4E_5107;
+/// Central registry of every RNG domain-separation salt in the
+/// workspace (DESIGN.md §14).
+///
+/// Each salt opens an independent random stream derived from the master
+/// seed; the values are arbitrary but **fixed forever** — they are part
+/// of the protocol definition exactly like the xoshiro constants are
+/// part of the generator's. The registry is the single place a salt may
+/// be *defined*: `detlint` fails the build on a `*_SALT: u64` literal
+/// anywhere else under `rust/src`, and checks the values here for
+/// pairwise distinctness (a collision silently merges two streams that
+/// every determinism argument assumes are decorrelated). Consumers keep
+/// their historical paths via re-exports (`crate::sim::SIM_SALT`,
+/// `crate::fed::population::SHARD_SALT`, ...), so no call site or
+/// historical stream changed when the definitions moved here.
+pub mod salts {
+    /// Domain-separation salt for per-lane key derivation
+    /// ([`lane_keys`](super::lane_keys)). Arbitrary odd constant, fixed
+    /// forever: it is part of the `--kernel lanes` stream definition
+    /// (DESIGN.md §12).
+    pub const LANE_KEY_SALT: u64 = 0xA5A5_5EED_1A4E_5107;
+
+    /// Salt for the per-(round, client) availability trace RNG
+    /// ([`crate::fed::client::round_client_rng`]) — decorrelated from
+    /// the local-SGD (salt 0) and FedKSeed (salt 0x4B) streams.
+    pub const SIM_SALT: u64 = 0x51D_7E57;
+
+    /// Salt for the per-(round, client) churn trace (whole-round
+    /// absences, [`crate::sim::is_available`]) — a *separate* stream
+    /// from [`SIM_SALT`] so enabling churn never perturbs the mid-round
+    /// drop/deadline draws of existing scenarios.
+    pub const CHURN_SALT: u64 = 0xC4_0E11;
+
+    /// Salt for the async engine's per-dispatch timeline trace
+    /// (`fed::engine`). Keyed by the monotone *dispatch sequence* rather
+    /// than the round number, so a client redispatched after a drop
+    /// draws a fresh timeline instead of replaying the identical
+    /// failure — and so the sync engine's [`SIM_SALT`] streams are
+    /// untouched by the async path.
+    pub const ASYNC_SIM_SALT: u64 = 0xA51_C51D;
+
+    /// Salt for the async engine's Poisson arrival draws
+    /// ([`crate::sim::arrival_delay_ms`]) — its own stream so turning
+    /// arrival jitter on or off never perturbs the dispatch timeline
+    /// draws.
+    pub const ARRIVAL_SALT: u64 = 0xA88_14A1;
+
+    /// Stream salt of the keyed edge-aggregator assignment
+    /// ([`crate::sim::edge_of`]) — the same SplitMix64-hash idiom as
+    /// [`PROFILE_SALT`] in its own domain, so partitioning a population
+    /// across edges never perturbs the profile, drop, churn or arrival
+    /// streams.
+    pub const EDGE_SALT: u64 = 0xED6E_0F;
+
+    /// Stream salt of the per-(round, edge) whole-aggregator failure
+    /// trace ([`crate::sim::edge_failed`]) — separate from [`EDGE_SALT`]
+    /// so the assignment and the failure draws stay decorrelated.
+    pub const EDGE_FAIL_SALT: u64 = 0xED6E_FA11;
+
+    /// Stream salt of the lazy per-client tier draw
+    /// ([`crate::sim::Scenario::profile_of`]) — its own domain,
+    /// decorrelated from the materialized shuffle stream
+    /// ([`ASSIGN_SALT`]), the drop trace ([`SIM_SALT`]) and the churn
+    /// trace ([`CHURN_SALT`]).
+    pub const PROFILE_SALT: u64 = 0x9_0F11E_0F;
+
+    /// Seed-era salt of the materialized resource-assignment shuffle
+    /// ([`crate::sim::Scenario::sample_profiles`], historically inlined
+    /// as `seed ^ 0x4E50_11` in `assign_resources`): one shuffle of
+    /// `0..k` drawn from `seed ^ ASSIGN_SALT` decides tier membership,
+    /// byte-for-byte the seed repo's High/Low stream.
+    pub const ASSIGN_SALT: u64 = 0x4E50_11;
+
+    /// Stream salt of the lazy per-client shard draw
+    /// (`fed::population`) — its own domain, decorrelated from the
+    /// profile draw ([`PROFILE_SALT`]) and every round trace.
+    pub const SHARD_SALT: u64 = 0x5AD_D47A;
+
+    /// Stream salt of the wide (fleet-scale) per-(round, client) RNG
+    /// derivation ([`crate::fed::client::round_client_rng`]),
+    /// decorrelating it from any value the compact linear packing can
+    /// reach.
+    pub const WIDE_STREAM_SALT: u64 = 0xF1EE7_5CA1E;
+
+    /// Domain salt of the wide (fleet-scale) seed derivation
+    /// (`zo::SeedIssuer::seed`), keeping it off every value the compact
+    /// 24/24/16 packing can produce.
+    pub const WIDE_ISSUER_SALT: u64 = 0xF1EE7_15_5EED;
+
+    /// Every registered salt as `(name, value)` — the surface the
+    /// pairwise-distinctness test (and `detlint`'s registry check)
+    /// walks; keep it in sync when registering a new salt.
+    pub const ALL: [(&str, u64); 12] = [
+        ("LANE_KEY_SALT", LANE_KEY_SALT),
+        ("SIM_SALT", SIM_SALT),
+        ("CHURN_SALT", CHURN_SALT),
+        ("ASYNC_SIM_SALT", ASYNC_SIM_SALT),
+        ("ARRIVAL_SALT", ARRIVAL_SALT),
+        ("EDGE_SALT", EDGE_SALT),
+        ("EDGE_FAIL_SALT", EDGE_FAIL_SALT),
+        ("PROFILE_SALT", PROFILE_SALT),
+        ("ASSIGN_SALT", ASSIGN_SALT),
+        ("SHARD_SALT", SHARD_SALT),
+        ("WIDE_STREAM_SALT", WIDE_STREAM_SALT),
+        ("WIDE_ISSUER_SALT", WIDE_ISSUER_SALT),
+    ];
+}
+
+pub use salts::LANE_KEY_SALT;
 
 /// Derive `lanes` independent generator keys for one perturbation seed —
 /// the keying step of the lane-parallel ZOUPDATE kernel. Mirrors the
@@ -666,6 +769,20 @@ mod tests {
             Xoshiro256::seed_from(k).next_u64(),
             Xoshiro256::seed_from(42).next_u64()
         );
+    }
+
+    #[test]
+    fn registered_salts_are_pairwise_distinct() {
+        // a colliding pair would silently merge two streams every
+        // determinism argument assumes are decorrelated — the registry
+        // contract (DESIGN.md §14; `detlint` re-checks this from source)
+        for (i, (name_a, a)) in salts::ALL.iter().enumerate() {
+            for (name_b, b) in &salts::ALL[i + 1..] {
+                assert_ne!(a, b, "salt collision: {name_a} == {name_b}");
+            }
+        }
+        // and ALL actually covers the registry's re-exported anchors
+        assert!(salts::ALL.iter().any(|&(n, v)| n == "LANE_KEY_SALT" && v == LANE_KEY_SALT));
     }
 
     #[test]

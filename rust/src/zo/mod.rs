@@ -41,9 +41,10 @@ pub const MAX_ROUNDS: usize = 1 << 24;
 pub const MAX_CLIENTS: usize = 1 << 24;
 pub const MAX_SEEDS_PER_ROUND: usize = 1 << 16;
 
-/// Domain salt of the wide (fleet-scale) seed derivation, keeping it off
-/// every value the compact 24/24/16 packing can produce.
-const WIDE_ISSUER_SALT: u64 = 0xF1EE7_15_5EED;
+// Domain salt of the wide (fleet-scale) seed derivation, keeping it off
+// every value the compact 24/24/16 packing can produce. Defined in the
+// central registry (`util::rng::salts`, DESIGN.md §14).
+use crate::util::rng::salts::WIDE_ISSUER_SALT;
 
 impl SeedIssuer {
     pub fn new(root: u64) -> Self {
@@ -53,9 +54,13 @@ impl SeedIssuer {
     /// Pack an in-bounds (round, client, s) triple into its unique 64-bit
     /// index (24/24/16-bit fields).
     pub fn pack(round: usize, client: usize, s: usize) -> u64 {
-        debug_assert!(round < MAX_ROUNDS, "round {round} overflows the 24-bit field");
-        debug_assert!(client < MAX_CLIENTS, "client {client} overflows the 24-bit field");
-        debug_assert!(s < MAX_SEEDS_PER_ROUND, "seed index {s} overflows the 16-bit field");
+        // hard bounds (not debug_assert): an overflowing field would
+        // silently alias another (round, client, s) seed in release and
+        // corrupt the replay protocol — the PR-4 precedent, now pinned
+        // by detlint's debug-assert rule (DESIGN.md §14)
+        assert!(round < MAX_ROUNDS, "round {round} overflows the 24-bit field");
+        assert!(client < MAX_CLIENTS, "client {client} overflows the 24-bit field");
+        assert!(s < MAX_SEEDS_PER_ROUND, "seed index {s} overflows the 16-bit field");
         (round as u64) << 40 | (client as u64) << 16 | s as u64
     }
 
@@ -82,12 +87,12 @@ impl SeedIssuer {
             let mut sm = SplitMix64(self.root ^ packed.wrapping_mul(0xA24B_AED4_963E_E407));
             return sm.next_u64();
         }
-        debug_assert!(
+        assert!(
             client < crate::fed::client::MAX_FLEET_CLIENTS,
             "client {client} overflows the 40-bit fleet field"
         );
-        debug_assert!(round < MAX_ROUNDS, "round {round} overflows the 24-bit field");
-        debug_assert!(
+        assert!(round < MAX_ROUNDS, "round {round} overflows the 24-bit field");
+        assert!(
             s < MAX_SEEDS_PER_ROUND,
             "seed index {s} overflows the 16-bit field"
         );
@@ -671,8 +676,10 @@ pub fn zo_update_items_two_tier(
 pub fn merge_edge_partials(partials: &[EdgePartial], n_contributions: usize) -> Vec<(u64, f32)> {
     let mut counts = vec![0usize; n_contributions];
     for p in partials {
-        debug_assert_eq!(p.positions.len(), p.counts.len());
-        debug_assert_eq!(p.counts.iter().sum::<usize>(), p.items.len());
+        // hard fused-block invariants (PR-4 precedent): a drifted
+        // partial would scatter items to wrong fold offsets in release
+        assert_eq!(p.positions.len(), p.counts.len());
+        assert_eq!(p.counts.iter().sum::<usize>(), p.items.len());
         for (&pos, &c) in p.positions.iter().zip(&p.counts) {
             counts[pos] = c;
         }
